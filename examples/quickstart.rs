@@ -1,0 +1,42 @@
+//! Quickstart: generate a ChatBot workload, serve it with SLOs-Serve and a
+//! vLLM-style baseline, compare SLO attainment.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::baselines::Vllm;
+use slos_serve::coordinator::scheduler::SlosServe;
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn main() {
+    // 1. Describe the experiment: scenario (SLOs + length distributions +
+    //    arrival pattern per the paper's Tab. 1/2/4), load, and size.
+    let cfg = ScenarioConfig::new(Scenario::ChatBot)
+        .with_rate(2.5)
+        .with_requests(400)
+        .with_seed(7);
+
+    // 2. Generate the workload (Azure-like arrivals, Tab. 4 lengths).
+    let wl = workload::generate(&cfg);
+    let stats = workload::stats(&wl);
+    println!("workload: {} requests | prompt mean {:.0} | output mean {:.0}",
+             wl.len(), stats.prompt_mean, stats.output_mean);
+
+    // 3. Serve with SLOs-Serve (DP admission + dynamic batching + spec
+    //    decoding) and with a prefill-oriented vLLM-style baseline.
+    let ours = run(&mut SlosServe::new(&cfg), wl.clone(), &cfg).metrics;
+    let base = run(&mut Vllm::new(), wl, &cfg).metrics;
+
+    println!("\n{:12} {:>10} {:>10} {:>12} {:>12}",
+             "system", "finished", "attained", "ttft-p99(s)", "tpot-p99(ms)");
+    for (name, m) in [("slos-serve", &ours), ("vllm", &base)] {
+        println!("{:12} {:>10} {:>9.1}% {:>12.3} {:>12.1}",
+                 name, m.finished, 100.0 * m.attainment(),
+                 m.ttft_p99, 1e3 * m.tpot_p99);
+    }
+    assert!(ours.attainment() >= base.attainment(),
+            "SLOs-Serve should not lose to the greedy baseline");
+}

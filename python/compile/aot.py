@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 model (L1 kernels inlined) to HLO text.
+
+Run once via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+Python never runs on the request path: the rust runtime loads these HLO-text
+files via PJRT (``HloModuleProto::from_text_file``), compiles, and executes.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; rust unwraps with ``to_tupleN``.
+
+Emits a ``manifest.json`` describing every artifact (entry kind, static
+shapes, model config) that the rust runtime reads at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _cache_spec(cfg: M.ModelConfig, batch: int | None):
+    shape = (cfg.n_layers, cfg.max_len, cfg.n_heads, cfg.head_dim)
+    if batch is not None:
+        shape = (batch,) + shape
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(cfg=M.MAIN, draft_cfg=M.DRAFT, seed=0,
+                    prefill_chunks=(16, 64), decode_batches=(4, 8),
+                    verify=(4, 4)):
+    """Return {name: (lowered, meta)} for every entry point."""
+    ep = M.make_entry_points(cfg, seed)
+    dep = M.make_entry_points(draft_cfg, seed + 1)
+    i32 = jnp.int32
+    out = {}
+
+    for c in prefill_chunks:
+        fn = jax.jit(ep["prefill"])
+        low = fn.lower(
+            jax.ShapeDtypeStruct((c,), i32),
+            _cache_spec(cfg, None), _cache_spec(cfg, None),
+            jax.ShapeDtypeStruct((), i32),
+        )
+        out[f"prefill_c{c}"] = (low, {"kind": "prefill", "chunk": c})
+
+    for b in decode_batches:
+        fn = jax.jit(ep["decode"])
+        low = fn.lower(
+            jax.ShapeDtypeStruct((b,), i32),
+            _cache_spec(cfg, b), _cache_spec(cfg, b),
+            jax.ShapeDtypeStruct((b,), i32),
+        )
+        out[f"decode_b{b}"] = (low, {"kind": "decode", "batch": b})
+
+    vb, vs = verify
+    fn = jax.jit(ep["verify"])
+    low = fn.lower(
+        jax.ShapeDtypeStruct((vb, vs), i32),
+        _cache_spec(cfg, vb), _cache_spec(cfg, vb),
+        jax.ShapeDtypeStruct((vb,), i32),
+    )
+    out[f"verify_b{vb}_s{vs}"] = (low, {"kind": "verify", "batch": vb, "spec_len": vs})
+
+    for b in decode_batches[-1:]:
+        fn = jax.jit(dep["decode"])
+        low = fn.lower(
+            jax.ShapeDtypeStruct((b,), i32),
+            _cache_spec(draft_cfg, b), _cache_spec(draft_cfg, b),
+            jax.ShapeDtypeStruct((b,), i32),
+        )
+        out[f"draft_decode_b{b}"] = (low, {"kind": "draft_decode", "batch": b})
+
+    # Drafter prefill (the drafter must ingest prompts too).
+    for c in prefill_chunks:
+        fn = jax.jit(dep["prefill"])
+        low = fn.lower(
+            jax.ShapeDtypeStruct((c,), i32),
+            _cache_spec(draft_cfg, None), _cache_spec(draft_cfg, None),
+            jax.ShapeDtypeStruct((), i32),
+        )
+        out[f"draft_prefill_c{c}"] = (low, {"kind": "draft_prefill", "chunk": c})
+
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = build_artifacts(seed=args.seed)
+    manifest = {
+        "page_size": M.PAGE_SIZE,
+        "main_config": dataclasses.asdict(M.MAIN),
+        "draft_config": dataclasses.asdict(M.DRAFT),
+        "seed": args.seed,
+        "entries": {},
+    }
+    for name, (low, meta) in artifacts.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(low)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {**meta, "file": f"{name}.hlo.txt"}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Flat key=value manifest for the (serde-free) rust runtime.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(f"page_size {M.PAGE_SIZE}\n")
+        for tag, cfg_ in (("main", M.MAIN), ("draft", M.DRAFT)):
+            f.write(
+                f"config {tag} vocab={cfg_.vocab} d_model={cfg_.d_model} "
+                f"n_heads={cfg_.n_heads} n_layers={cfg_.n_layers} "
+                f"d_ff={cfg_.d_ff} max_len={cfg_.max_len}\n")
+        for name, (low, meta) in artifacts.items():
+            kv = " ".join(f"{k}={v}" for k, v in meta.items())
+            f.write(f"entry {name} file={name}.hlo.txt {kv}\n")
+    print(f"wrote {args.out_dir}/manifest.[json|txt] "
+          f"({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 — Pallas kernels for SLOs-Serve batch execution (see attention.py)."""
+
+from .attention import chunked_prefill_attention, paged_decode_attention  # noqa: F401

@@ -1,0 +1,169 @@
+"""Pallas attention kernels — the L1 compute hot-spots of SLOs-Serve batches.
+
+Two kernels, mirroring the two token types a SLOs-Serve batch mixes
+(Eqn. 1 of the paper: entries are (id, stage, #tokens)):
+
+  * ``paged_decode_attention`` — one query token per running decode request,
+    KV gathered through a page table (PagedAttention-style memory layout,
+    which the paper adopts from vLLM for its memory manager).
+  * ``chunked_prefill_attention`` — a chunk of prefill queries attending
+    causally to the prompt prefix processed so far (Sarathi-style chunked
+    prefill, which the scheduler's dynamic batch-size tuning slices freely).
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA original maps a
+threadblock per sequence; here the Pallas grid maps a program per sequence
+(decode) / per query tile (prefill), KV pages are walked with an online
+(flash) softmax so only one (page_size × head_dim) tile of K and V is
+resident in VMEM per step, and the contractions are shaped for the MXU
+(head_dim a multiple of 8, page_size a multiple of 16 recommended).
+
+Kernels run with ``interpret=True`` so they lower to plain HLO the CPU PJRT
+client can execute (real-TPU lowering emits a Mosaic custom-call).
+Correctness oracle: ``ref.py``; tests: ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, kp_ref, vp_ref, pt_ref, len_ref, o_ref, *, page_size):
+    """One grid program = one sequence. Online softmax over its KV pages."""
+    q = q_ref[0]  # [heads, dim]
+    num_heads, head_dim = q.shape
+    max_pages = pt_ref.shape[1]
+    seq_len = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+
+    def body(p, carry):
+        m, l, acc = carry  # running max, sum, weighted-V accumulator
+        page_id = pt_ref[0, p]
+        # One KV page tile resident at a time: [page_size, heads, dim].
+        k = pl.load(kp_ref, (pl.dslice(page_id, 1),))[0]
+        v = pl.load(vp_ref, (pl.dslice(page_id, 1),))[0]
+        # MXU contraction: [heads, page] scores.
+        s = jnp.einsum("hd,thd->ht", q, k) * scale
+        pos = p * page_size + jnp.arange(page_size)
+        s = jnp.where((pos < seq_len)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.einsum("ht,thd->hd", p_, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((num_heads,), NEG_INF, q.dtype)
+    l0 = jnp.zeros((num_heads,), q.dtype)
+    acc0 = jnp.zeros((num_heads, head_dim), q.dtype)
+    n_pages = (seq_len + page_size - 1) // page_size
+    m, l, acc = jax.lax.fori_loop(0, n_pages, body, (m0, l0, acc0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, seq_lens):
+    """Batched paged decode attention. Shapes as in ``ref.decode_attention_ref``."""
+    batch, num_heads, head_dim = q.shape
+    num_pages, page_size, _, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    kernel = functools.partial(_decode_kernel, page_size=page_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, num_heads, head_dim), lambda b: (b, 0, 0)),
+            # KV pools stay whole (HBM-resident on TPU; pages are pulled
+            # tile-by-tile inside the loop).
+            pl.BlockSpec((num_pages, page_size, num_heads, head_dim),
+                         lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((num_pages, page_size, num_heads, head_dim),
+                         lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((1, max_pages), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, num_heads, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, num_heads, head_dim), q.dtype),
+        interpret=True,
+    )(q, k_pages, v_pages, page_table, seq_lens)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, off_ref, o_ref, *, kv_tile):
+    """One grid program = one query tile; flash loop over KV tiles."""
+    q = q_ref[...]  # [q_tile, heads, dim]
+    q_tile, num_heads, head_dim = q.shape
+    kv_len = k_ref.shape[0]
+    q_offset = off_ref[0]
+    tile_id = pl.program_id(0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    q_pos = q_offset + tile_id * q_tile + jnp.arange(q_tile)
+
+    def body(t, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(t * kv_tile, kv_tile),))
+        v = pl.load(v_ref, (pl.dslice(t * kv_tile, kv_tile),))
+        s = jnp.einsum("qhd,khd->hqk", q, k) * scale  # [heads, q, kv]
+        k_pos = t * kv_tile + jnp.arange(kv_tile)
+        causal = k_pos[None, :] <= q_pos[:, None]  # [q, kv]
+        s = jnp.where(causal[None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("hqk,khd->hqd", p_, v)
+        return m_new, l_new, acc_new
+
+    n_tiles = kv_len // kv_tile
+    m0 = jnp.full((num_heads, q_tile), NEG_INF, q.dtype)
+    l0 = jnp.zeros((num_heads, q_tile), q.dtype)
+    acc0 = jnp.zeros((num_heads, q_tile, head_dim), q.dtype)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # [heads, q, dim]
+    o_ref[...] = jnp.transpose(out, (1, 0, 2))
+
+
+def chunked_prefill_attention(q, k, v, q_offset, *, q_tile=None, kv_tile=None):
+    """Causal chunk attention. Shapes as in ``ref.chunked_prefill_attention_ref``.
+
+    ``q_offset`` is a scalar int32 array: absolute position of q[0] in the
+    prompt. ``kv_len`` must be a multiple of ``kv_tile`` (callers pad KV and
+    rely on causal masking plus q_offset to ignore the padding — positions
+    past the last real query are never attended because key position >
+    query position).
+    """
+    chunk, num_heads, head_dim = q.shape
+    kv_len = k.shape[0]
+    q_tile = q_tile or min(chunk, 16)
+    kv_tile = kv_tile or min(kv_len, 64)
+    if chunk % q_tile != 0 or kv_len % kv_tile != 0:
+        raise ValueError(f"chunk {chunk} % q_tile {q_tile} or kv {kv_len} % "
+                         f"kv_tile {kv_tile} != 0")
+    q_offset = jnp.asarray(q_offset, jnp.int32).reshape((1,))
+    kernel = functools.partial(_prefill_kernel, kv_tile=kv_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(chunk // q_tile,),
+        in_specs=[
+            pl.BlockSpec((q_tile, num_heads, head_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((kv_len, num_heads, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((kv_len, num_heads, head_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((q_tile, num_heads, head_dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((chunk, num_heads, head_dim), q.dtype),
+        interpret=True,
+    )(q, k, v, q_offset)

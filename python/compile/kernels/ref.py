@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle here to float tolerance (pytest + hypothesis sweeps in
+python/tests/). Keep these dead simple — no tiling, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Paged decode attention, one query token per sequence.
+
+    Args:
+      q:          [batch, num_heads, head_dim] query for the current token.
+      k_pages:    [num_pages, page_size, num_heads, head_dim] paged K cache.
+      v_pages:    [num_pages, page_size, num_heads, head_dim] paged V cache.
+      page_table: [batch, max_pages] int32 page ids per sequence (padded with
+                  arbitrary valid ids past the sequence length).
+      seq_lens:   [batch] int32 number of valid KV tokens per sequence.
+
+    Returns:
+      [batch, num_heads, head_dim] attention output.
+    """
+    batch, num_heads, head_dim = q.shape
+    _, page_size, _, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    max_len = max_pages * page_size
+
+    # Gather the per-sequence KV into dense [batch, max_len, heads, dim].
+    k = k_pages[page_table].reshape(batch, max_len, num_heads, head_dim)
+    v = v_pages[page_table].reshape(batch, max_len, num_heads, head_dim)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    # [batch, heads, max_len]
+    scores = jnp.einsum("bhd,bthd->bht", q, k) * scale
+    positions = jnp.arange(max_len)[None, None, :]
+    mask = positions < seq_lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(scores - scores.max(axis=-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bht,bthd->bhd", probs, v)
+
+
+def chunked_prefill_attention_ref(q, k, v, q_offset):
+    """Causal attention for one chunk of a prefill against full prefix KV.
+
+    Args:
+      q:        [chunk, num_heads, head_dim] queries for this chunk.
+      k:        [kv_len, num_heads, head_dim] keys for prompt[0:kv_len].
+      v:        [kv_len, num_heads, head_dim] values.
+      q_offset: scalar int — absolute position of q[0] within the prompt.
+                Query i attends to keys [0, q_offset + i].
+
+    Returns:
+      [chunk, num_heads, head_dim]
+    """
+    chunk, num_heads, head_dim = q.shape
+    kv_len = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    q_pos = q_offset + jnp.arange(chunk)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = (k_pos <= q_pos)[None, :, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,khd->qhd", probs, v)

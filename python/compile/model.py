@@ -1,0 +1,271 @@
+"""L2 — tiny OPT-style transformer in JAX, calling the L1 Pallas kernels.
+
+This is the *real-model* backend of the reproduction: an OPT-shaped decoder
+(pre-LN, GELU FFN, learned positions) at toy scale, with synthetic weights
+(deterministic PRNG — documented substitution for the paper's OPT-7B..30B,
+see DESIGN.md §2). The serving semantics are identical to the paper's
+backend: chunked prefill writes KV for a chunk of prompt positions, decode
+appends one token per step through the *paged* attention kernel, and
+speculative verification scores S drafted tokens in one call with free
+rollback (rejection just rewinds ``seq_lens``; stale KV past the length is
+never attended).
+
+Four entry points, each AOT-lowered by ``aot.py`` to an HLO-text artifact the
+rust runtime executes via PJRT:
+
+  prefill_chunk(tokens[C], k[L,T,H,D], v[L,T,H,D], q_offset) -> (logits[V], k, v)
+  decode_step  (tokens[B], k[B,L,T,H,D], v[...], seq_lens[B]) -> (logits[B,V], k, v)
+  verify_step  (tokens[B,S], k[B,L,T,H,D], v[...], seq_lens[B]) -> (logits[B,S,V], k, v)
+  draft variants of decode_step for the speculative drafter.
+
+All shapes are static per artifact (PJRT AOT requirement); the rust engine
+pads batches/chunks up to the artifact's shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunked_prefill_attention, paged_decode_attention
+
+PAGE_SIZE = 16  # KV page granularity shared with the rust memory manager.
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    max_len: int = 256  # KV capacity per sequence (multiple of PAGE_SIZE)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def max_pages(self) -> int:
+        return self.max_len // PAGE_SIZE
+
+
+MAIN = ModelConfig()
+DRAFT = ModelConfig(d_model=64, n_heads=2, n_layers=1, d_ff=128)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic synthetic weights, stacked over layers for lax.scan."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 12)
+    s = 0.02
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def w(k, *shape):
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    return {
+        "embed": w(ks[0], V, D),
+        "pos": w(ks[1], cfg.max_len, D),
+        "wq": w(ks[2], L, D, D),
+        "wk": w(ks[3], L, D, D),
+        "wv": w(ks[4], L, D, D),
+        "wo": w(ks[5], L, D, D),
+        "w1": w(ks[6], L, D, F),
+        "b1": jnp.zeros((L, F), jnp.float32),
+        "w2": w(ks[7], L, F, D),
+        "b2": jnp.zeros((L, D), jnp.float32),
+        "ln1_g": jnp.ones((L, D), jnp.float32),
+        "ln1_b": jnp.zeros((L, D), jnp.float32),
+        "ln2_g": jnp.ones((L, D), jnp.float32),
+        "ln2_b": jnp.zeros((L, D), jnp.float32),
+        "lnf_g": jnp.ones((D,), jnp.float32),
+        "lnf_b": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def _ln(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _split_heads(x, cfg):
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+# ---------------------------------------------------------------------------
+# Prefill — one chunk of one request (dense per-request KV cache)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, k_cache, v_cache, q_offset):
+    """Process prompt[q_offset : q_offset+C]; returns last-position logits.
+
+    tokens:  [C] int32           k_cache/v_cache: [L, max_len, H, Dh]
+    q_offset: scalar int32 (position of tokens[0] in the prompt)
+    """
+    C = tokens.shape[0]
+    pos = q_offset + jnp.arange(C)
+    h = params["embed"][tokens] + params["pos"][pos]
+
+    def layer(h, lp):
+        x = _ln(h, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(x @ lp["wq"], cfg)  # [C, H, Dh]
+        k = _split_heads(x @ lp["wk"], cfg)
+        v = _split_heads(x @ lp["wv"], cfg)
+        kc = jax.lax.dynamic_update_slice(lp["k_cache"], k, (q_offset, 0, 0))
+        vc = jax.lax.dynamic_update_slice(lp["v_cache"], v, (q_offset, 0, 0))
+        # L1 kernel: causal chunk attention against the whole cache; cache
+        # slots past q_offset+C have key-position > every query position, so
+        # the causal mask hides them regardless of contents.
+        attn = chunked_prefill_attention(q, kc, vc, q_offset)
+        h = h + attn.reshape(C, cfg.d_model) @ lp["wo"]
+        x2 = _ln(h, lp["ln2_g"], lp["ln2_b"])
+        h = h + (jax.nn.gelu(x2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"])
+        return h, (kc, vc)
+
+    h, (k_new, v_new) = _scan_layers(layer, h, params, k_cache, v_cache)
+    h = _ln(h, params["lnf_g"], params["lnf_b"])
+    logits = h[-1] @ params["embed"].T  # last position only
+    return logits, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token per sequence, batched, paged attention kernel
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, tokens, k_cache, v_cache, seq_lens):
+    """tokens: [B] int32; caches: [B, L, max_len, H, Dh]; seq_lens: [B].
+
+    The new token sits at position seq_lens[b]; returns logits for it and
+    caches with its KV appended.
+    """
+    B = tokens.shape[0]
+    h = params["embed"][tokens] + params["pos"][seq_lens]  # [B, D]
+
+    def layer(h, lp):
+        x = _ln(h, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(x @ lp["wq"], cfg)  # [B, H, Dh]
+        k = _split_heads(x @ lp["wk"], cfg)
+        v = _split_heads(x @ lp["wv"], cfg)
+
+        def upd(c, kv, n):
+            return jax.lax.dynamic_update_slice(c, kv[None], (n, 0, 0))
+
+        kc = jax.vmap(upd)(lp["k_cache"], k, seq_lens)  # [B, max_len, H, Dh]
+        vc = jax.vmap(upd)(lp["v_cache"], v, seq_lens)
+        # L1 kernel: view each sequence's cache as pages with an identity
+        # page table (rust's paged allocator provides real tables in the
+        # scheduler; the dense engine uses contiguous per-request pages).
+        kp = kc.reshape(B * cfg.max_pages, PAGE_SIZE, cfg.n_heads, cfg.head_dim)
+        vp = vc.reshape(B * cfg.max_pages, PAGE_SIZE, cfg.n_heads, cfg.head_dim)
+        pt = (jnp.arange(B)[:, None] * cfg.max_pages
+              + jnp.arange(cfg.max_pages)[None, :]).astype(jnp.int32)
+        attn = paged_decode_attention(q, kp, vp, pt, seq_lens + 1)
+        h = h + attn.reshape(B, cfg.d_model) @ lp["wo"]
+        x2 = _ln(h, lp["ln2_g"], lp["ln2_b"])
+        h = h + (jax.nn.gelu(x2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"])
+        return h, (kc, vc)
+
+    h, (k_new, v_new) = _scan_layers_batched(layer, h, params, k_cache, v_cache)
+    h = _ln(h, params["lnf_g"], params["lnf_b"])
+    return h @ params["embed"].T, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Verify — score S drafted tokens per sequence in one call (spec decoding)
+# ---------------------------------------------------------------------------
+
+
+def verify_step(params, cfg: ModelConfig, tokens, k_cache, v_cache, seq_lens):
+    """tokens: [B, S]; caches [B, L, max_len, H, Dh]; seq_lens [B].
+
+    Appends KV for all S positions and returns logits [B, S, V]. The caller
+    accepts a prefix of the draft and simply rewinds seq_lens — rejected
+    positions' KV is stale but unreachable (attention masks by length).
+    """
+    B, S = tokens.shape
+    pos = seq_lens[:, None] + jnp.arange(S)[None, :]  # [B, S]
+    h = params["embed"][tokens] + params["pos"][pos]  # [B, S, D]
+
+    def layer(h, lp):
+        x = _ln(h, lp["ln1_g"], lp["ln1_b"])
+        q = _split_heads(x @ lp["wq"], cfg)  # [B, S, H, Dh]
+        k = _split_heads(x @ lp["wk"], cfg)
+        v = _split_heads(x @ lp["wv"], cfg)
+
+        def upd(c, kv, n):
+            return jax.lax.dynamic_update_slice(c, kv, (n, 0, 0))
+
+        kc = jax.vmap(upd)(lp["k_cache"], k, seq_lens)
+        vc = jax.vmap(upd)(lp["v_cache"], v, seq_lens)
+        # Dense causal attention over [0, seq_len + s] per position (plain
+        # jnp: verification is an L2 op; the L1 hot-spots are prefill/decode).
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+        s_ = jnp.einsum("bshd,bthd->bhst", q, kc) * scale
+        t_pos = jnp.arange(cfg.max_len)[None, None, :]
+        mask = t_pos <= pos[:, :, None]  # [B, S, T]
+        s_ = jnp.where(mask[:, None], s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        attn = jnp.einsum("bhst,bthd->bshd", p, vc)
+        h = h + attn.reshape(B, S, cfg.d_model) @ lp["wo"]
+        x2 = _ln(h, lp["ln2_g"], lp["ln2_b"])
+        h = h + (jax.nn.gelu(x2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"])
+        return h, (kc, vc)
+
+    h, (k_new, v_new) = _scan_layers_batched(layer, h, params, k_cache, v_cache)
+    h = _ln(h, params["lnf_g"], params["lnf_b"])
+    return h @ params["embed"].T, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Layer scan plumbing
+# ---------------------------------------------------------------------------
+
+_LAYER_KEYS = ("wq", "wk", "wv", "wo", "w1", "b1", "w2", "b2",
+               "ln1_g", "ln1_b", "ln2_g", "ln2_b")
+
+
+def _scan_layers(layer_fn, h, params, k_cache, v_cache):
+    """Scan over layers; caches are [L, ...] (single-request prefill)."""
+
+    def body(h, xs):
+        lp = dict(zip(_LAYER_KEYS, xs[0]))
+        lp["k_cache"], lp["v_cache"] = xs[1], xs[2]
+        return layer_fn(h, lp)
+
+    stacked = tuple(params[k] for k in _LAYER_KEYS)
+    h, (kc, vc) = jax.lax.scan(body, h, (stacked, k_cache, v_cache))
+    return h, (kc, vc)
+
+
+def _scan_layers_batched(layer_fn, h, params, k_cache, v_cache):
+    """Scan over layers; caches are [B, L, ...] (batched decode/verify)."""
+
+    def body(h, xs):
+        lp = dict(zip(_LAYER_KEYS, xs[0]))
+        lp["k_cache"], lp["v_cache"] = xs[1], xs[2]
+        return layer_fn(h, lp)
+
+    stacked = tuple(params[k] for k in _LAYER_KEYS)
+    kc_l = jnp.moveaxis(k_cache, 1, 0)  # [L, B, ...]
+    vc_l = jnp.moveaxis(v_cache, 1, 0)
+    h, (kc, vc) = jax.lax.scan(body, h, (stacked, kc_l, vc_l))
+    return h, (jnp.moveaxis(kc, 0, 1), jnp.moveaxis(vc, 0, 1))
+
+
+def make_entry_points(cfg: ModelConfig = MAIN, seed: int = 0):
+    """Bind synthetic params as compile-time constants; return jittable fns."""
+    params = init_params(cfg, seed)
+    return {
+        "prefill": functools.partial(prefill_chunk, params, cfg),
+        "decode": functools.partial(decode_step, params, cfg),
+        "verify": functools.partial(verify_step, params, cfg),
+        "params": params,
+        "cfg": cfg,
+    }

@@ -1,0 +1,171 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the core signal).
+
+Deterministic cases pin the shapes the AOT artifacts use; hypothesis sweeps
+batch/heads/dims/page geometry and sequence lengths.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _decode_case(rng, batch, heads, dim, page_size, num_pages, max_pages, lens):
+    q = jnp.asarray(rng.standard_normal((batch, heads, dim)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((num_pages, page_size, heads, dim)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((num_pages, page_size, heads, dim)),
+                     jnp.float32)
+    pt = jnp.asarray(rng.integers(0, num_pages, (batch, max_pages)), jnp.int32)
+    sl = jnp.asarray(lens, jnp.int32)
+    return q, kp, vp, pt, sl
+
+
+class TestPagedDecodeAttention:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        args = _decode_case(rng, 3, 4, 16, 8, 10, 4, [5, 17, 32])
+        out = A.paged_decode_attention(*args)
+        ref = R.decode_attention_ref(*args)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_artifact_shape(self):
+        # The shape decode_b8 uses: page_size 16, head_dim 32.
+        rng = np.random.default_rng(1)
+        args = _decode_case(rng, 8, 4, 32, 16, 8 * 16, 16,
+                            [1, 16, 17, 64, 100, 255, 256, 3])
+        out = A.paged_decode_attention(*args)
+        ref = R.decode_attention_ref(*args)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_single_token_sequence(self):
+        rng = np.random.default_rng(2)
+        args = _decode_case(rng, 1, 2, 8, 4, 4, 2, [1])
+        out = A.paged_decode_attention(*args)
+        ref = R.decode_attention_ref(*args)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_length_exactly_page_boundary(self):
+        rng = np.random.default_rng(3)
+        for length in (4, 8, 12):
+            args = _decode_case(rng, 2, 2, 8, 4, 6, 3, [length, length])
+            out = A.paged_decode_attention(*args)
+            ref = R.decode_attention_ref(*args)
+            np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_shared_pages_between_sequences(self):
+        # Two sequences pointing at the same pages (prefix sharing) must
+        # read identical KV.
+        rng = np.random.default_rng(4)
+        q, kp, vp, _, _ = _decode_case(rng, 2, 2, 8, 4, 4, 2, [6, 6])
+        pt = jnp.asarray([[0, 1], [0, 1]], jnp.int32)
+        sl = jnp.asarray([6, 6], jnp.int32)
+        q = q.at[1].set(q[0])
+        out = A.paged_decode_attention(q, kp, vp, pt, sl)
+        np.testing.assert_allclose(out[0], out[1], rtol=1e-6, atol=1e-6)
+
+    @given(
+        batch=st.integers(1, 5),
+        heads=st.sampled_from([1, 2, 4]),
+        dim=st.sampled_from([8, 16, 32]),
+        page_size=st.sampled_from([4, 8, 16]),
+        max_pages=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_matches_ref_sweep(self, batch, heads, dim, page_size, max_pages,
+                               seed, data):
+        rng = np.random.default_rng(seed)
+        num_pages = max_pages * batch + 1
+        max_len = max_pages * page_size
+        lens = [data.draw(st.integers(1, max_len)) for _ in range(batch)]
+        args = _decode_case(rng, batch, heads, dim, page_size, num_pages,
+                            max_pages, lens)
+        out = A.paged_decode_attention(*args)
+        ref = R.decode_attention_ref(*args)
+        np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+def _prefill_case(rng, chunk, kv_len, heads, dim):
+    q = jnp.asarray(rng.standard_normal((chunk, heads, dim)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((kv_len, heads, dim)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((kv_len, heads, dim)), jnp.float32)
+    return q, k, v
+
+
+class TestChunkedPrefillAttention:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        q, k, v = _prefill_case(rng, 16, 64, 4, 16)
+        out = A.chunked_prefill_attention(q, k, v, 10)
+        ref = R.chunked_prefill_attention_ref(q, k, v, 10)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_first_chunk_offset_zero(self):
+        rng = np.random.default_rng(1)
+        q, k, v = _prefill_case(rng, 16, 64, 2, 8)
+        out = A.chunked_prefill_attention(q, k, v, 0)
+        ref = R.chunked_prefill_attention_ref(q, k, v, 0)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_artifact_shape(self):
+        # prefill_c64 against a 256-slot cache, head_dim 32.
+        rng = np.random.default_rng(2)
+        q, k, v = _prefill_case(rng, 64, 256, 4, 32)
+        out = A.chunked_prefill_attention(q, k, v, 128)
+        ref = R.chunked_prefill_attention_ref(q, k, v, 128)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_padding_slots_ignored(self):
+        # Garbage in cache slots past q_offset+chunk must not change output.
+        rng = np.random.default_rng(3)
+        q, k, v = _prefill_case(rng, 16, 64, 2, 8)
+        off = 8
+        out1 = A.chunked_prefill_attention(q, k, v, off)
+        k2 = k.at[off + 16:].set(1e6)
+        v2 = v.at[off + 16:].set(-1e6)
+        out2 = A.chunked_prefill_attention(q, k2, v2, off)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+    def test_bad_tile_raises(self):
+        rng = np.random.default_rng(4)
+        q, k, v = _prefill_case(rng, 16, 60, 2, 8)
+        with pytest.raises(ValueError):
+            A.chunked_prefill_attention(q, k, v, 0, kv_tile=32)
+
+    @given(
+        chunk_tiles=st.integers(1, 4),
+        q_tile=st.sampled_from([4, 8, 16]),
+        kv_tiles=st.integers(1, 4),
+        kv_tile=st.sampled_from([8, 16, 32]),
+        heads=st.sampled_from([1, 2, 4]),
+        dim=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_matches_ref_sweep(self, chunk_tiles, q_tile, kv_tiles, kv_tile,
+                               heads, dim, seed, data):
+        chunk = chunk_tiles * q_tile
+        kv_len = kv_tiles * kv_tile
+        # Queries must fit in the KV window: offset + chunk <= kv_len, so
+        # grow kv if needed (pad slots are masked, test_padding_slots_ignored).
+        while kv_len < chunk:
+            kv_tiles += 1
+            kv_len = kv_tiles * kv_tile
+        off = data.draw(st.integers(0, kv_len - chunk))
+        rng = np.random.default_rng(seed)
+        q, k, v = _prefill_case(rng, chunk, kv_len, heads, dim)
+        out = A.chunked_prefill_attention(q, k, v, off,
+                                          q_tile=q_tile, kv_tile=kv_tile)
+        ref = R.chunked_prefill_attention_ref(q, k, v, off)
+        # Ref attends to all keys <= q_pos including slots >= off+chunk that
+        # the serving path would treat as pads; zero those to compare apples
+        # to apples only when off+chunk == kv_len. Otherwise both attend the
+        # same window, so direct comparison is valid.
+        np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)

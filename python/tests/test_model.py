@@ -1,0 +1,198 @@
+"""L2 model correctness: chunked-prefill/decode/verify agree with a dense
+single-shot reference forward, and with each other.
+
+The dense reference runs full causal attention over the whole sequence in
+plain jnp — no caches, no chunking, no kernels — so any incremental-state
+bug (cache indexing, position offsets, mask edges) shows up as a mismatch.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("model", max_examples=10, deadline=None)
+settings.load_profile("model")
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=64,
+                    max_len=64)
+
+
+def dense_forward(params, cfg, tokens):
+    """Full causal forward over tokens [T]; returns logits [T, V]."""
+    T = tokens.shape[0]
+    h = params["embed"][tokens] + params["pos"][jnp.arange(T)]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    for l in range(cfg.n_layers):
+        x = M._ln(h, params["ln1_g"][l], params["ln1_b"][l])
+        q = M._split_heads(x @ params["wq"][l], cfg)
+        k = M._split_heads(x @ params["wk"][l], cfg)
+        v = M._split_heads(x @ params["wv"][l], cfg)
+        s = jnp.einsum("qhd,khd->hqk", q, k) * scale
+        s = jnp.where(mask[None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", p, v).reshape(T, cfg.d_model)
+        h = h + attn @ params["wo"][l]
+        x2 = M._ln(h, params["ln2_g"][l], params["ln2_b"][l])
+        h = h + (jax.nn.gelu(x2 @ params["w1"][l] + params["b1"][l])
+                 @ params["w2"][l] + params["b2"][l])
+    h = M._ln(h, params["lnf_g"], params["lnf_b"])
+    return h @ params["embed"].T
+
+
+def empty_cache(cfg, batch=None):
+    shape = (cfg.n_layers, cfg.max_len, cfg.n_heads, cfg.head_dim)
+    if batch is not None:
+        shape = (batch,) + shape
+    return jnp.zeros(shape, jnp.float32)
+
+
+def run_chunked_prefill(params, cfg, tokens, chunk):
+    kc, vc = empty_cache(cfg), empty_cache(cfg)
+    logits = None
+    for off in range(0, len(tokens), chunk):
+        piece = tokens[off:off + chunk]
+        logits, kc, vc = M.prefill_chunk(params, cfg, piece, kc, vc, off)
+    return logits, kc, vc
+
+
+class TestPrefill:
+    def test_chunked_prefill_matches_dense(self):
+        rng = np.random.default_rng(0)
+        params = M.init_params(CFG, 0)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab, 32), jnp.int32)
+        ref = dense_forward(params, CFG, tokens)
+        for chunk in (8, 16, 32):
+            logits, _, _ = run_chunked_prefill(params, CFG, tokens, chunk)
+            np.testing.assert_allclose(logits, ref[-1], rtol=2e-4, atol=2e-4)
+
+    def test_chunk_size_invariance(self):
+        rng = np.random.default_rng(1)
+        params = M.init_params(CFG, 1)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab, 16), jnp.int32)
+        l8, k8, v8 = run_chunked_prefill(params, CFG, tokens, 8)
+        l16, k16, v16 = run_chunked_prefill(params, CFG, tokens, 16)
+        np.testing.assert_allclose(l8, l16, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(k8[:, :16], k16[:, :16], rtol=2e-4, atol=2e-4)
+
+
+class TestDecode:
+    def test_decode_continues_prefill(self):
+        """prefill(prompt) then N decode steps == dense forward of the whole
+        greedy continuation."""
+        rng = np.random.default_rng(2)
+        params = M.init_params(CFG, 2)
+        P, N, B = 16, 4, 2
+        prompts = [jnp.asarray(rng.integers(0, CFG.vocab, P), jnp.int32)
+                   for _ in range(B)]
+
+        kc = jnp.stack([empty_cache(CFG)] * B)
+        vc = jnp.stack([empty_cache(CFG)] * B)
+        last = []
+        for b in range(B):
+            lg, k1, v1 = run_chunked_prefill(params, CFG, prompts[b], 8)
+            kc, vc = kc.at[b].set(k1), vc.at[b].set(v1)
+            last.append(int(jnp.argmax(lg)))
+
+        seqs = [list(map(int, prompts[b])) for b in range(B)]
+        seq_lens = jnp.asarray([P] * B, jnp.int32)
+        for _ in range(N):
+            toks = jnp.asarray(last, jnp.int32)
+            logits, kc, vc = M.decode_step(params, CFG, toks, kc, vc, seq_lens)
+            for b in range(B):
+                seqs[b].append(last[b])
+            last = [int(jnp.argmax(logits[b])) for b in range(B)]
+            seq_lens = seq_lens + 1
+
+        for b in range(B):
+            full = jnp.asarray(seqs[b], jnp.int32)
+            ref = dense_forward(params, CFG, full)
+            assert int(jnp.argmax(ref[-1])) == last[b]
+
+    def test_decode_batch_independence(self):
+        """A request's output must not depend on its batch neighbours."""
+        rng = np.random.default_rng(3)
+        params = M.init_params(CFG, 3)
+        kc = jnp.stack([empty_cache(CFG)] * 2)
+        vc = jnp.stack([empty_cache(CFG)] * 2)
+        t = jnp.asarray(rng.integers(0, CFG.vocab, 8), jnp.int32)
+        _, k1, v1 = run_chunked_prefill(params, CFG, t, 8)
+        kc, vc = kc.at[0].set(k1), vc.at[0].set(v1)
+        kc, vc = kc.at[1].set(k1), vc.at[1].set(v1)
+        sl = jnp.asarray([8, 8], jnp.int32)
+        toks = jnp.asarray([5, 5], jnp.int32)
+        logits, _, _ = M.decode_step(params, CFG, toks, kc, vc, sl)
+        np.testing.assert_allclose(logits[0], logits[1], rtol=1e-5, atol=1e-5)
+
+        # Different neighbour, same request 0 => same logits for request 0.
+        toks2 = jnp.asarray([5, 11], jnp.int32)
+        logits2, _, _ = M.decode_step(params, CFG, toks2, kc, vc, sl)
+        np.testing.assert_allclose(logits[0], logits2[0], rtol=1e-5, atol=1e-5)
+
+
+class TestVerify:
+    def test_verify_matches_sequential_decode(self):
+        """Scoring S tokens at once == decoding them one by one."""
+        rng = np.random.default_rng(4)
+        params = M.init_params(CFG, 4)
+        P, S, B = 8, 4, 2
+        draft = rng.integers(0, CFG.vocab, (B, S))
+
+        kc = jnp.stack([empty_cache(CFG)] * B)
+        vc = jnp.stack([empty_cache(CFG)] * B)
+        for b in range(B):
+            t = jnp.asarray(rng.integers(0, CFG.vocab, P), jnp.int32)
+            _, k1, v1 = run_chunked_prefill(params, CFG, t, 8)
+            kc, vc = kc.at[b].set(k1), vc.at[b].set(v1)
+        sl = jnp.asarray([P] * B, jnp.int32)
+
+        v_logits, _, _ = M.verify_step(
+            params, CFG, jnp.asarray(draft, jnp.int32), kc, vc, sl)
+
+        kc2, vc2, sl2 = kc, vc, sl
+        for s in range(S):
+            toks = jnp.asarray(draft[:, s], jnp.int32)
+            d_logits, kc2, vc2 = M.decode_step(params, CFG, toks, kc2, vc2, sl2)
+            sl2 = sl2 + 1
+            np.testing.assert_allclose(v_logits[:, s], d_logits,
+                                       rtol=5e-4, atol=5e-4)
+
+    def test_rollback_by_seq_len_rewind(self):
+        """After verify writes S KV entries, re-running with the original
+        seq_lens reproduces the original logits (stale KV unreachable)."""
+        rng = np.random.default_rng(5)
+        params = M.init_params(CFG, 5)
+        B, S, P = 2, 4, 8
+        kc = jnp.stack([empty_cache(CFG)] * B)
+        vc = jnp.stack([empty_cache(CFG)] * B)
+        for b in range(B):
+            t = jnp.asarray(rng.integers(0, CFG.vocab, P), jnp.int32)
+            _, k1, v1 = run_chunked_prefill(params, CFG, t, 8)
+            kc, vc = kc.at[b].set(k1), vc.at[b].set(v1)
+        sl = jnp.asarray([P] * B, jnp.int32)
+        draft = jnp.asarray(rng.integers(0, CFG.vocab, (B, S)), jnp.int32)
+
+        first, _, _ = M.verify_step(params, CFG, draft, kc, vc, sl)
+        _, kc2, vc2 = M.verify_step(params, CFG, draft, kc, vc, sl)[1:], None, None
+        # Rewind: same call on the mutated cache with original seq_lens.
+        _, kc3, vc3 = M.verify_step(params, CFG, draft, kc, vc, sl)
+        again, _, _ = M.verify_step(params, CFG, draft, kc3, vc3, sl)
+        np.testing.assert_allclose(first, again, rtol=1e-5, atol=1e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1), s=st.integers(1, 4))
+    def test_verify_first_position_matches_decode_sweep(self, seed, s):
+        rng = np.random.default_rng(seed)
+        params = M.init_params(CFG, 6)
+        kc = jnp.stack([empty_cache(CFG)])
+        vc = jnp.stack([empty_cache(CFG)])
+        t = jnp.asarray(rng.integers(0, CFG.vocab, 8), jnp.int32)
+        _, k1, v1 = run_chunked_prefill(params, CFG, t, 8)
+        kc, vc = kc.at[0].set(k1), vc.at[0].set(v1)
+        sl = jnp.asarray([8], jnp.int32)
+        draft = jnp.asarray(rng.integers(0, CFG.vocab, (1, s)), jnp.int32)
+        v_logits, _, _ = M.verify_step(params, CFG, draft, kc, vc, sl)
+        d_logits, _, _ = M.decode_step(params, CFG, draft[:, 0], kc, vc, sl)
+        np.testing.assert_allclose(v_logits[:, 0], d_logits, rtol=5e-4, atol=5e-4)

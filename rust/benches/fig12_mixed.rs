@@ -1,0 +1,24 @@
+//! Fig. 12 — Mixed-scenario p99 TTFT/TPOT vs offered load per system.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::figures::{self, make_policy};
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn main() {
+    figures::fig12_mixed(200);
+
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(1.5)
+        .with_requests(150);
+    let mut b = Bench::new("fig12_mixed_run").with_target_time(1.5);
+    for name in ["slos-serve", "vllm", "sarathi"] {
+        b.bench(name, || {
+            let wl = workload::generate(&cfg);
+            let mut p = make_policy(name, &cfg);
+            run(p.as_mut(), wl, &cfg).metrics.tpot_p99
+        });
+    }
+    b.finish();
+}

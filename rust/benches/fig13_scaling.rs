@@ -1,0 +1,25 @@
+//! Fig. 13 — multi-replica capacity scaling with SLO-driven routing.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::router::{run_multi_replica, RouterConfig};
+use slos_serve::workload;
+
+fn main() {
+    slos_serve::figures::fig13_scaling(
+        150, &[Scenario::ChatBot, Scenario::Coder]);
+
+    let mut b = Bench::new("fig13_replica_run").with_target_time(1.5);
+    for replicas in [1usize, 2, 4] {
+        let cfg = ScenarioConfig::new(Scenario::ChatBot)
+            .with_rate(1.2 * replicas as f64)
+            .with_requests(100 * replicas);
+        b.bench(format!("{replicas}_replicas"), || {
+            let wl = workload::generate(&cfg);
+            run_multi_replica(wl, &cfg, &RouterConfig::new(replicas))
+                .metrics
+                .attainment()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,25 @@
+//! Fig. 14 — ablation study: capacity with each optimization removed.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::figures::{self, make_policy};
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn main() {
+    figures::fig14_ablation(150, &[Scenario::ChatBot, Scenario::Coder]);
+
+    let cfg = ScenarioConfig::new(Scenario::Coder)
+        .with_rate(2.0)
+        .with_requests(150);
+    let mut b = Bench::new("fig14_variant_run").with_target_time(1.5);
+    for name in ["slos-serve", "slos-serve-ar", "slos-serve-greedy",
+                 "baseline"] {
+        b.bench(name, || {
+            let wl = workload::generate(&cfg);
+            let mut p = make_policy(name, &cfg);
+            run(p.as_mut(), wl, &cfg).metrics.attainment()
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,48 @@
+//! Fig. 15 — scheduling overhead: wall-clock per DP planner call across
+//! (new, running) request mixes. Paper: consistently < 10 ms, mostly < 2 ms.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::Hardware;
+use slos_serve::coordinator::dp::{Candidate, DpConfig, DpPlanner};
+use slos_serve::coordinator::perf_model::PerfModel;
+use slos_serve::workload::Rng;
+
+fn candidates(n: usize, rng: &mut Rng) -> Vec<Candidate> {
+    (0..n as u64)
+        .map(|i| Candidate {
+            id: i,
+            pddl: 0.2 + rng.f64() * 2.0,
+            prefill_tokens: 200 + rng.below(2000),
+            mem_pages: 40 + rng.below(150),
+            tier: rng.below(2),
+            forced: false,
+        })
+        .collect()
+}
+
+fn main() {
+    slos_serve::figures::fig15_overhead();
+
+    let m = PerfModel::preset(Hardware::A100);
+    let mut b = Bench::new("fig15_dp_plan").with_target_time(1.0);
+    let mut worst = 0.0f64;
+    for &(new, running) in &[(1usize, 10usize), (4, 50), (8, 100), (12, 200)] {
+        let cfg = DpConfig {
+            tiers: vec![0.05, 0.1],
+            running_counts: vec![running / 2, running / 2],
+            mem_free_pages: 50_000,
+            speculative: true,
+            spec_alpha: 0.8,
+            max_spec_len: 6,
+        };
+        let mut rng = Rng::new(11);
+        let cands = candidates(new, &mut rng);
+        let planner = DpPlanner::new(&cfg, &m);
+        let s = b.bench(format!("new{new}_run{running}"),
+                        || planner.plan(0.0, &cands));
+        worst = worst.max(s.median);
+    }
+    b.finish();
+    println!("worst median {:.3} ms (paper target: < 10 ms)", worst * 1e3);
+    assert!(worst < 0.010, "DP planning exceeded the paper's 10 ms bound");
+}

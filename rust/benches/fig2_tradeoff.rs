@@ -1,0 +1,19 @@
+//! Fig. 2 — throughput-latency tradeoff: prints the (tokens, latency,
+//! throughput) series the paper plots, then times the perf-model hot path.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::Hardware;
+use slos_serve::coordinator::perf_model::PerfModel;
+
+fn main() {
+    slos_serve::figures::fig2_tradeoff();
+
+    let m = PerfModel::preset(Hardware::A100);
+    let mut b = Bench::new("fig2_perf_model").with_target_time(0.5);
+    for tokens in [64usize, 512, 4096] {
+        b.bench(format!("batch_time_{tokens}"), || m.batch_time(tokens, 2));
+        b.bench(format!("time2bs_{tokens}"),
+                || m.time2bs(tokens as f64 * 1e-4, 2));
+    }
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! Fig. 4 — DistServe capacity under different PF:DCD ratios. Regenerates
+//! the figure's data and times one disaggregated run per ratio.
+
+use slos_serve::baselines::{run_distserve, DistServeConfig};
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::workload;
+
+fn main() {
+    slos_serve::figures::fig4_distserve(150);
+
+    let cfg = ScenarioConfig::new(Scenario::ChatBot)
+        .with_rate(1.0)
+        .with_requests(100);
+    let wl = workload::generate(&cfg);
+    let mut b = Bench::new("fig4_distserve_run").with_target_time(1.0);
+    for ratio in DistServeConfig::RATIOS {
+        b.bench(
+            format!("{}pf{}dcd", ratio.prefill_devices, ratio.decode_devices),
+            || run_distserve(wl.clone(), &cfg, ratio),
+        );
+    }
+    b.finish();
+}

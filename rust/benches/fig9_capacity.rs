@@ -1,0 +1,27 @@
+//! Fig. 9 / Fig. 1 — end-to-end serving capacity across all 6 scenarios and
+//! all systems: prints the full capacity table (the paper's headline
+//! result: ~2.2x geo-mean over the best baseline), then times one serving
+//! run per system.
+
+use slos_serve::bench_harness::Bench;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::figures::{self, make_policy};
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn main() {
+    figures::fig1_summary(200);
+
+    let cfg = ScenarioConfig::new(Scenario::ChatBot)
+        .with_rate(1.5)
+        .with_requests(150);
+    let mut b = Bench::new("fig9_serving_run").with_target_time(1.5);
+    for name in ["slos-serve", "vllm", "sarathi"] {
+        b.bench(name, || {
+            let wl = workload::generate(&cfg);
+            let mut p = make_policy(name, &cfg);
+            run(p.as_mut(), wl, &cfg).metrics.attainment()
+        });
+    }
+    b.finish();
+}

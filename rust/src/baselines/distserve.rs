@@ -1,0 +1,294 @@
+//! DistServe-style baseline: prefill/decode disaggregation onto separate
+//! device pools with a static ratio (paper §2.3, Fig. 4, App. A).
+//!
+//! Prefill devices run whole-prompt batches FCFS; finished prefills hand
+//! off to the decode device with the fewest residents (KV transfer treated
+//! as overlapped, as DistServe does). Decode devices run continuous
+//! batches of one token per resident. The static ratio is the knob the
+//! paper sweeps in Fig. 4 — no single setting suits both prefill-heavy and
+//! decode-heavy loads, which is DistServe's weakness under mixed SLOs.
+
+use std::collections::VecDeque;
+
+use crate::config::ScenarioConfig;
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::request::{Phase, Request};
+use crate::metrics::{collect, RunMetrics};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DistServeConfig {
+    pub prefill_devices: usize,
+    pub decode_devices: usize,
+}
+
+impl DistServeConfig {
+    pub const RATIOS: [DistServeConfig; 3] = [
+        DistServeConfig { prefill_devices: 1, decode_devices: 1 },
+        DistServeConfig { prefill_devices: 2, decode_devices: 1 },
+        DistServeConfig { prefill_devices: 1, decode_devices: 2 },
+    ];
+
+    pub fn total_devices(&self) -> usize {
+        self.prefill_devices + self.decode_devices
+    }
+}
+
+struct DecodeDevice {
+    /// Indices into the request vec currently resident.
+    residents: Vec<usize>,
+    free_at: f64,
+    kv_tokens_used: usize,
+}
+
+/// Run the disaggregated simulation. Returns metrics over all requests.
+/// Note multi-stage requests bounce back to the prefill pool for each
+/// stage's prefill part (tool responses etc.).
+pub fn run_distserve(mut workload: Vec<Request>, cfg: &ScenarioConfig,
+                     ratio: DistServeConfig) -> (Vec<Request>, RunMetrics) {
+    workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    let model: PerfModel = cfg.perf_model();
+    let mut noise = crate::workload::Rng::new(cfg.seed ^ 0x0153_A0F7);
+    let mut jitter = |dt: f64| {
+        if cfg.exec_noise <= 0.0 { dt } else {
+            dt * (1.0 + cfg.exec_noise * noise.normal().abs())
+        }
+    };
+    let n = workload.len();
+
+    // Prefill pool state: each device free-at time + FCFS queue.
+    let mut pf_free = vec![0.0f64; ratio.prefill_devices];
+    let mut pf_queue: VecDeque<usize> = VecDeque::new();
+    let mut dc: Vec<DecodeDevice> = (0..ratio.decode_devices)
+        .map(|_| DecodeDevice { residents: Vec::new(), free_at: 0.0,
+                                kv_tokens_used: 0 })
+        .collect();
+
+    let mut arrived = 0usize;
+    let mut finished = 0usize;
+    let mut now = 0.0f64;
+    let horizon = (workload.last().map(|r| r.arrival).unwrap_or(0.0)
+        + 120.0) * 20.0 + 600.0;
+
+    // Initialize stage deadlines at arrival.
+    for r in workload.iter_mut() {
+        let zl = model.zero_load_prefill(r.stage().prefill_tokens);
+        let arrival = r.arrival;
+        r.begin_stage(arrival, zl);
+    }
+
+    while finished < n && now < horizon {
+        // Deliver arrivals.
+        while arrived < n && workload[arrived].arrival <= now {
+            pf_queue.push_back(arrived);
+            arrived += 1;
+        }
+
+        let mut acted = false;
+
+        // Prefill devices pick up queued prefill work — but only when a
+        // decode device will have KV room for the result (otherwise the
+        // request waits in the queue; head-of-line blocking is part of
+        // the disaggregated design's cost).
+        for d in 0..ratio.prefill_devices {
+            if pf_free[d] > now {
+                continue;
+            }
+            let Some(&idx) = pf_queue.front() else { continue };
+            let need = workload[idx].total_tokens();
+            let has_room = dc
+                .iter()
+                .any(|dev| dev.kv_tokens_used + need <= cfg.kv_tokens);
+            if !has_room {
+                continue; // wait for decode completions to free KV
+            }
+            pf_queue.pop_front();
+            let tokens = workload[idx].prefill_remaining();
+            let t = jitter(model.zero_load_prefill(tokens));
+            let done = now.max(workload[idx].arrival) + t;
+            pf_free[d] = done;
+            let r = &mut workload[idx];
+            r.advance_prefill(tokens, done);
+            if r.is_finished() {
+                finished += 1;
+            } else if r.phase == Phase::Decode {
+                let dev = dc
+                    .iter_mut()
+                    .filter(|dev| dev.kv_tokens_used + need <= cfg.kv_tokens)
+                    .min_by_key(|dev| dev.residents.len())
+                    .expect("room checked above");
+                dev.kv_tokens_used += need;
+                dev.residents.push(idx);
+            }
+            acted = true;
+        }
+
+        // Decode devices run one batch each when due.
+        for dev in dc.iter_mut() {
+            if dev.free_at > now || dev.residents.is_empty() {
+                continue;
+            }
+            let batch_tokens = dev.residents.len();
+            let dt = jitter(model.batch_time(batch_tokens, 0));
+            let done = now + dt;
+            dev.free_at = done;
+            let mut still = Vec::with_capacity(dev.residents.len());
+            for &idx in &dev.residents {
+                let r = &mut workload[idx];
+                r.advance_decode(1, done);
+                if r.is_finished() {
+                    finished += 1;
+                    dev.kv_tokens_used =
+                        dev.kv_tokens_used.saturating_sub(r.total_tokens());
+                } else if r.phase == Phase::Pending {
+                    // Next stage begins with a prefill: back to the pool.
+                    dev.kv_tokens_used =
+                        dev.kv_tokens_used.saturating_sub(r.total_tokens());
+                    let zl = model.zero_load_prefill(r.stage().prefill_tokens);
+                    r.begin_stage(done, zl);
+                    if r.phase == Phase::Prefill {
+                        pf_queue.push_back(idx);
+                    } else {
+                        // Decode-only next stage: stay resident.
+                        dev.kv_tokens_used += r.total_tokens();
+                        still.push(idx);
+                    }
+                } else {
+                    still.push(idx);
+                }
+            }
+            dev.residents = still;
+            acted = true;
+        }
+
+        if !acted {
+            // Advance to the next event.
+            let mut next = f64::INFINITY;
+            if arrived < n {
+                next = next.min(workload[arrived].arrival);
+            }
+            for &t in &pf_free {
+                if t > now {
+                    next = next.min(t);
+                }
+            }
+            for dev in &dc {
+                if dev.free_at > now && !dev.residents.is_empty() {
+                    next = next.min(dev.free_at);
+                }
+                // A device whose residents wait for its clock:
+                if dev.free_at > now {
+                    next = next.min(dev.free_at);
+                }
+            }
+            if !next.is_finite() {
+                break;
+            }
+            now = next;
+        }
+    }
+
+    let metrics = collect(&workload, now);
+    (workload, metrics)
+}
+
+/// Run all three static ratios at the *per-GPU* rate of `cfg` (total load
+/// scales with each ratio's device count, like the paper's normalization),
+/// returning the best attainment (the paper reports DistServe's best
+/// configuration per scenario).
+pub fn best_ratio_attainment(_workload: &[Request], cfg: &ScenarioConfig)
+                             -> f64 {
+    DistServeConfig::RATIOS
+        .iter()
+        .map(|r| {
+            let mut scaled = cfg.clone();
+            scaled.rate = cfg.rate * r.total_devices() as f64;
+            scaled.num_requests = cfg.num_requests * r.total_devices();
+            let wl = crate::workload::generate(&scaled);
+            let (_, m) = run_distserve(wl, &scaled, *r);
+            m.attainment()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, SloSpec, SloTier};
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn req(id: u64, arrival: f64, p: usize, d: usize) -> Request {
+        Request::simple(id, arrival, p, d,
+                        SloSpec::from_tiers(SloTier::Loose, SloTier::Loose))
+    }
+
+    #[test]
+    fn completes_light_load() {
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| req(i, i as f64 * 1.0, 500, 40))
+            .collect();
+        let (done, m) = run_distserve(
+            reqs, &cfg(),
+            DistServeConfig { prefill_devices: 1, decode_devices: 1 });
+        assert_eq!(m.finished, 10);
+        for r in &done {
+            assert!(r.is_finished());
+        }
+    }
+
+    #[test]
+    fn zero_interference_between_phases() {
+        // One decoding request + arriving prefills: decode TPOT must be
+        // unaffected (the disaggregation selling point).
+        let mut reqs = vec![req(0, 0.0, 100, 100)];
+        for i in 1..8 {
+            reqs.push(req(i, 0.5 + 0.2 * i as f64, 3000, 4));
+        }
+        let (done, _) = run_distserve(
+            reqs, &cfg(),
+            DistServeConfig { prefill_devices: 1, decode_devices: 1 });
+        let r0 = done.iter().find(|r| r.id == 0).unwrap();
+        // Worst TPOT = batch time of a small decode batch — tens of ms.
+        assert!(r0.stage_records[0].worst_tpot < 0.06,
+                "tpot={}", r0.stage_records[0].worst_tpot);
+    }
+
+    #[test]
+    fn ratio_matters_for_skewed_loads() {
+        // Prefill-heavy load: more prefill devices help.
+        let prefill_heavy: Vec<Request> = (0..40)
+            .map(|i| req(i, i as f64 * 0.12, 3000, 8))
+            .collect();
+        let c = cfg();
+        let (_, m21) = run_distserve(
+            prefill_heavy.clone(), &c,
+            DistServeConfig { prefill_devices: 2, decode_devices: 1 });
+        let (_, m12) = run_distserve(
+            prefill_heavy, &c,
+            DistServeConfig { prefill_devices: 1, decode_devices: 2 });
+        assert!(m21.attainment() >= m12.attainment(),
+                "2:1 {} < 1:2 {}", m21.attainment(), m12.attainment());
+    }
+
+    #[test]
+    fn multi_stage_requests_bounce_between_pools() {
+        use crate::coordinator::request::{Stage, StageKind};
+        let slo = SloSpec::from_tiers(SloTier::Loose, SloTier::Loose);
+        let stages = vec![
+            Stage { kind: StageKind::Main, prefill_tokens: 200,
+                    decode_tokens: 8, slo },
+            Stage { kind: StageKind::ToolCall, prefill_tokens: 100,
+                    decode_tokens: 8, slo },
+        ];
+        let r = Request::new(0, 0.0, stages);
+        let (done, m) = run_distserve(
+            vec![r], &cfg(),
+            DistServeConfig { prefill_devices: 1, decode_devices: 1 });
+        assert_eq!(m.finished, 1);
+        assert_eq!(done[0].stage_records.len(), 2);
+    }
+}

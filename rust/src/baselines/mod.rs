@@ -1,0 +1,10 @@
+//! Baseline schedulers the paper compares against (§6: vLLM, Sarathi-Serve,
+//! DistServe), implemented over the same simulator substrate.
+
+pub mod distserve;
+pub mod sarathi;
+pub mod vllm;
+
+pub use distserve::{run_distserve, DistServeConfig};
+pub use sarathi::Sarathi;
+pub use vllm::Vllm;

@@ -1,0 +1,123 @@
+//! Minimal criterion-style benchmark harness (the offline environment has
+//! no external crates beyond the vendored `xla` closure — DESIGN.md §2).
+//!
+//! Usage mirrors criterion closely enough for our benches:
+//! ```ignore
+//! let mut b = Bench::new("group_name");
+//! b.bench("case", || expensive());
+//! b.finish();
+//! ```
+//! Each case is warmed up, then timed over enough iterations for a stable
+//! median; results print as `group/case  median  mean  min..max (n iters)`.
+
+use std::time::Instant;
+
+pub struct Bench {
+    group: String,
+    /// Target wall-clock per case (seconds).
+    pub target_time: f64,
+    /// Minimum timed iterations.
+    pub min_iters: usize,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        Bench {
+            group: group.into(),
+            target_time: 2.0,
+            min_iters: 10,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, secs: f64) -> Self {
+        self.target_time = secs;
+        self
+    }
+
+    /// Time `f`, discarding its output. Returns the stats.
+    pub fn bench<R>(&mut self, id: impl Into<String>, mut f: impl FnMut() -> R)
+                    -> Stats {
+        let id = id.into();
+        // Warmup: one call, and estimate per-iter cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time / est) as usize)
+            .clamp(self.min_iters, 100_000);
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            median: times[times.len() / 2],
+            mean: times.iter().sum::<f64>() / times.len() as f64,
+            min: times[0],
+            max: *times.last().unwrap(),
+            iters,
+        };
+        println!("{}/{:<28} median {:>12} mean {:>12} range {}..{} ({} iters)",
+                 self.group, id, fmt_time(stats.median), fmt_time(stats.mean),
+                 fmt_time(stats.min), fmt_time(stats.max), stats.iters);
+        self.results.push((id, stats));
+        stats
+    }
+
+    pub fn finish(self) -> Vec<(String, Stats)> {
+        self.results
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("test").with_target_time(0.05);
+        let s = b.bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..100u64 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.iters >= 10);
+        assert_eq!(b.finish().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

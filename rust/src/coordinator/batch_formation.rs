@@ -1,0 +1,351 @@
+//! Batch formation with dynamic size tuning (paper §3.2.2, Alg. 2) and the
+//! `PB*(t, n)` prefill-budget solver (Eqn. 3).
+//!
+//! Given the decoding requests and an interval `t`, form batches that (a)
+//! give every decode its token by its per-token deadline (EDF priority
+//! queue) and (b) size each batch to the *largest* token count whose
+//! execution time still meets the tightest running TPOT — unlike
+//! Sarathi-Serve's global cap from the tightest *possible* SLO, the cap
+//! adapts to the requests actually running. Leftover capacity is the
+//! prefill budget that the DP hands to not-yet-prefilled requests.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::request::RequestId;
+
+/// Entry in an executable batch (paper Eqn. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchEntry {
+    pub id: RequestId,
+    pub kind: EntryKind,
+    /// Prefill: chunk length. Decode: tokens processed this batch (1 for
+    /// auto-regressive; speculation length when speculating).
+    pub tokens: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    Prefill,
+    Decode,
+}
+
+/// One batch the engine executes with `BatchForward`.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub entries: Vec<BatchEntry>,
+    /// Speculation steps for the drafter (0 = pure auto-regressive batch);
+    /// per §3.1.1 this is the max speculation length in the batch.
+    pub spec_step: usize,
+}
+
+impl Batch {
+    pub fn total_tokens(&self) -> usize {
+        self.entries.iter().map(|e| e.tokens).sum()
+    }
+
+    pub fn decode_tokens(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == EntryKind::Decode)
+            .map(|e| e.tokens)
+            .sum()
+    }
+
+    pub fn prefill_tokens(&self) -> usize {
+        self.total_tokens() - self.decode_tokens()
+    }
+
+    pub fn exec_time(&self, m: &PerfModel) -> f64 {
+        m.batch_time(self.total_tokens(), self.spec_step)
+    }
+}
+
+/// A decoding request as Alg. 2 sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodingReq {
+    pub id: RequestId,
+    pub tpot: f64,
+    /// Remaining decode tokens (bounds how many batches still include it).
+    pub remaining: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct QItem {
+    sch_ddl: f64,
+    id: RequestId,
+    tpot: f64,
+    remaining: usize,
+}
+
+impl PartialEq for QItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.sch_ddl == other.sch_ddl && self.id == other.id
+    }
+}
+impl Eq for QItem {}
+impl Ord for QItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on schDDL (earliest deadline first), tie-break by id.
+        other
+            .sch_ddl
+            .partial_cmp(&self.sch_ddl)
+            .unwrap()
+            .then(other.id.cmp(&self.id))
+    }
+}
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A planned batch skeleton: decode token assignments + leftover prefill
+/// budget (who gets the prefill tokens is decided EDF at execution time).
+#[derive(Debug, Clone)]
+pub struct PlannedBatch {
+    /// Decode entries: (request, tokens_this_batch).
+    pub decodes: Vec<(RequestId, usize)>,
+    /// Tokens left for prefill chunks.
+    pub prefill_budget: usize,
+    /// Planned wall-clock duration of the batch.
+    pub duration: f64,
+    pub spec_step: usize,
+}
+
+/// Alg. 2: form batches covering an interval of length `t` for the given
+/// decoding requests; each batch's token size is `time2bs(t0)` where `t0`
+/// is the tightest TPOT among *running* requests (dynamic tuning).
+pub fn form_batches(t: f64, decoding: &[DecodingReq], m: &PerfModel)
+                    -> Vec<PlannedBatch> {
+    if decoding.is_empty() {
+        // No decode constraint: one big batch of pure prefill, sized to the
+        // interval (bounded by the physical cap).
+        let budget = m.time2bs(t, 0).min(m.max_batch_tokens);
+        let duration = m.batch_time(budget, 0).max(1e-9);
+        return vec![PlannedBatch {
+            decodes: vec![],
+            prefill_budget: budget,
+            duration,
+            spec_step: 0,
+        }];
+    }
+    let t0 = decoding.iter().map(|r| r.tpot).fold(f64::INFINITY, f64::min);
+    let per_batch = m.time2bs(t0, 0);
+    let mut q: BinaryHeap<QItem> = decoding
+        .iter()
+        .map(|r| QItem { sch_ddl: 0.0, id: r.id, tpot: r.tpot,
+                         remaining: r.remaining })
+        .collect();
+    let n_batches = (t / t0).floor().max(1.0) as usize;
+    let mut out = Vec::with_capacity(n_batches);
+    for i in 0..n_batches {
+        let window_end = (i + 1) as f64 * t0;
+        let mut budget = per_batch;
+        let mut decodes = Vec::new();
+        let mut requeue = Vec::new();
+        // Serve every decode whose next-token deadline falls inside this
+        // batch window (EDF order), one token each.
+        while let Some(&front) = q.peek() {
+            if front.sch_ddl >= window_end || budget == 0 {
+                break;
+            }
+            let mut item = q.pop().unwrap();
+            if item.remaining == 0 {
+                continue; // drained; drop from future batches
+            }
+            decodes.push((item.id, 1));
+            budget -= 1;
+            item.remaining -= 1;
+            item.sch_ddl += item.tpot;
+            requeue.push(item);
+        }
+        for it in requeue {
+            q.push(it);
+        }
+        out.push(PlannedBatch {
+            decodes,
+            prefill_budget: budget,
+            duration: t0,
+            spec_step: 0,
+        });
+    }
+    out
+}
+
+/// Closed-form `PB*(t, n⃗)` (Eqn. 3) for auto-regressive decoding: the max
+/// prefill budget generated over an interval `t` while `counts[l]` requests
+/// decode at `tpots[l]`. Returns `None` when the decode SLOs alone exceed
+/// capacity (no feasible batches).
+pub fn prefill_budget_ar(t: f64, tpots: &[f64], counts: &[usize], m: &PerfModel)
+                         -> Option<f64> {
+    debug_assert_eq!(tpots.len(), counts.len());
+    let n_total: usize = counts.iter().sum();
+    if n_total == 0 {
+        // Pure prefill: chain of max-size batches plus a fitted remainder.
+        return Some(m.tokens_within(t, 0) as f64);
+    }
+    let t0 = tpots
+        .iter()
+        .zip(counts)
+        .filter(|&(_, &c)| c > 0)
+        .map(|(&tp, _)| tp)
+        .fold(f64::INFINITY, f64::min);
+    let per_batch = m.time2bs(t0, 0) as f64;
+    // Average decode tokens per batch window: each tier-l request needs
+    // t0/tpot_l tokens per window.
+    let decode_per_batch: f64 = tpots
+        .iter()
+        .zip(counts)
+        .map(|(&tp, &c)| c as f64 * t0 / tp)
+        .sum();
+    if decode_per_batch > per_batch {
+        return None; // decode SLOs alone are unattainable
+    }
+    let n_batches = (t / t0).floor();
+    // Credit the trailing partial window too: a batch sized to the
+    // remainder still runs (minus its share of decode tokens) — without
+    // this, every interval shorter than one window reports zero budget and
+    // the DP starves (admission requires budget >= prompt by deadline).
+    let rest = t - n_batches * t0;
+    let partial = (m.time2bs(rest, 0) as f64 - decode_per_batch).max(0.0);
+    Some(n_batches * (per_batch - decode_per_batch) + partial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Hardware;
+
+    fn m() -> PerfModel {
+        PerfModel::preset(Hardware::A100)
+    }
+
+    fn reqs(tight: usize, loose: usize) -> Vec<DecodingReq> {
+        let mut v = Vec::new();
+        for i in 0..tight {
+            v.push(DecodingReq { id: i as u64, tpot: 0.050, remaining: 10_000 });
+        }
+        for i in 0..loose {
+            v.push(DecodingReq { id: (tight + i) as u64, tpot: 0.100,
+                                 remaining: 10_000 });
+        }
+        v
+    }
+
+    #[test]
+    fn every_decode_meets_its_tpot() {
+        let m = m();
+        let decoding = reqs(3, 5);
+        let horizon = 1.0;
+        let batches = form_batches(horizon, &decoding, &m);
+        // Replay: token k of request r must complete by (k+1)*tpot.
+        let mut t = 0.0;
+        let mut served: std::collections::HashMap<RequestId, usize> =
+            Default::default();
+        for b in &batches {
+            t += b.duration;
+            for &(id, n) in &b.decodes {
+                let k = served.entry(id).or_insert(0);
+                let r = decoding.iter().find(|r| r.id == id).unwrap();
+                for _ in 0..n {
+                    *k += 1;
+                    assert!(t <= *k as f64 * r.tpot + 1e-9,
+                            "req {id} token {k} late: t={t}");
+                }
+            }
+        }
+        // Everyone received ~horizon/tpot tokens.
+        for r in &decoding {
+            let want = (horizon / r.tpot).floor() as usize;
+            let got = served[&r.id];
+            assert!(got >= want - 1, "req {} got {got}, want ~{want}", r.id);
+        }
+    }
+
+    #[test]
+    fn batch_cap_follows_tightest_running_tpot() {
+        let m = m();
+        // Only loose requests running: batches sized for 100 ms, i.e.
+        // larger than Sarathi's global 50 ms cap (dynamic tuning's win).
+        let loose_only = reqs(0, 4);
+        let b = form_batches(0.5, &loose_only, &m);
+        let loose_cap = m.time2bs(0.100, 0);
+        let tight_cap = m.time2bs(0.050, 0);
+        let size = b[0].prefill_budget + b[0].decodes.len();
+        assert_eq!(size, loose_cap);
+        assert!(size > tight_cap);
+    }
+
+    #[test]
+    fn no_decodes_yields_pure_prefill_batch() {
+        let m = m();
+        let b = form_batches(0.2, &[], &m);
+        assert_eq!(b.len(), 1);
+        assert!(b[0].decodes.is_empty());
+        assert!(b[0].prefill_budget > 0);
+    }
+
+    #[test]
+    fn drained_requests_leave_the_queue() {
+        let m = m();
+        let decoding = vec![DecodingReq { id: 1, tpot: 0.05, remaining: 2 }];
+        let batches = form_batches(1.0, &decoding, &m);
+        let total: usize = batches.iter()
+            .flat_map(|b| b.decodes.iter().map(|d| d.1))
+            .sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn closed_form_matches_explicit_batches() {
+        let m = m();
+        for (tight, loose) in [(2, 3), (0, 6), (5, 0), (1, 1)] {
+            let decoding = reqs(tight, loose);
+            let t = 1.0;
+            let batches = form_batches(t, &decoding, &m);
+            let explicit: usize = batches.iter().map(|b| b.prefill_budget).sum();
+            let closed = prefill_budget_ar(
+                t, &[0.050, 0.100], &[tight, loose], &m).unwrap();
+            let diff = (explicit as f64 - closed).abs();
+            // Rounding (ceil vs average) differs by at most one token per
+            // request per batch window.
+            let slack = (tight + loose + 1) as f64
+                * (t / 0.050).ceil();
+            assert!(diff <= slack,
+                    "tight={tight} loose={loose}: explicit={explicit} closed={closed}");
+        }
+    }
+
+    #[test]
+    fn infeasible_when_decode_demand_exceeds_capacity() {
+        let m = m();
+        // time2bs(50ms) ~= 511 tokens; 600 tight decoders need 600.
+        let r = prefill_budget_ar(1.0, &[0.050], &[600], &m);
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn more_decoders_shrink_prefill_budget() {
+        let m = m();
+        let a = prefill_budget_ar(1.0, &[0.05, 0.1], &[2, 2], &m).unwrap();
+        let b = prefill_budget_ar(1.0, &[0.05, 0.1], &[2, 50], &m).unwrap();
+        assert!(b < a);
+    }
+
+    #[test]
+    fn batch_accessors() {
+        let b = Batch {
+            entries: vec![
+                BatchEntry { id: 1, kind: EntryKind::Prefill, tokens: 100 },
+                BatchEntry { id: 2, kind: EntryKind::Decode, tokens: 1 },
+                BatchEntry { id: 3, kind: EntryKind::Decode, tokens: 4 },
+            ],
+            spec_step: 4,
+        };
+        assert_eq!(b.total_tokens(), 105);
+        assert_eq!(b.decode_tokens(), 5);
+        assert_eq!(b.prefill_tokens(), 100);
+    }
+}

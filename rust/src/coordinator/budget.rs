@@ -1,0 +1,197 @@
+//! Token-budget feasibility geometry (paper Fig. 5).
+//!
+//! Each request is a *demand line*: `p_i` tokens due by the prefill deadline
+//! `pDDL_i`, then growth at `k_i = 1/TPOT_i` tokens/s until the decode
+//! length saturates. A schedule is feasible iff the *accumulated token
+//! budget* (piecewise-linear, slope = batch token throughput) dominates the
+//! cumulative demand at every instant. This module is the ground-truth
+//! checker used by scheduler tests and proptest invariants; the DP reasons
+//! with the same quantities incrementally.
+
+/// One request's token demand as a function of time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandLine {
+    /// Prefill deadline (absolute seconds).
+    pub pddl: f64,
+    /// Prefill tokens due by `pddl`.
+    pub prefill: f64,
+    /// Decode rate after `pddl` (tokens/s, `1/TPOT`).
+    pub rate: f64,
+    /// Total tokens (prefill + decode length); demand saturates here.
+    pub total: f64,
+}
+
+impl DemandLine {
+    pub fn new(pddl: f64, prefill: f64, rate: f64, decode_tokens: f64) -> Self {
+        DemandLine { pddl, prefill, rate, total: prefill + decode_tokens }
+    }
+
+    /// Demand at absolute time `t` (0 before the deadline: prefill tokens
+    /// may be allocated any time up to `pddl`).
+    pub fn at(&self, t: f64) -> f64 {
+        if t < self.pddl {
+            0.0
+        } else {
+            (self.prefill + self.rate * (t - self.pddl)).min(self.total)
+        }
+    }
+
+    /// Time at which this line saturates (all tokens demanded).
+    pub fn saturation_time(&self) -> f64 {
+        if self.rate <= 0.0 {
+            self.pddl
+        } else {
+            self.pddl + (self.total - self.prefill) / self.rate
+        }
+    }
+}
+
+/// Piecewise-linear accumulated token budget: points `(t, cumulative)`,
+/// non-decreasing in both coordinates, linearly interpolated.
+#[derive(Debug, Clone, Default)]
+pub struct BudgetCurve {
+    points: Vec<(f64, f64)>,
+}
+
+impl BudgetCurve {
+    pub fn new(start: f64) -> Self {
+        BudgetCurve { points: vec![(start, 0.0)] }
+    }
+
+    /// Constant-throughput curve (Fig. 5a/5b's fixed batch size).
+    pub fn linear(start: f64, tokens_per_sec: f64, horizon: f64) -> Self {
+        BudgetCurve {
+            points: vec![(start, 0.0), (start + horizon, tokens_per_sec * horizon)],
+        }
+    }
+
+    /// Append a batch: `dt` seconds producing `tokens` budget.
+    pub fn push_batch(&mut self, dt: f64, tokens: f64) {
+        assert!(dt > 0.0 && tokens >= 0.0);
+        let (t, c) = *self.points.last().unwrap();
+        self.points.push((t + dt, c + tokens));
+    }
+
+    pub fn end_time(&self) -> f64 {
+        self.points.last().unwrap().0
+    }
+
+    pub fn total(&self) -> f64 {
+        self.points.last().unwrap().1
+    }
+
+    /// Budget available by time `t` (clamped to the curve's range; beyond
+    /// the end the curve stays flat — no further batches are planned).
+    pub fn at(&self, t: f64) -> f64 {
+        let pts = &self.points;
+        if t <= pts[0].0 {
+            return 0.0;
+        }
+        if t >= pts[pts.len() - 1].0 {
+            return pts[pts.len() - 1].1;
+        }
+        let i = pts.partition_point(|p| p.0 <= t);
+        let (t0, c0) = pts[i - 1];
+        let (t1, c1) = pts[i];
+        c0 + (c1 - c0) * (t - t0) / (t1 - t0)
+    }
+
+    pub fn breakpoints(&self) -> impl Iterator<Item = f64> + '_ {
+        self.points.iter().map(|p| p.0)
+    }
+}
+
+/// Fig. 5 feasibility: cumulative demand never exceeds the budget. It
+/// suffices to check at breakpoints of either side (both curves are
+/// piecewise linear; between breakpoints the gap is linear, so a sign
+/// change would show at an endpoint), plus just after each deadline.
+pub fn feasible(lines: &[DemandLine], budget: &BudgetCurve) -> bool {
+    violation_time(lines, budget).is_none()
+}
+
+/// First checked instant where demand exceeds budget, if any.
+pub fn violation_time(lines: &[DemandLine], budget: &BudgetCurve) -> Option<f64> {
+    let mut ts: Vec<f64> = Vec::new();
+    for l in lines {
+        ts.push(l.pddl);
+        ts.push(l.saturation_time());
+    }
+    ts.extend(budget.breakpoints());
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts.dedup();
+    for &t in &ts {
+        let demand: f64 = lines.iter().map(|l| l.at(t)).sum();
+        if demand > budget.at(t) + 1e-6 {
+            return Some(t);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demand_line_shape() {
+        let l = DemandLine::new(1.0, 100.0, 10.0, 50.0);
+        assert_eq!(l.at(0.5), 0.0);
+        assert_eq!(l.at(1.0), 100.0);
+        assert_eq!(l.at(2.0), 110.0);
+        assert_eq!(l.at(100.0), 150.0); // saturated
+        assert!((l.saturation_time() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_curve_interpolates() {
+        let mut b = BudgetCurve::new(0.0);
+        b.push_batch(0.5, 100.0);
+        b.push_batch(0.5, 300.0);
+        assert_eq!(b.at(0.0), 0.0);
+        assert!((b.at(0.25) - 50.0).abs() < 1e-12);
+        assert!((b.at(0.75) - 250.0).abs() < 1e-12);
+        assert_eq!(b.at(9.0), 400.0);
+    }
+
+    #[test]
+    fn fig5_example_admit_subset() {
+        // Stylized Fig. 5: budget 100 tok/s. R1 small early, R2 mid,
+        // R3 large prefill at t=2.
+        let r1 = DemandLine::new(0.5, 30.0, 10.0, 100.0);
+        let r2 = DemandLine::new(1.0, 60.0, 20.0, 100.0);
+        let r3 = DemandLine::new(2.0, 150.0, 10.0, 100.0);
+        let budget = BudgetCurve::linear(0.0, 100.0, 10.0);
+        // All three overload the budget at R3's deadline:
+        // demand(2.0) = 30+15 + 60+20 + 150 = 275 > 200.
+        assert!(!feasible(&[r1, r2, r3], &budget));
+        // Dropping R2 fits: 30+15+150 = 195 <= 200, and later slopes fit.
+        assert!(feasible(&[r1, r3], &budget));
+    }
+
+    #[test]
+    fn dynamic_batch_tuning_enlarges_budget() {
+        // Fig. 5c: a nonlinear budget (bigger later batches) admits all.
+        let r1 = DemandLine::new(0.5, 30.0, 10.0, 100.0);
+        let r2 = DemandLine::new(1.0, 60.0, 20.0, 100.0);
+        let r3 = DemandLine::new(2.0, 150.0, 10.0, 100.0);
+        let mut b = BudgetCurve::new(0.0);
+        b.push_batch(1.0, 120.0); // tuned-up batches
+        b.push_batch(1.0, 160.0);
+        b.push_batch(8.0, 8.0 * 140.0);
+        assert!(feasible(&[r1, r2, r3], &b));
+    }
+
+    #[test]
+    fn violation_reported_at_first_breakpoint() {
+        let r = DemandLine::new(1.0, 50.0, 0.0, 0.0);
+        let budget = BudgetCurve::linear(0.0, 10.0, 10.0);
+        let t = violation_time(&[r], &budget).unwrap();
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_demand_always_feasible() {
+        let budget = BudgetCurve::new(0.0);
+        assert!(feasible(&[], &budget));
+    }
+}

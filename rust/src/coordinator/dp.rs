@@ -1,0 +1,480 @@
+//! Multi-SLO dynamic-programming admission control (paper §3.2.1, App. C).
+//!
+//! Requests are sorted by prefill deadline. A DP state is
+//! `(i, mem, (n_1..n_L))`: `i` = last accepted candidate, `mem` = quantized
+//! memory units consumed, `n_l` = accepted requests per decode-SLO tier.
+//! The stored quantity `pb[state]` is the *maximum prefill budget* left at
+//! `pDDL_i` — tokens generated in excess of all accepted decode SLOs,
+//! available to prefill later-deadline requests. The transition (Eqn. 5)
+//! enumerates the previous accepted request `j` and adds the budget
+//! `PB*(pDDL_i - pDDL_j, n⃗)` produced in between (Eqn. 3, solved by the
+//! auto-regressive or speculative solver). A candidate is admissible only
+//! if the budget stays non-negative after paying its prefill — exactly the
+//! Fig. 5 condition that cumulative demand never crosses the budget curve.
+//!
+//! Running requests are *forced admissions* (continuous optimization):
+//! their decode demand is baked into every `PB*` call, and running
+//! requests still mid-prefill appear as forced candidates every chain must
+//! include. Since the objective (accepted count per tier) is part of the
+//! state key, maximizing `pb` per key is exact — no Pareto frontier needed.
+
+use std::collections::HashMap;
+
+use crate::coordinator::perf_model::PerfModel;
+use crate::coordinator::request::RequestId;
+use crate::coordinator::{batch_formation, spec_decode};
+
+pub const MAX_TIERS: usize = 3;
+/// DP candidate cap per planning round; extras stay pending for the next
+/// round (paper: 0-10 new requests per invocation).
+pub const MAX_CANDIDATES: usize = 24;
+/// Memory quantization buckets.
+const MEM_BUCKETS: usize = 64;
+
+/// One admission candidate (a new request, or a running request still in
+/// prefill — `forced`).
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub id: RequestId,
+    /// Absolute prefill deadline.
+    pub pddl: f64,
+    /// Prefill tokens still to process.
+    pub prefill_tokens: usize,
+    /// Memory pages the request will need in total.
+    pub mem_pages: usize,
+    /// Decode-SLO tier index (into `DpConfig::tiers`).
+    pub tier: usize,
+    /// Forced admission (already running — §3.2.1 continuous optimization).
+    pub forced: bool,
+}
+
+/// Planner configuration.
+#[derive(Debug, Clone)]
+pub struct DpConfig {
+    /// Distinct decode TPOT tiers, tightest first (e.g. `[0.05, 0.1]`).
+    pub tiers: Vec<f64>,
+    /// Decode requests already past prefill, per tier (baseline demand).
+    pub running_counts: Vec<usize>,
+    /// Free memory pages available for new admissions.
+    pub mem_free_pages: usize,
+    /// Speculative decoding (App. D solver) vs auto-regressive (Alg. 2).
+    pub speculative: bool,
+    pub spec_alpha: f64,
+    pub max_spec_len: usize,
+}
+
+/// Admission plan produced by the DP.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub admitted: Vec<RequestId>,
+    pub declined: Vec<RequestId>,
+    /// Value of the optimum (number of non-forced admissions).
+    pub value: usize,
+}
+
+#[derive(Clone, Copy)]
+struct Entry {
+    pb: f64,
+    parent: u32,
+}
+
+/// State key packing: candidate index+1 (6 bits) | mem bucket (7 bits) |
+/// per-tier counts (6 bits each, up to 3 tiers).
+fn pack(i: usize, mem: usize, counts: &[u8; MAX_TIERS]) -> u32 {
+    debug_assert!(i < 64 && mem < 128);
+    let mut k = (i as u32) | ((mem as u32) << 6);
+    for (t, &c) in counts.iter().enumerate() {
+        debug_assert!(c < 64);
+        k |= (c as u32) << (13 + 6 * t);
+    }
+    k
+}
+
+fn unpack(k: u32) -> (usize, usize, [u8; MAX_TIERS]) {
+    let i = (k & 63) as usize;
+    let mem = ((k >> 6) & 127) as usize;
+    let mut counts = [0u8; MAX_TIERS];
+    for (t, c) in counts.iter_mut().enumerate() {
+        *c = ((k >> (13 + 6 * t)) & 63) as u8;
+    }
+    (i, mem, counts)
+}
+
+pub struct DpPlanner<'a> {
+    cfg: &'a DpConfig,
+    model: &'a PerfModel,
+}
+
+impl<'a> DpPlanner<'a> {
+    pub fn new(cfg: &'a DpConfig, model: &'a PerfModel) -> Self {
+        assert!(cfg.tiers.len() <= MAX_TIERS);
+        assert_eq!(cfg.tiers.len(), cfg.running_counts.len());
+        DpPlanner { cfg, model }
+    }
+
+    /// `PB*(dt, n⃗)` — prefill budget over `dt` seconds while the running
+    /// baseline plus `extra` accepted candidates decode at their tiers.
+    fn pb_star(&self, dt: f64, extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        let counts: Vec<usize> = self
+            .cfg
+            .running_counts
+            .iter()
+            .enumerate()
+            .map(|(l, &c)| c + extra[l] as usize)
+            .collect();
+        if self.cfg.speculative {
+            spec_decode::prefill_budget_spec(
+                dt.max(0.0), &self.cfg.tiers, &counts, self.cfg.spec_alpha,
+                self.cfg.max_spec_len, self.model)
+        } else {
+            batch_formation::prefill_budget_ar(
+                dt.max(0.0), &self.cfg.tiers, &counts, self.model)
+        }
+    }
+
+    /// Run the DP. `now` anchors the budget curve; `candidates` need not be
+    /// sorted. Returns the admission plan (forced candidates are always
+    /// admitted; if even forced admissions are infeasible the plan reports
+    /// the non-forced subset it could keep and declines the rest).
+    pub fn plan(&self, now: f64, candidates: &[Candidate]) -> Plan {
+        let mut cands: Vec<Candidate> = candidates.to_vec();
+        cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+            .then(a.id.cmp(&b.id)));
+        // Cap the DP size; overflow candidates are declined this round
+        // (they will be retried at the next invocation).
+        let mut overflow: Vec<RequestId> = Vec::new();
+        if cands.len() > MAX_CANDIDATES {
+            // Keep all forced plus the earliest-deadline non-forced.
+            let forced: Vec<Candidate> =
+                cands.iter().copied().filter(|c| c.forced).collect();
+            let mut rest: Vec<Candidate> =
+                cands.iter().copied().filter(|c| !c.forced).collect();
+            let keep = MAX_CANDIDATES.saturating_sub(forced.len());
+            overflow = rest.split_off(keep.min(rest.len()))
+                .iter().map(|c| c.id).collect();
+            cands = forced;
+            cands.extend(rest);
+            cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+                .then(a.id.cmp(&b.id)));
+        }
+        let n = cands.len();
+        let mem_bucket = (self.cfg.mem_free_pages.max(1)).div_ceil(MEM_BUCKETS - 1);
+        let qmem = |pages: usize| pages.div_ceil(mem_bucket);
+        let mem_cap = qmem(self.cfg.mem_free_pages);
+
+        // Prefix count of forced candidates, for the continuity constraint:
+        // a transition j -> i must not skip any forced candidate.
+        let forced_prefix: Vec<usize> = {
+            let mut acc = 0;
+            let mut v = Vec::with_capacity(n + 1);
+            v.push(0);
+            for c in &cands {
+                acc += c.forced as usize;
+                v.push(acc);
+            }
+            v
+        };
+
+        // dp layers by chain length to process states in a valid order:
+        // transitions only go from shorter chains to longer ones.
+        let base_key = pack(0, 0, &[0; MAX_TIERS]);
+        let mut frontier: Vec<u32> = vec![base_key];
+        let mut all_states: HashMap<u32, Entry> = HashMap::new();
+        all_states.insert(base_key, Entry { pb: 0.0, parent: u32::MAX });
+
+        // Track the best terminal state (max non-forced count, then pb),
+        // subject to "no forced candidate after the last accepted".
+        let mut best_terminal: Option<(usize, f64, u32)> = None;
+        let total_forced = forced_prefix[n];
+
+        let consider_terminal =
+            |key: u32, entry: &Entry, forced_upto: usize,
+             best_terminal: &mut Option<(usize, f64, u32)>| {
+                if forced_upto != total_forced {
+                    return; // skips a forced candidate — not a valid endpoint
+                }
+                let (_, _, counts) = unpack(key);
+                let accepted: usize =
+                    counts.iter().map(|&c| c as usize).sum();
+                let non_forced = accepted - total_forced;
+                let cand = (non_forced, entry.pb, key);
+                let better = match best_terminal {
+                    None => true,
+                    Some((v, pb, _)) => {
+                        cand.0 > *v || (cand.0 == *v && cand.1 > *pb)
+                    }
+                };
+                if better {
+                    *best_terminal = Some(cand);
+                }
+            };
+        consider_terminal(base_key, &Entry { pb: 0.0, parent: u32::MAX }, 0,
+                          &mut best_terminal);
+
+        for _len in 0..n {
+            let mut next: HashMap<u32, Entry> = HashMap::new();
+            for &jkey in &frontier {
+                let entry = all_states[&jkey];
+                let (ji, jmem, jcounts) = unpack(jkey);
+                let j = ji; // 0 = base, else candidate index j-1
+                let j_pddl = if j == 0 { now } else { cands[j - 1].pddl };
+                for i in j..n {
+                    // Continuity: no forced candidate strictly between.
+                    if forced_prefix[i] > forced_prefix[j] {
+                        break; // a forced candidate was skipped
+                    }
+                    let c = &cands[i];
+                    let ci = i + 1;
+                    let add_mem = qmem(c.mem_pages);
+                    if jmem + add_mem > mem_cap {
+                        continue;
+                    }
+                    let dt = c.pddl - j_pddl;
+                    let Some(dpb) = self.pb_star(dt, &jcounts) else {
+                        continue;
+                    };
+                    let pb_new = entry.pb + dpb - c.prefill_tokens as f64;
+                    if pb_new < -1e-9 {
+                        continue;
+                    }
+                    let mut counts = jcounts;
+                    if counts[c.tier] as usize + 1 >= 64 {
+                        continue;
+                    }
+                    counts[c.tier] += 1;
+                    // The enlarged decode set must itself be sustainable.
+                    if self.pb_star(self.cfg.tiers[c.tier], &counts).is_none() {
+                        continue;
+                    }
+                    let key = pack(ci, jmem + add_mem, &counts);
+                    let cand_entry = Entry { pb: pb_new, parent: jkey };
+                    let slot = next.entry(key).or_insert(cand_entry);
+                    if cand_entry.pb > slot.pb {
+                        *slot = cand_entry;
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            // Merge into the global map, keep per-key max.
+            frontier = Vec::with_capacity(next.len());
+            for (key, entry) in next {
+                let slot = all_states.entry(key).or_insert(entry);
+                if entry.pb >= slot.pb {
+                    *slot = entry;
+                }
+                frontier.push(key);
+                let (ci, _, _) = unpack(key);
+                consider_terminal(key, &all_states[&key], forced_prefix[ci],
+                                  &mut best_terminal);
+            }
+        }
+
+        // Reconstruct.
+        let mut admitted = Vec::new();
+        if let Some((_, _, mut key)) = best_terminal {
+            while key != base_key {
+                let (ci, _, _) = unpack(key);
+                admitted.push(cands[ci - 1].id);
+                key = all_states[&key].parent;
+            }
+        }
+        admitted.reverse();
+        let declined: Vec<RequestId> = cands
+            .iter()
+            .map(|c| c.id)
+            .filter(|id| !admitted.contains(id))
+            .chain(overflow)
+            .collect();
+        let value = admitted
+            .iter()
+            .filter(|id| {
+                cands.iter().any(|c| c.id == **id && !c.forced)
+            })
+            .count();
+        Plan { admitted, declined, value }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Hardware;
+
+    fn cfg(running: Vec<usize>, mem: usize, spec: bool) -> DpConfig {
+        DpConfig {
+            tiers: vec![0.050, 0.100],
+            running_counts: running,
+            mem_free_pages: mem,
+            speculative: spec,
+            spec_alpha: 0.8,
+            max_spec_len: 6,
+        }
+    }
+
+    fn cand(id: u64, pddl: f64, prefill: usize, tier: usize) -> Candidate {
+        Candidate {
+            id,
+            pddl,
+            prefill_tokens: prefill,
+            mem_pages: (prefill + 200) / 16,
+            tier,
+            forced: false,
+        }
+    }
+
+    fn model() -> PerfModel {
+        PerfModel::preset(Hardware::A100)
+    }
+
+    #[test]
+    fn admits_everything_under_light_load() {
+        let cfg = cfg(vec![0, 0], 10_000, false);
+        let m = model();
+        let p = DpPlanner::new(&cfg, &m);
+        let cands = vec![
+            cand(1, 1.0, 500, 1),
+            cand(2, 1.5, 600, 1),
+            cand(3, 2.0, 700, 0),
+        ];
+        let plan = p.plan(0.0, &cands);
+        assert_eq!(plan.admitted.len(), 3);
+        assert!(plan.declined.is_empty());
+        assert_eq!(plan.value, 3);
+    }
+
+    #[test]
+    fn declines_when_budget_infeasible() {
+        // Two huge prefills due at (nearly) the same early deadline: the
+        // budget can cover one, not both.
+        let cfg = cfg(vec![0, 0], 10_000, false);
+        let m = model();
+        let budget = m.tokens_within(0.5, 0);
+        let p = DpPlanner::new(&cfg, &m);
+        let cands = vec![
+            cand(1, 0.5, (budget as f64 * 0.8) as usize, 1),
+            cand(2, 0.51, (budget as f64 * 0.8) as usize, 1),
+        ];
+        let plan = p.plan(0.0, &cands);
+        assert_eq!(plan.admitted.len(), 1, "plan={plan:?}");
+        assert_eq!(plan.declined.len(), 1);
+    }
+
+    #[test]
+    fn admitted_prefills_fit_the_token_budget() {
+        // Fig. 5 condition, prefill side: cumulative admitted prefill by
+        // each deadline must fit what the hardware can produce by then
+        // (decode demand here is a few tok/s — noise at this scale).
+        let cfg = cfg(vec![0, 0], 100_000, false);
+        let m = model();
+        let p = DpPlanner::new(&cfg, &m);
+        let mut cands = Vec::new();
+        for i in 0..10 {
+            cands.push(cand(i, 0.3 + 0.25 * i as f64, 2500, (i % 2) as usize));
+        }
+        let plan = p.plan(0.0, &cands);
+        assert!(!plan.admitted.is_empty());
+        assert!(plan.declined.len() >= 2,
+                "25k prefill tokens in 2.5s must overload an A100 model");
+        let mut cum = 0usize;
+        for c in cands.iter().filter(|c| plan.admitted.contains(&c.id)) {
+            cum += c.prefill_tokens;
+            let cap = m.tokens_within(c.pddl, 0);
+            assert!(cum <= cap, "by pDDL {} demand {cum} > capacity {cap}",
+                    c.pddl);
+        }
+    }
+
+    #[test]
+    fn memory_limit_caps_admissions() {
+        let m = model();
+        let tight_mem = cfg(vec![0, 0], 100, false); // 100 pages only
+        let p = DpPlanner::new(&tight_mem, &m);
+        let cands: Vec<Candidate> = (0..6)
+            .map(|i| cand(i, 1.0 + i as f64 * 0.5, 500, 1)) // ~43 pages each
+            .collect();
+        let plan = p.plan(0.0, &cands);
+        assert!(plan.admitted.len() <= 2, "admitted={:?}", plan.admitted);
+    }
+
+    #[test]
+    fn forced_running_requests_always_admitted() {
+        let cfg = cfg(vec![0, 5], 10_000, false);
+        let m = model();
+        let p = DpPlanner::new(&cfg, &m);
+        let mut cands = vec![
+            cand(1, 0.4, 1500, 1),
+            cand(2, 0.8, 1500, 1),
+            cand(3, 1.2, 1500, 0),
+        ];
+        cands[1].forced = true;
+        let plan = p.plan(0.0, &cands);
+        assert!(plan.admitted.contains(&2), "forced must be admitted");
+    }
+
+    #[test]
+    fn forced_requests_constrain_but_dont_add_value() {
+        let cfg = cfg(vec![0, 0], 10_000, false);
+        let m = model();
+        let p = DpPlanner::new(&cfg, &m);
+        let mut cands = vec![cand(1, 0.5, 100, 1)];
+        cands[0].forced = true;
+        let plan = p.plan(0.0, &cands);
+        assert_eq!(plan.admitted, vec![1]);
+        assert_eq!(plan.value, 0);
+    }
+
+    #[test]
+    fn running_decodes_shrink_prefill_capacity() {
+        let m = model();
+        let idle = cfg(vec![0, 0], 100_000, false);
+        let busy = cfg(vec![250, 0], 100_000, false); // heavy tight decode load
+        let cands: Vec<Candidate> = (0..8)
+            .map(|i| cand(i, 0.5 + 0.2 * i as f64, 3000, 1))
+            .collect();
+        let a = DpPlanner::new(&idle, &m).plan(0.0, &cands);
+        let b = DpPlanner::new(&busy, &m).plan(0.0, &cands);
+        assert!(b.admitted.len() < a.admitted.len(),
+                "idle={} busy={}", a.admitted.len(), b.admitted.len());
+    }
+
+    #[test]
+    fn speculative_solver_admits_at_least_as_many() {
+        let m = model();
+        let cands: Vec<Candidate> = (0..10)
+            .map(|i| cand(i, 0.4 + 0.15 * i as f64, 2000, (i % 2) as usize))
+            .collect();
+        let ar = DpPlanner::new(&cfg(vec![40, 40], 100_000, false), &m)
+            .plan(0.0, &cands);
+        let sp = DpPlanner::new(&cfg(vec![40, 40], 100_000, true), &m)
+            .plan(0.0, &cands);
+        assert!(sp.admitted.len() >= ar.admitted.len(),
+                "spec={} ar={}", sp.admitted.len(), ar.admitted.len());
+    }
+
+    #[test]
+    fn overflow_candidates_are_declined_not_lost() {
+        let cfg = cfg(vec![0, 0], 1_000_000, false);
+        let m = model();
+        let p = DpPlanner::new(&cfg, &m);
+        let cands: Vec<Candidate> = (0..40)
+            .map(|i| cand(i, 1.0 + 0.1 * i as f64, 10, 1))
+            .collect();
+        let plan = p.plan(0.0, &cands);
+        let mut all: Vec<u64> = plan.admitted.iter()
+            .chain(plan.declined.iter()).copied().collect();
+        all.sort();
+        assert_eq!(all, (0..40).collect::<Vec<_>>());
+        assert!(plan.admitted.len() <= MAX_CANDIDATES);
+    }
+
+    #[test]
+    fn empty_input_empty_plan() {
+        let cfg = cfg(vec![0, 0], 1000, false);
+        let m = model();
+        let plan = DpPlanner::new(&cfg, &m).plan(0.0, &[]);
+        assert!(plan.admitted.is_empty());
+        assert!(plan.declined.is_empty());
+    }
+}

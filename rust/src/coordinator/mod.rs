@@ -1,0 +1,20 @@
+//! The paper's L3 contribution: SLO-optimized scheduling with soft
+//! admission control (§3, §4.1).
+//!
+//! * [`perf_model`] — generalized roofline batch-time estimator (§3.1.1).
+//! * [`request`] — multi-stage requests with per-stage SLOs (Tab. 1).
+//! * [`budget`] — Fig. 5 demand-line/budget-curve feasibility geometry.
+//! * [`batch_formation`] — Alg. 2: EDF decode allocation + dynamic batch
+//!   size tuning; the `PB*(t, n)` prefill-budget solver (Eqn. 3).
+//! * [`spec_decode`] — App. D: SLO-adaptive speculation lengths.
+//! * [`dp`] — §3.2.1: the multi-SLO dynamic program over admission.
+//! * [`scheduler`] — Alg. 1's `Schedule()`: ties the DP, solvers, and
+//!   best-effort tier together and emits executable batches.
+
+pub mod batch_formation;
+pub mod budget;
+pub mod dp;
+pub mod perf_model;
+pub mod request;
+pub mod scheduler;
+pub mod spec_decode;

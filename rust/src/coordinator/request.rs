@@ -1,0 +1,432 @@
+//! Multi-stage requests with per-stage SLOs (paper §2.1, Tab. 1).
+//!
+//! A request is a chain of stages; each stage is a prefill-like part
+//! (prompt, tool result, ...) measured by TTFT plus a decode-like part
+//! (generation, thinking, ...) measured by TPOT. Classic prefill+decode is
+//! one stage; Reasoning is two (think tight, respond loose); ToolLLM is
+//! `2.7 +- 1.1` stages whose inner prefills are the tool responses.
+
+use crate::config::SloSpec;
+
+pub type RequestId = u64;
+
+/// What a stage represents (scheduling treats all alike; kinds matter for
+/// metrics and workload construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Initial prompt processing + response generation.
+    Main,
+    /// Reasoning model's thinking stage.
+    Think,
+    /// Tool-call loop iteration (tool response prefill + arg generation).
+    ToolCall,
+    /// Final response after thinking / tool use.
+    Respond,
+}
+
+/// One prefill+decode pair with its SLOs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stage {
+    pub kind: StageKind,
+    /// Tokens that must be processed prefill-style before decoding starts.
+    pub prefill_tokens: usize,
+    /// Tokens generated one (or spec-length) at a time.
+    pub decode_tokens: usize,
+    pub slo: SloSpec,
+}
+
+/// Which service tier a request is currently handled under (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceTier {
+    /// SLO-guaranteed: admitted by the scheduler.
+    Standard,
+    /// Best-effort: declined or burst-deferred; no SLO guarantee.
+    BestEffort,
+}
+
+/// Execution phase of the *current* stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for admission (not yet scheduled).
+    Pending,
+    /// Prefilling the current stage's input.
+    Prefill,
+    /// Decoding the current stage's output.
+    Decode,
+    Finished,
+}
+
+/// A serving request plus all its runtime state. The scheduler reads the
+/// static description (stages, SLOs, memory demand) and advances the
+/// progress counters as batches execute.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub stages: Vec<Stage>,
+    /// Admission value `v_i` for the DP objective (1.0 = request throughput).
+    pub value: f64,
+    pub tier: ServiceTier,
+
+    // ---- progress ----
+    pub stage_idx: usize,
+    pub phase: Phase,
+    /// Prefill tokens of the current stage already processed.
+    pub prefill_done: usize,
+    /// Decode tokens of the current stage already generated.
+    pub decode_done: usize,
+    /// Absolute prefill deadline of the current stage (set on stage entry).
+    pub pddl: f64,
+    /// When the current stage's prefill finished (TTFT measurement).
+    pub prefill_finished_at: Option<f64>,
+    /// Completion times of generated tokens in the current stage, relative
+    /// decode-SLO checks are done per token (paper: every 10 for spec).
+    pub token_times: Vec<f64>,
+    /// Per-stage (ttft, deadline, tpot_p_avg, tpot_slo, met) records.
+    pub stage_records: Vec<StageRecord>,
+    /// Times this request was re-routed between replicas (§4.2).
+    pub route_hops: u32,
+    /// Preemption count (best-effort tier, §4.1).
+    pub preemptions: u32,
+    /// KV tokens to re-prefill before progress can resume after a
+    /// best-effort preemption (generated tokens are retained; only the
+    /// cache is recomputed — §4.1).
+    pub recompute_pending: usize,
+}
+
+/// Outcome record for one completed stage.
+#[derive(Debug, Clone, Copy)]
+pub struct StageRecord {
+    pub kind: StageKind,
+    pub prefill_deadline: f64,
+    pub prefill_finished: f64,
+    /// Worst observed inter-token time over the stage's decode windows.
+    pub worst_tpot: f64,
+    pub tpot_slo: f64,
+}
+
+impl StageRecord {
+    pub fn ttft_met(&self) -> bool {
+        self.prefill_finished <= self.prefill_deadline + 1e-9
+    }
+
+    pub fn tpot_met(&self) -> bool {
+        self.worst_tpot <= self.tpot_slo + 1e-9
+    }
+
+    pub fn met(&self) -> bool {
+        self.ttft_met() && self.tpot_met()
+    }
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, stages: Vec<Stage>) -> Self {
+        assert!(!stages.is_empty(), "request must have at least one stage");
+        Request {
+            id,
+            arrival,
+            stages,
+            value: 1.0,
+            tier: ServiceTier::Standard,
+            stage_idx: 0,
+            phase: Phase::Pending,
+            prefill_done: 0,
+            decode_done: 0,
+            pddl: f64::INFINITY,
+            prefill_finished_at: None,
+            token_times: Vec::new(),
+            stage_records: Vec::new(),
+            route_hops: 0,
+            preemptions: 0,
+            recompute_pending: 0,
+        }
+    }
+
+    /// Single-stage convenience constructor.
+    pub fn simple(id: RequestId, arrival: f64, prefill: usize, decode: usize,
+                  slo: SloSpec) -> Self {
+        Request::new(id, arrival, vec![Stage {
+            kind: StageKind::Main,
+            prefill_tokens: prefill,
+            decode_tokens: decode,
+            slo,
+        }])
+    }
+
+    pub fn stage(&self) -> &Stage {
+        &self.stages[self.stage_idx]
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Total tokens across all stages — the request's KV footprint upper
+    /// bound (`m_i` in the DP, in tokens; the allocator maps to pages).
+    pub fn total_tokens(&self) -> usize {
+        self.stages.iter().map(|s| s.prefill_tokens + s.decode_tokens).sum()
+    }
+
+    /// KV tokens currently held.
+    pub fn tokens_held(&self) -> usize {
+        let past: usize = self.stages[..self.stage_idx]
+            .iter()
+            .map(|s| s.prefill_tokens + s.decode_tokens)
+            .sum();
+        past + self.prefill_done + self.decode_done
+    }
+
+    /// Remaining prefill tokens in the current stage.
+    pub fn prefill_remaining(&self) -> usize {
+        self.stage().prefill_tokens.saturating_sub(self.prefill_done)
+    }
+
+    /// Remaining decode tokens in the current stage.
+    pub fn decode_remaining(&self) -> usize {
+        self.stage().decode_tokens.saturating_sub(self.decode_done)
+    }
+
+    /// Tightest TPOT across *remaining* stages — the paper upper-bounds a
+    /// multi-decode-SLO request's demand by its tightest SLO (§3.2.1).
+    pub fn tightest_tpot(&self) -> f64 {
+        self.stages[self.stage_idx..]
+            .iter()
+            .map(|s| s.slo.tpot)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Enter the current stage at time `now`: set the prefill deadline from
+    /// the zero-load prefill latency estimate.
+    pub fn begin_stage(&mut self, now: f64, zero_load_prefill: f64) {
+        let slo = self.stage().slo;
+        self.pddl = now + slo.ttft_slowdown * zero_load_prefill;
+        self.prefill_done = 0;
+        self.decode_done = 0;
+        self.prefill_finished_at = None;
+        self.token_times.clear();
+        if self.stage().prefill_tokens > 0 {
+            self.phase = Phase::Prefill;
+        } else {
+            // Decode-only stage (e.g. Respond after Think): TTFT is
+            // trivially met and the decode clock starts now.
+            self.phase = Phase::Decode;
+            self.prefill_finished_at = Some(now);
+            self.token_times.push(now);
+        }
+    }
+
+    /// Advance prefill by `tokens`, finishing at `t`. Returns true if the
+    /// stage's prefill completed (TTFT recorded).
+    pub fn advance_prefill(&mut self, tokens: usize, t: f64) -> bool {
+        debug_assert!(matches!(self.phase, Phase::Prefill));
+        self.prefill_done += tokens;
+        debug_assert!(self.prefill_done <= self.stage().prefill_tokens);
+        if self.prefill_done >= self.stage().prefill_tokens {
+            self.prefill_finished_at = Some(t);
+            self.phase = Phase::Decode;
+            // The first decode token's clock starts at prefill completion.
+            self.token_times.push(t);
+            if self.stage().decode_tokens == 0 {
+                self.complete_stage(t);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record `tokens` decode tokens completing at `t` (spec decoding can
+    /// deliver several at once). Returns true if the stage finished.
+    pub fn advance_decode(&mut self, tokens: usize, t: f64) -> bool {
+        debug_assert!(matches!(self.phase, Phase::Decode));
+        let n = tokens.min(self.decode_remaining());
+        self.decode_done += n;
+        for _ in 0..n {
+            self.token_times.push(t);
+        }
+        if self.decode_remaining() == 0 {
+            self.complete_stage(t);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn complete_stage(&mut self, t: f64) {
+        let stage = self.stages[self.stage_idx];
+        let worst = self.worst_tpot();
+        self.stage_records.push(StageRecord {
+            kind: stage.kind,
+            prefill_deadline: self.pddl,
+            prefill_finished: self.prefill_finished_at.unwrap_or(t),
+            worst_tpot: worst,
+            tpot_slo: stage.slo.tpot,
+        });
+        if self.stage_idx + 1 < self.stages.len() {
+            self.stage_idx += 1;
+            self.phase = Phase::Pending; // next stage re-enters via begin_stage
+        } else {
+            self.phase = Phase::Finished;
+        }
+    }
+
+    /// Worst per-token latency over 10-token windows (paper §6: "we measure
+    /// the TPOT every 10 tokens" because spec decoding emits in groups).
+    /// Windows are full 10-gap spans; the trailing window is anchored at
+    /// the end (last 10 gaps) rather than averaged over a 1-2 gap stub —
+    /// a 1-gap "window" would make the metric per-token, not per-10.
+    pub fn worst_tpot(&self) -> f64 {
+        const WINDOW: usize = 10;
+        let times = &self.token_times;
+        let n = times.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let gaps = n - 1;
+        if gaps <= WINDOW {
+            return (times[n - 1] - times[0]) / gaps as f64;
+        }
+        let mut worst: f64 = 0.0;
+        let mut i = 0;
+        while i + WINDOW < n {
+            let dt = (times[i + WINDOW] - times[i]) / WINDOW as f64;
+            worst = worst.max(dt);
+            i += WINDOW;
+        }
+        // Trailing window: the last 10 gaps.
+        let dt = (times[n - 1] - times[n - 1 - WINDOW]) / WINDOW as f64;
+        worst.max(dt)
+    }
+
+    /// Did every completed stage meet both of its SLOs? Only meaningful once
+    /// finished.
+    pub fn slo_attained(&self) -> bool {
+        debug_assert!(self.is_finished());
+        self.stage_records.iter().all(|r| r.met())
+    }
+
+    /// Best-effort preemption (§4.1): KV pages are dropped but generated
+    /// tokens are kept; resumption recomputes the KV with prefill passes
+    /// over prompt + previously generated tokens (`recompute_pending`),
+    /// instead of repeating the whole decode.
+    pub fn preempt_to_recompute(&mut self) {
+        debug_assert_eq!(self.tier, ServiceTier::BestEffort);
+        self.preemptions += 1;
+        self.recompute_pending = self.tokens_held();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SloSpec, SloTier};
+
+    fn slo() -> SloSpec {
+        SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)
+    }
+
+    #[test]
+    fn lifecycle_single_stage() {
+        let mut r = Request::simple(1, 0.0, 100, 3, slo());
+        assert_eq!(r.phase, Phase::Pending);
+        r.begin_stage(0.0, 0.1);
+        assert_eq!(r.phase, Phase::Prefill);
+        assert!((r.pddl - 0.5).abs() < 1e-12); // 5x slowdown * 0.1
+        assert!(!r.advance_prefill(60, 0.1));
+        assert!(r.advance_prefill(40, 0.2));
+        assert_eq!(r.phase, Phase::Decode);
+        assert!(!r.advance_decode(1, 0.25));
+        assert!(!r.advance_decode(1, 0.30));
+        assert!(r.advance_decode(1, 0.35));
+        assert!(r.is_finished());
+        assert!(r.slo_attained());
+    }
+
+    #[test]
+    fn ttft_violation_detected() {
+        let mut r = Request::simple(1, 0.0, 10, 1, slo());
+        r.begin_stage(0.0, 0.01); // pddl = 0.05
+        r.advance_prefill(10, 1.0); // way late
+        r.advance_decode(1, 1.05);
+        assert!(r.is_finished());
+        assert!(!r.slo_attained());
+        assert!(!r.stage_records[0].ttft_met());
+        assert!(r.stage_records[0].tpot_met());
+    }
+
+    #[test]
+    fn tpot_violation_detected() {
+        let mut r = Request::simple(1, 0.0, 10, 2, slo());
+        r.begin_stage(0.0, 0.1);
+        r.advance_prefill(10, 0.1);
+        r.advance_decode(1, 0.3); // 0.2s/token > 0.1
+        r.advance_decode(1, 0.5);
+        assert!(r.is_finished());
+        assert!(!r.stage_records[0].tpot_met());
+        assert!(!r.slo_attained());
+    }
+
+    #[test]
+    fn multi_stage_progression() {
+        let s = Stage { kind: StageKind::Think, prefill_tokens: 8,
+                        decode_tokens: 2, slo: slo() };
+        let s2 = Stage { kind: StageKind::Respond, prefill_tokens: 0,
+                         decode_tokens: 2, slo: slo() };
+        let mut r = Request::new(7, 0.0, vec![s, s2]);
+        r.begin_stage(0.0, 0.05);
+        r.advance_prefill(8, 0.1);
+        r.advance_decode(2, 0.2);
+        assert_eq!(r.stage_idx, 1);
+        assert_eq!(r.phase, Phase::Pending);
+        r.begin_stage(0.2, 0.0);
+        // No prefill part: straight to decode.
+        assert_eq!(r.phase, Phase::Decode);
+        r.advance_decode(2, 0.4);
+        assert!(r.is_finished());
+        assert_eq!(r.stage_records.len(), 2);
+    }
+
+    #[test]
+    fn tightest_tpot_spans_remaining_stages() {
+        let tight = SloSpec::from_tiers(SloTier::Tight, SloTier::Tight);
+        let loose = slo();
+        let s1 = Stage { kind: StageKind::Think, prefill_tokens: 4,
+                         decode_tokens: 4, slo: tight };
+        let s2 = Stage { kind: StageKind::Respond, prefill_tokens: 0,
+                         decode_tokens: 4, slo: loose };
+        let mut r = Request::new(1, 0.0, vec![s1, s2]);
+        assert_eq!(r.tightest_tpot(), 0.050);
+        r.begin_stage(0.0, 0.01);
+        r.advance_prefill(4, 0.01);
+        r.advance_decode(4, 0.05);
+        assert_eq!(r.stage_idx, 1);
+        assert_eq!(r.tightest_tpot(), 0.100);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut r = Request::simple(1, 0.0, 100, 10, slo());
+        assert_eq!(r.total_tokens(), 110);
+        assert_eq!(r.tokens_held(), 0);
+        r.begin_stage(0.0, 0.1);
+        r.advance_prefill(60, 0.1);
+        assert_eq!(r.tokens_held(), 60);
+        r.advance_prefill(40, 0.2);
+        r.advance_decode(4, 0.3);
+        assert_eq!(r.tokens_held(), 104);
+    }
+
+    #[test]
+    fn spec_decode_grouped_tokens_tpot_window() {
+        let mut r = Request::simple(1, 0.0, 1, 20, slo());
+        r.begin_stage(0.0, 0.1);
+        r.advance_prefill(1, 0.0);
+        // 4 tokens at a time every 0.3s: window-average = 0.075 < 0.1 OK.
+        for i in 1..=5 {
+            r.advance_decode(4, 0.3 * i as f64);
+        }
+        assert!(r.is_finished());
+        assert!(r.stage_records[0].tpot_met(),
+                "worst_tpot={}", r.stage_records[0].worst_tpot);
+    }
+}

@@ -1,0 +1,655 @@
+//! The SLOs-Serve policy (paper Alg. 1): soft admission control via the
+//! multi-SLO DP, batch formation with dynamic size tuning, SLO-adaptive
+//! speculative decoding, and the burst-resilient best-effort tier.
+//!
+//! Per `next_batch` invocation:
+//! 1. If new requests are pending, run the DP planner (§3.2.1): admitted
+//!    requests join the standard tier with their KV reserved; declined
+//!    requests fall to best-effort (§4.1) — or, with burst resilience
+//!    ablated, are force-admitted (the greedy cascade the paper warns of).
+//! 2. Form one batch (§3.2.2/§3.2.3): decode tokens to every standard
+//!    request whose next token is due within the batch window (EDF),
+//!    speculation lengths per tier from the App. D solver, remaining
+//!    budget to standard prefills (earliest deadline first), and any
+//!    leftover to the best-effort tier if memory allows (preempting
+//!    best-effort KV when standard admissions need the pages).
+
+use std::collections::HashMap;
+
+use crate::config::ScenarioConfig;
+use crate::coordinator::batch_formation::{Batch, BatchEntry, EntryKind};
+use crate::coordinator::dp::{Candidate, DpConfig, DpPlanner};
+use crate::coordinator::request::{Phase, Request, RequestId};
+use crate::coordinator::spec_decode::{self, tightened_tpot};
+use crate::sim::{decline_to_best_effort, Policy, ServerState};
+
+/// Canonical decode-SLO tiers (Tab. 3): tight 50 ms, loose 100 ms.
+pub const TIERS: [f64; 2] = [0.050, 0.100];
+
+/// Internal planning headroom: the scheduler targets 92% of each nominal
+/// TPOT so that stochastic hiccups (speculative acceptance variance, batch
+/// quantization) don't turn exact-deadline plans into tail violations of
+/// the windowed TPOT metric.
+pub const HEADROOM: f64 = 0.92;
+
+/// Admission-side headroom: the DP prices token budgets at a further
+/// discount because execution windows shrink below the planning tiers
+/// whenever catch-up tightening or urgency caps kick in — admission must
+/// not promise throughput the batch path won't deliver.
+pub const ADMIT_HEADROOM: f64 = 0.85;
+
+/// Tier TPOTs as the batch-formation planner targets them.
+pub fn planning_tiers() -> Vec<f64> {
+    TIERS.iter().map(|t| t * HEADROOM).collect()
+}
+
+/// Tier TPOTs as the admission DP prices them (more conservative).
+pub fn admission_tiers() -> Vec<f64> {
+    TIERS.iter().map(|t| t * ADMIT_HEADROOM).collect()
+}
+
+/// Map a TPOT to the nearest canonical tier index.
+pub fn tier_of(tpot: f64) -> usize {
+    let mut best = 0;
+    let mut err = f64::INFINITY;
+    for (i, &t) in TIERS.iter().enumerate() {
+        let d = (tpot - t).abs();
+        if d < err {
+            err = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Feature flags for the Fig. 14 ablation study.
+#[derive(Debug, Clone, Copy)]
+pub struct Features {
+    /// SLO-adaptive speculative decoding (§3.2.3).
+    pub speculative: bool,
+    /// Burst-resilient best-effort deferral (§4.1). Off = force-admit.
+    pub burst_resilient: bool,
+    /// DP admission + dynamic batch tuning (§3.2.1/2). Off = the paper's
+    /// "baseline": prefill-oriented scheduling inside our framework.
+    pub slo_scheduling: bool,
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features { speculative: true, burst_resilient: true,
+                   slo_scheduling: true }
+    }
+}
+
+/// The SLOs-Serve scheduling policy (single replica).
+pub struct SlosServe {
+    pub features: Features,
+    spec_alpha: f64,
+    max_spec_len: usize,
+    /// Pages reserved per admitted standard request.
+    reserved: HashMap<RequestId, usize>,
+    /// Scratch declined list from the last plan (for router integration).
+    pub last_declined: Vec<RequestId>,
+}
+
+impl SlosServe {
+    pub fn new(cfg: &ScenarioConfig) -> Self {
+        SlosServe {
+            features: Features { speculative: cfg.speculative,
+                                 ..Features::default() },
+            spec_alpha: cfg.spec_alpha,
+            max_spec_len: cfg.max_spec_len,
+            reserved: HashMap::new(),
+            last_declined: Vec::new(),
+        }
+    }
+
+    pub fn with_features(mut self, f: Features) -> Self {
+        self.features = f;
+        self
+    }
+
+    /// Free pages from the admission planner's viewpoint: total minus
+    /// reservations (best-effort pages are reclaimable via preemption).
+    fn mem_free_pages(&self, st: &ServerState) -> usize {
+        let reserved: usize = self.reserved.values().sum();
+        st.kv.allocator().total_pages().saturating_sub(reserved)
+    }
+
+    /// Effective TPOT of a decoding request (nominal, tightened when it
+    /// has fallen behind — §3.2.3 dynamic SLO adjustment).
+    fn effective_tpot(&self, r: &Request, now: f64) -> f64 {
+        let nominal = r.stage().slo.tpot * HEADROOM;
+        if r.phase != Phase::Decode || r.token_times.is_empty() {
+            return nominal;
+        }
+        let elapsed = now - r.token_times[0];
+        // Withhold ~one tight window from the stage budget so short stages
+        // keep slack for speculative-acceptance variance; floor the
+        // tightening at 85% of nominal — enough catch-up to amortize one
+        // bad round across the 10-token TPOT window, while batch windows
+        // never collapse below the rate admission priced (ADMIT_HEADROOM).
+        tightened_tpot(nominal, r.decode_done, elapsed,
+                       r.stage().decode_tokens, 0.05)
+            .max(nominal * ADMIT_HEADROOM / HEADROOM)
+    }
+
+    /// Cap on the speculative round length: short-remaining decodes can't
+    /// amortize a low-acceptance round over the 10-token TPOT window, so
+    /// while any are running the round must stay within ~1.8x of their
+    /// effective TPOT. `INFINITY` when no short-remaining decode exists.
+    fn spec_round_cap(&self, now: f64, st: &ServerState) -> f64 {
+        st.running
+            .iter()
+            .map(|&id| st.req(id))
+            .filter(|r| r.phase == Phase::Decode
+                    && r.decode_remaining() <= 2 * (self.max_spec_len + 1))
+            .map(|r| {
+                // Unfloored: the round cap must honour the short stage's
+                // true remaining budget even when the batch-rate floor
+                // would round its effective TPOT back up.
+                let nominal = r.stage().slo.tpot * HEADROOM;
+                let elapsed = now - r.token_times.first().copied()
+                    .unwrap_or(now);
+                1.8 * tightened_tpot(nominal, r.decode_done, elapsed,
+                                     r.stage().decode_tokens, 0.05)
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Absolute due time of the request's next decode delivery.
+    ///
+    /// Drift-based, matching the paper's windowed TPOT metric: the next
+    /// delivery is owed `k_last * TPOT` after the previous one, where
+    /// `k_last` is how many tokens that delivery carried (1 for
+    /// auto-regressive; the accepted count for speculative rounds — so a
+    /// round with poor acceptance is owed its next round sooner, the
+    /// §3.2.3 adaptive-tightening behaviour).
+    fn next_due(r: &Request) -> f64 {
+        let Some(&last) = r.token_times.last() else { return 0.0 };
+        let k_last = r
+            .token_times
+            .iter()
+            .rev()
+            .take_while(|&&t| (t - last).abs() < 1e-12)
+            .count()
+            .max(1);
+        last + k_last as f64 * r.stage().slo.tpot * HEADROOM
+    }
+
+    /// Run DP admission over pending requests (Alg. 1 line 2).
+    fn admit(&mut self, now: f64, st: &mut ServerState) {
+        if st.pending.is_empty() {
+            return;
+        }
+        if !self.features.slo_scheduling {
+            // Ablation baseline: admit everything greedily.
+            let pending = std::mem::take(&mut st.pending);
+            for id in pending {
+                let pages = st.pages_for_request(st.req(id));
+                self.reserved.insert(id, pages);
+                st.running.push(id);
+            }
+            return;
+        }
+        let mut candidates: Vec<Candidate> = Vec::new();
+        for &id in &st.pending {
+            let r = st.req(id);
+            candidates.push(Candidate {
+                id,
+                pddl: r.pddl,
+                prefill_tokens: r.prefill_remaining(),
+                mem_pages: st.pages_for_request(r),
+                tier: tier_of(r.tightest_tpot()),
+                forced: false,
+            });
+        }
+        // Forced: admitted requests still prefilling (their memory is
+        // already reserved, so mem cost 0 here).
+        let mut running_counts = vec![0usize; TIERS.len()];
+        for &id in &st.running {
+            let r = st.req(id);
+            match r.phase {
+                Phase::Prefill => candidates.push(Candidate {
+                    id,
+                    pddl: r.pddl,
+                    prefill_tokens: r.prefill_remaining(),
+                    mem_pages: 0,
+                    tier: tier_of(r.tightest_tpot()),
+                    forced: true,
+                }),
+                Phase::Decode => {
+                    running_counts[tier_of(self.effective_tpot(r, now))] += 1;
+                }
+                _ => {}
+            }
+        }
+        let dp_cfg = DpConfig {
+            tiers: admission_tiers(),
+            running_counts,
+            mem_free_pages: self.mem_free_pages(st),
+            speculative: self.features.speculative,
+            // Same discounted acceptance the batch-formation path plans
+            // with — admission must not price budget execution won't have.
+            spec_alpha: self.spec_alpha * 0.9,
+            max_spec_len: self.max_spec_len,
+        };
+        let plan = DpPlanner::new(&dp_cfg, &st.model).plan(now, &candidates);
+        self.last_declined.clear();
+        let pending = std::mem::take(&mut st.pending);
+        for id in pending {
+            if plan.admitted.contains(&id) {
+                let pages = st.pages_for_request(st.req(id));
+                self.reserved.insert(id, pages);
+                st.running.push(id);
+            } else if self.features.burst_resilient {
+                st.pending.push(id); // temporarily, for the helper below
+                decline_to_best_effort(st, id);
+                self.last_declined.push(id);
+            } else {
+                // Ablated burst resilience: greedy force-admission.
+                let pages = st.pages_for_request(st.req(id));
+                self.reserved.insert(id, pages);
+                st.running.push(id);
+            }
+        }
+    }
+
+    /// Preempt best-effort requests (drop KV, keep tokens) until at least
+    /// `pages` pages are free (§4.1).
+    fn preempt_best_effort(&self, st: &mut ServerState, pages: usize) {
+        let mut i = 0;
+        while st.kv.allocator().free_pages() < pages && i < st.best_effort.len() {
+            let id = st.best_effort[i];
+            if st.kv.tokens_of(id) > 0 {
+                st.kv.release(id);
+                st.req_mut(id).preempt_to_recompute();
+            }
+            i += 1;
+        }
+    }
+}
+
+impl Policy for SlosServe {
+    fn name(&self) -> &'static str {
+        "slos-serve"
+    }
+
+    fn next_batch(&mut self, now: f64, st: &mut ServerState) -> Option<Batch> {
+        self.admit(now, st);
+
+        // ---- gather standard-tier work ----
+        let mut decodes: Vec<(RequestId, f64, f64)> = Vec::new(); // (id, due, tpot)
+        let mut prefills: Vec<(RequestId, f64, usize)> = Vec::new(); // (id, pddl, rem)
+        let mut tier_counts = vec![0usize; TIERS.len()];
+        // Per-tier *effective* TPOT: the tier's planning value, tightened
+        // to the most-behind request in that tier (§3.2.3 — a lagging
+        // request shrinks the binding window until it catches up).
+        let mut tier_eff = planning_tiers();
+        for &id in &st.running {
+            let r = st.req(id);
+            match r.phase {
+                Phase::Decode => {
+                    let tpot = self.effective_tpot(r, now);
+                    let l = tier_of(tpot);
+                    decodes.push((id, Self::next_due(r), tpot));
+                    tier_counts[l] += 1;
+                    tier_eff[l] = tier_eff[l].min(tpot);
+                }
+                Phase::Prefill => {
+                    prefills.push((id, r.pddl, r.prefill_remaining()));
+                }
+                _ => {}
+            }
+        }
+
+        // ---- batch window + speculation plan (§3.2.2 / §3.2.3) ----
+        let (mut window, mut spec_lens, mut spec_step) = if decodes.is_empty() {
+            (st.model.batch_time(st.model.max_batch_tokens, 0),
+             vec![0; TIERS.len()], 0)
+        } else if self.features.speculative {
+            // Plan with a discounted acceptance rate: sampled acceptance
+            // below its mean must not translate into TPOT misses (the
+            // §3.2.3 uncertainty adjustment). Round length capped while
+            // short-remaining requests run.
+            match spec_decode::solve_capped(&tier_eff, &tier_counts,
+                                            self.spec_alpha * 0.9,
+                                            self.max_spec_len, &st.model,
+                                            self.spec_round_cap(now, st)) {
+                Some(plan) => {
+                    let step = *plan.spec_lens.iter().max().unwrap();
+                    (plan.batch_time, plan.spec_lens, step)
+                }
+                None => ar_window(&decodes, st),
+            }
+        } else {
+            ar_window(&decodes, st)
+        };
+        // Urgent prefill deadlines cap the window: prefill completion
+        // counts at batch *end*, so a window straddling a pDDL misses it
+        // even when the tokens fit. Cap only when a shorter auto-regressive
+        // batch can actually finish the urgent prefill in time — otherwise
+        // (deadline hopeless or batch too small to fit the work) keep the
+        // throughput-optimal window.
+        if let Some(&(_, pddl, rem)) = prefills
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        {
+            let urgency = pddl - now;
+            let feasible =
+                st.model.batch_time(decodes.len().max(1), 0) * 1.0001;
+            if urgency < window
+                && urgency > feasible
+                && st.model.time2bs(urgency, 0) >= rem + decodes.len()
+            {
+                window = urgency;
+                spec_lens = vec![0; TIERS.len()];
+                spec_step = 0;
+            }
+        }
+        let budget_total = st.model.time2bs(window, spec_step);
+
+        // ---- fill: standard decodes due in this window, EDF ----
+        let mut entries: Vec<BatchEntry> = Vec::new();
+        let mut budget = budget_total;
+        decodes.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // AR mode: skip a decode only when the *next* batch still delivers
+        // it on time (due >= end of next batch ~= now + 2 windows). With
+        // drift-based due times this makes loose-TPOT requests skip
+        // alternate tight windows, exactly Alg. 2's allocation.
+        // Speculative mode: every decode verifies in every batch — that is
+        // exactly the allocation `PB*`'s speculative solver priced in
+        // (n_l * (sl_l + 1) tokens per batch), and the batch window
+        // already equals the binding tier's relaxed latency budget.
+        let skip_after = now + 2.0 * window - 1e-9;
+        let mut deferred: Vec<(RequestId, f64)> = Vec::new();
+        for &(id, due, tpot) in &decodes {
+            if budget == 0 {
+                break;
+            }
+            let sl = spec_lens[tier_of(tpot)];
+            if spec_step == 0 && due >= skip_after {
+                deferred.push((id, tpot)); // next batch still makes it
+                continue;
+            }
+            let r = st.req(id);
+            // Slots = drafted + bonus, capped by what's left to decode.
+            let tokens = (sl + 1).min(r.decode_remaining()).min(budget).max(1);
+            entries.push(BatchEntry { id, kind: EntryKind::Decode, tokens });
+            budget = budget.saturating_sub(tokens);
+        }
+
+        // ---- standard prefills, earliest deadline first ----
+        prefills.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for &(id, _pddl, rem) in &prefills {
+            if budget == 0 {
+                break;
+            }
+            let chunk = rem.min(budget);
+            if chunk > 0 {
+                entries.push(BatchEntry { id, kind: EntryKind::Prefill,
+                                          tokens: chunk });
+                budget -= chunk;
+            }
+        }
+
+        // ---- memory: make room for the standard entries ----
+        let std_growth_tokens: usize = entries.iter().map(|e| e.tokens).sum();
+        // Per-entry page rounding: each request's growth rounds up to whole
+        // pages independently (+1 covers the partial-page boundary), so
+        // summing tokens first would under-count and let standard-tier KV
+        // growth fail silently mid-burst.
+        let need_pages: usize = entries
+            .iter()
+            .map(|e| st.kv.allocator().pages_for(e.tokens) + 1)
+            .sum();
+        if st.kv.allocator().free_pages() < need_pages {
+            self.preempt_best_effort(st, need_pages);
+        }
+
+        // ---- best-effort fill with the leftovers (§4.1) ----
+        // The queue head always makes progress: if the pool is exhausted by
+        // other best-effort KV, tail holders are preempted (KV dropped,
+        // tokens kept) to make room — otherwise a full pool of half-done
+        // best-effort prefills deadlocks the tier.
+        if budget > 0 && !st.best_effort.is_empty() {
+            let mut spare_tokens = st
+                .kv
+                .free_tokens()
+                .saturating_sub(std_growth_tokens);
+            let be: Vec<RequestId> = st.best_effort.clone();
+            for (pos, &id) in be.iter().enumerate() {
+                if budget == 0 {
+                    break;
+                }
+                let r = st.req(id);
+                let want = if r.recompute_pending > 0
+                    || r.phase == Phase::Prefill
+                {
+                    let rem = r.recompute_pending + r.prefill_remaining();
+                    (EntryKind::Prefill, rem.min(budget))
+                } else if r.phase == Phase::Decode {
+                    (EntryKind::Decode, 1usize.min(budget))
+                } else {
+                    continue;
+                };
+                let mut chunk = want.1.min(spare_tokens);
+                if pos == 0 && chunk < want.1 {
+                    // Head is memory-starved: preempt tail holders.
+                    let mut j = be.len();
+                    while chunk < want.1 && j > 1 {
+                        j -= 1;
+                        let victim = be[j];
+                        if victim != id && st.kv.tokens_of(victim) > 0 {
+                            st.kv.release(victim);
+                            st.req_mut(victim).preempt_to_recompute();
+                        }
+                        spare_tokens = st
+                            .kv
+                            .free_tokens()
+                            .saturating_sub(std_growth_tokens);
+                        chunk = want.1.min(spare_tokens);
+                    }
+                }
+                if chunk == 0 {
+                    continue;
+                }
+                budget = budget.saturating_sub(chunk);
+                spare_tokens = spare_tokens.saturating_sub(chunk);
+                entries.push(BatchEntry { id, kind: want.0, tokens: chunk });
+            }
+        }
+
+        // ---- work conservation: top up with ahead-of-schedule decodes ----
+        // Delivering decode tokens early never violates a (max) TPOT SLO,
+        // and an idle GPU helps no one.
+        for &(id, tpot) in &deferred {
+            if budget == 0 {
+                break;
+            }
+            let sl = spec_lens[tier_of(tpot)];
+            let r = st.req(id);
+            let tokens = (sl + 1).min(r.decode_remaining()).min(budget).max(1);
+            entries.push(BatchEntry { id, kind: EntryKind::Decode, tokens });
+            budget = budget.saturating_sub(tokens);
+        }
+
+        if entries.is_empty() {
+            None
+        } else {
+            Some(Batch { entries, spec_step })
+        }
+    }
+
+    fn on_finished(&mut self, id: RequestId) {
+        self.reserved.remove(&id);
+        self.last_declined.retain(|&x| x != id);
+    }
+}
+
+/// Auto-regressive window: tightest effective TPOT among running decodes
+/// (Alg. 2 line 1), clamped so one token per running decode always fits —
+/// a hopelessly-behind request may tighten its effective TPOT below the
+/// physically feasible batch time, and the batch must still make progress.
+fn ar_window(decodes: &[(RequestId, f64, f64)], st: &ServerState)
+             -> (f64, Vec<usize>, usize) {
+    let t0 = decodes.iter().map(|d| d.2).fold(f64::INFINITY, f64::min);
+    let t0 = t0.max(st.model.batch_time(decodes.len().max(1), 0) * 1.0001);
+    (t0, vec![0; TIERS.len()], 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, ScenarioConfig, SloSpec, SloTier};
+    use crate::coordinator::request::ServiceTier;
+    use crate::sim::{run, ServerState};
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn req(id: u64, arrival: f64, prefill: usize, decode: usize,
+           pf: SloTier, dc: SloTier) -> Request {
+        Request::simple(id, arrival, prefill, decode,
+                        SloSpec::from_tiers(pf, dc))
+    }
+
+    #[test]
+    fn light_load_all_attained() {
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| req(i, i as f64 * 2.0, 500, 50,
+                         SloTier::Loose, SloTier::Loose))
+            .collect();
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let res = run(&mut p, reqs, &c);
+        assert_eq!(res.metrics.finished, 10);
+        assert_eq!(res.metrics.attainment(), 1.0,
+                   "light load must fully attain; got {:?}", res.metrics);
+    }
+
+    #[test]
+    fn decode_slos_hold_under_moderate_load() {
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, i as f64 * 0.3, 800, 100,
+                         SloTier::Loose, SloTier::Loose))
+            .collect();
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let res = run(&mut p, reqs, &c);
+        // Every *standard-tier finished* request must have met TPOT — the
+        // scheduler's core guarantee for admitted requests.
+        for r in res.requests.iter().filter(|r| {
+            r.tier == ServiceTier::Standard && r.is_finished()
+        }) {
+            for rec in &r.stage_records {
+                assert!(rec.tpot_met(),
+                        "req {} worst_tpot {} > slo {}", r.id,
+                        rec.worst_tpot, rec.tpot_slo);
+            }
+        }
+        assert!(res.metrics.attainment() > 0.8, "{:?}", res.metrics);
+    }
+
+    #[test]
+    fn admitted_requests_meet_ttft_under_burst() {
+        // A burst beyond capacity: declined requests go best-effort, but
+        // every admitted standard request still meets its prefill deadline.
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| req(i, 0.01 * i as f64, 3000, 30,
+                         SloTier::Tight, SloTier::Loose))
+            .collect();
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let res = run(&mut p, reqs, &c);
+        let admitted: Vec<_> = res.requests.iter()
+            .filter(|r| r.tier == ServiceTier::Standard).collect();
+        let declined = res.requests.len() - admitted.len();
+        assert!(declined > 0, "burst should exceed capacity");
+        for r in admitted.iter().filter(|r| r.is_finished()) {
+            for rec in &r.stage_records {
+                assert!(rec.ttft_met(),
+                        "admitted req {} missed TTFT by {}",
+                        r.id, rec.prefill_finished - rec.prefill_deadline);
+            }
+        }
+    }
+
+    #[test]
+    fn best_effort_requests_eventually_complete() {
+        // Burst, then silence: deferred requests finish in the quiet period
+        // (Fig. 11 behaviour).
+        let mut reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, 0.01 * i as f64, 2000, 20,
+                         SloTier::Tight, SloTier::Tight))
+            .collect();
+        // One trailing request far in the future keeps the sim clock alive.
+        reqs.push(req(99, 60.0, 100, 5, SloTier::Loose, SloTier::Loose));
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let res = run(&mut p, reqs, &c);
+        assert_eq!(res.metrics.finished, res.metrics.total,
+                   "all requests (incl. best-effort) should finish: {:?}",
+                   res.metrics);
+        assert!(res.metrics.best_effort > 0);
+    }
+
+    #[test]
+    fn force_admission_without_burst_resilience_cascades() {
+        let mk = || -> Vec<Request> {
+            (0..50)
+                .map(|i| req(i, 0.05 * i as f64, 1500, 40,
+                             SloTier::Tight, SloTier::Loose))
+                .collect()
+        };
+        let c = cfg();
+        let resilient = run(&mut SlosServe::new(&c), mk(), &c);
+        let mut greedy = SlosServe::new(&c);
+        greedy.features.burst_resilient = false;
+        let cascade = run(&mut greedy, mk(), &c);
+        assert!(resilient.metrics.attainment() > cascade.metrics.attainment(),
+                "resilient {} <= cascade {}",
+                resilient.metrics.attainment(), cascade.metrics.attainment());
+    }
+
+    #[test]
+    fn speculative_features_run_and_attain() {
+        let mut c = cfg();
+        c.speculative = true;
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| req(i, i as f64 * 0.4, 600, 120,
+                         SloTier::Loose, SloTier::Tight))
+            .collect();
+        let mut p = SlosServe::new(&c);
+        let res = run(&mut p, reqs, &c);
+        assert!(res.metrics.attainment() > 0.8, "{:?}", res.metrics);
+    }
+
+    #[test]
+    fn tier_of_maps_to_nearest() {
+        assert_eq!(tier_of(0.050), 0);
+        assert_eq!(tier_of(0.100), 1);
+        assert_eq!(tier_of(0.060), 0);
+        assert_eq!(tier_of(0.090), 1);
+    }
+
+    #[test]
+    fn reservations_released_on_finish() {
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let reqs = vec![req(0, 0.0, 200, 5, SloTier::Loose, SloTier::Loose)];
+        let _ = run(&mut p, reqs, &c);
+        assert!(p.reserved.is_empty());
+    }
+
+    #[test]
+    fn no_work_returns_none() {
+        let c = cfg();
+        let mut p = SlosServe::new(&c);
+        let mut st = ServerState::new(&c);
+        assert!(p.next_batch(0.0, &mut st).is_none());
+    }
+}

@@ -1,0 +1,283 @@
+//! SLO-adaptive speculative decoding (paper §3.2.3, Appendix D).
+//!
+//! With a drafter of per-token acceptance probability `alpha`, verifying
+//! `sl` drafted tokens yields `Acc(sl) = (1 - alpha^(sl+1)) / (1 - alpha)`
+//! expected output tokens (geometric acceptance + the bonus token). A batch
+//! that gives tier-l requests `sl_l` speculative tokens may therefore take
+//! up to `TPOT_l * Acc(sl_l)` seconds without violating tier l — relaxing
+//! the per-batch latency constraint and unlocking bigger batches. The
+//! solver picks per-tier speculation lengths maximizing the *prefill token
+//! throughput* (the paper's objective in Eqn. 3's speculative variant).
+
+use crate::coordinator::perf_model::PerfModel;
+
+/// Expected generated tokens when verifying `sl` drafted tokens with
+/// per-token acceptance `alpha` (App. D; includes the verifier's bonus
+/// token, so `Acc(0) = 1` = plain auto-regressive decoding).
+pub fn acc(alpha: f64, sl: usize) -> f64 {
+    if (alpha - 1.0).abs() < 1e-12 {
+        return (sl + 1) as f64;
+    }
+    (1.0 - alpha.powi(sl as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Solver output: the chosen speculation plan for one batch shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecPlan {
+    /// Speculation length per TPOT tier (0 = auto-regressive for that tier).
+    pub spec_lens: Vec<usize>,
+    /// Planned batch duration (= min_l TPOT_l * Acc(sl_l)).
+    pub batch_time: f64,
+    /// Tokens left for prefill after decode allocations.
+    pub prefill_budget: usize,
+    /// Prefill tokens per second — the solver's objective.
+    pub prefill_tpt: f64,
+}
+
+/// Solve App. D: maximize prefill throughput over per-tier speculation
+/// lengths. `tpots[l]`/`counts[l]` describe the decoding requests per tier.
+/// Enumerates the binding tier `l*` and its `sl` (both small), derives the
+/// other tiers' minimal `sl` in closed form, and keeps the best plan.
+/// Always also evaluates the pure auto-regressive plan (`sl = 0`), since
+/// speculation is not always beneficial.
+pub fn solve(tpots: &[f64], counts: &[usize], alpha: f64, max_sl: usize,
+             m: &PerfModel) -> Option<SpecPlan> {
+    solve_capped(tpots, counts, alpha, max_sl, m, f64::INFINITY)
+}
+
+/// [`solve`] with an upper bound on the batch time. Short-remaining
+/// requests can't amortize a low-acceptance round over the 10-token TPOT
+/// window unless rounds stay short, so callers cap the round length at
+/// ~1.8x the tightest active tier when such requests are running.
+pub fn solve_capped(tpots: &[f64], counts: &[usize], alpha: f64,
+                    max_sl: usize, m: &PerfModel, max_batch_time: f64)
+                    -> Option<SpecPlan> {
+    debug_assert_eq!(tpots.len(), counts.len());
+    let live: Vec<usize> = (0..tpots.len()).filter(|&l| counts[l] > 0).collect();
+    if live.is_empty() {
+        return Some(SpecPlan {
+            spec_lens: vec![0; tpots.len()],
+            batch_time: m.batch_time(m.max_batch_tokens, 0),
+            prefill_budget: m.max_batch_tokens,
+            prefill_tpt: m.peak_throughput(),
+        });
+    }
+
+    let mut best: Option<SpecPlan> = None;
+    // Candidate binding tiers and their speculation length.
+    for &lstar in &live {
+        for sl_star in 0..=max_sl {
+            let t = tpots[lstar] * acc(alpha, sl_star);
+            if t > max_batch_time {
+                continue;
+            }
+            // Other tiers: smallest sl with TPOT_l * Acc(sl) >= t, i.e.
+            // enough expected tokens per batch to hold their rate.
+            let mut spec_lens = vec![0usize; tpots.len()];
+            let mut ok = true;
+            for &l in &live {
+                if l == lstar {
+                    spec_lens[l] = sl_star;
+                    continue;
+                }
+                match (0..=max_sl).find(|&sl| tpots[l] * acc(alpha, sl) >= t - 1e-12) {
+                    Some(sl) => spec_lens[l] = sl,
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            // The batch processes sl_l + 1 tokens per tier-l request
+            // (drafted + bonus slot) when speculating, 1 when sl = 0.
+            let verify_tokens: usize = live
+                .iter()
+                .map(|&l| counts[l] * (spec_lens[l] + 1))
+                .sum();
+            let spec_step = live.iter().map(|&l| spec_lens[l]).max().unwrap();
+            let bs = m.time2bs(t, spec_step);
+            if bs < verify_tokens {
+                continue; // decode verification alone doesn't fit
+            }
+            let prefill_budget = bs - verify_tokens;
+            let prefill_tpt = prefill_budget as f64 / t;
+            let better = match &best {
+                None => true,
+                Some(b) => prefill_tpt > b.prefill_tpt + 1e-9,
+            };
+            if better {
+                best = Some(SpecPlan {
+                    spec_lens,
+                    batch_time: t,
+                    prefill_budget,
+                    prefill_tpt,
+                });
+            }
+        }
+    }
+    best
+}
+
+/// `PB*(t, n⃗)` under speculative decoding: prefill budget generated over an
+/// interval `t` using the optimal speculation plan.
+pub fn prefill_budget_spec(t: f64, tpots: &[f64], counts: &[usize],
+                           alpha: f64, max_sl: usize, m: &PerfModel)
+                           -> Option<f64> {
+    // Price with a *conservative* round-length cap (1.3x the tightest
+    // active tier): execution's own cap flaps with the set of
+    // short-remaining requests, and admission must promise only what the
+    // worst execution mode still delivers — TTFT guarantees hinge on it.
+    let tightest_active = tpots
+        .iter()
+        .zip(counts)
+        .filter(|&(_, &c)| c > 0)
+        .map(|(&t, _)| t)
+        .fold(f64::INFINITY, f64::min);
+    let plan = solve_capped(tpots, counts, alpha, max_sl, m,
+                            1.3 * tightest_active)?;
+    if plan.batch_time <= 0.0 {
+        return None;
+    }
+    // Whole speculative windows, plus the auto-regressive budget of the
+    // trailing partial window (speculation windows are long — without the
+    // remainder, any interval shorter than one window reports zero).
+    let n_batches = (t / plan.batch_time).floor();
+    let rest = t - n_batches * plan.batch_time;
+    let ar_rest = crate::coordinator::batch_formation::prefill_budget_ar(
+        rest, tpots, counts, m)?;
+    let spec = n_batches * plan.prefill_budget as f64 + ar_rest;
+    // Speculation is optional — never do worse than pure AR.
+    let ar = crate::coordinator::batch_formation::prefill_budget_ar(
+        t, tpots, counts, m)?;
+    Some(spec.max(ar))
+}
+
+/// Dynamic SLO adjustment (§3.2.3): when a request has fallen behind its
+/// decode SLO (observed TPOT above target), tighten its tier's TPOT for
+/// the next planning round proportionally to the deficit. `safety` seconds
+/// are withheld from the stage budget up front, so short stages keep
+/// slack to absorb one unlucky speculative round.
+pub fn tightened_tpot(nominal: f64, tokens_done: usize, elapsed: f64,
+                      tokens_total: usize, safety: f64) -> f64 {
+    if tokens_total <= tokens_done {
+        return nominal;
+    }
+    let deadline = tokens_total as f64 * nominal - safety;
+    let remaining_time = deadline - elapsed;
+    let remaining_tokens = (tokens_total - tokens_done) as f64;
+    if remaining_time <= 0.0 {
+        return nominal * 0.5; // hopelessly behind: strongest boost we give
+    }
+    (remaining_time / remaining_tokens).min(nominal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Hardware;
+
+    fn m() -> PerfModel {
+        PerfModel::preset(Hardware::A100)
+    }
+
+    #[test]
+    fn acc_properties() {
+        assert!((acc(0.7, 0) - 1.0).abs() < 1e-12);
+        // Monotone increasing in sl, bounded by 1/(1-alpha).
+        let mut prev = 0.0;
+        for sl in 0..10 {
+            let a = acc(0.7, sl);
+            assert!(a > prev);
+            assert!(a < 1.0 / 0.3 + 1e-9);
+            prev = a;
+        }
+        // alpha=1: every draft accepted.
+        assert!((acc(1.0, 4) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speculation_beats_ar_for_decode_heavy_tight_slo() {
+        // Many tight-TPOT decoders: AR caps batches at 50 ms; speculation
+        // relaxes to ~Acc * 50 ms and lifts prefill throughput (the paper's
+        // ChatBot/Summarizer 2x ablation).
+        let m = m();
+        let plan = solve(&[0.050], &[100], 0.7, 8, &m).unwrap();
+        assert!(plan.spec_lens[0] > 0, "expected speculation, got AR");
+        // Compare against forced AR:
+        let ar = solve(&[0.050], &[100], 0.7, 0, &m).unwrap();
+        assert!(plan.prefill_tpt > ar.prefill_tpt,
+                "spec {} <= ar {}", plan.prefill_tpt, ar.prefill_tpt);
+    }
+
+    #[test]
+    fn ar_chosen_when_alpha_is_tiny() {
+        // Worthless drafter: verification overhead (k2 per spec step) never
+        // pays off; solver must fall back to sl = 0.
+        let m = m();
+        let plan = solve(&[0.050], &[10], 0.05, 8, &m).unwrap();
+        assert_eq!(plan.spec_lens, vec![0]);
+    }
+
+    #[test]
+    fn batch_time_respects_binding_tier() {
+        let m = m();
+        let plan = solve(&[0.050, 0.100], &[5, 5], 0.7, 8, &m).unwrap();
+        for (l, &sl) in plan.spec_lens.iter().enumerate() {
+            let slack = [0.050, 0.100][l] * acc(0.7, sl);
+            assert!(plan.batch_time <= slack + 1e-9,
+                    "tier {l} violated: batch {} > {}", plan.batch_time, slack);
+        }
+    }
+
+    #[test]
+    fn infeasible_when_too_many_decoders() {
+        let m = m();
+        // max tokens per batch is 2048; 3000 tight decoders can never fit.
+        assert!(solve(&[0.050], &[3000], 0.7, 8, &m).is_none());
+    }
+
+    #[test]
+    fn empty_tiers_pure_prefill() {
+        let m = m();
+        let plan = solve(&[0.05, 0.1], &[0, 0], 0.7, 8, &m).unwrap();
+        assert_eq!(plan.prefill_budget, m.max_batch_tokens);
+    }
+
+    #[test]
+    fn budget_spec_geq_budget_ar() {
+        let m = m();
+        let t = 2.0;
+        let tpots = [0.050, 0.100];
+        let counts = [20, 30];
+        let spec = prefill_budget_spec(t, &tpots, &counts, 0.7, 8, &m).unwrap();
+        let ar = crate::coordinator::batch_formation::prefill_budget_ar(
+            t, &tpots, &counts, &m).unwrap();
+        assert!(spec >= ar * 0.95, "spec={spec} ar={ar}");
+    }
+
+    #[test]
+    fn tightened_tpot_boosts_lagging_requests() {
+        // 100-token stage at 100 ms TPOT; 20 tokens done at t = 5 s means
+        // we're behind (should be 50): remaining 80 tokens in 5 s => 62 ms.
+        let t = tightened_tpot(0.100, 20, 5.0, 100, 0.0);
+        assert!(t < 0.100);
+        assert!((t - 5.0 / 80.0).abs() < 1e-9);
+        // On-schedule request keeps its nominal TPOT.
+        let t2 = tightened_tpot(0.100, 60, 5.0, 100, 0.0);
+        assert_eq!(t2, 0.100);
+    }
+
+    #[test]
+    fn safety_margin_pretightens_short_stages() {
+        // 4-token stage: withholding 50 ms pre-tightens from the start.
+        let t = tightened_tpot(0.046, 0, 0.0, 4, 0.05);
+        assert!(t < 0.046, "t={t}");
+        assert!((t - (4.0 * 0.046 - 0.05) / 4.0).abs() < 1e-9);
+        // Long stage: negligible effect.
+        let t2 = tightened_tpot(0.046, 0, 0.0, 200, 0.05);
+        assert!((t2 - 0.046).abs() < 1e-3);
+    }
+}

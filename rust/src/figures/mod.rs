@@ -1,0 +1,472 @@
+//! Regeneration of every table/figure in the paper's evaluation (§6).
+//! Shared by the CLI (`slos-serve figure <id>`) and the criterion benches.
+//! Each function prints the rows/series the paper reports and returns the
+//! data for programmatic use.
+
+use crate::baselines::{self, Sarathi, Vllm};
+use crate::config::{Hardware, Scenario, ScenarioConfig, SloSpec};
+use crate::coordinator::perf_model::{PerfModel, Term};
+use crate::coordinator::request::Request;
+use crate::coordinator::scheduler::{Features, SlosServe};
+use crate::metrics::capacity_search;
+use crate::router::{run_multi_replica, RouterConfig};
+use crate::sim::{run, Policy};
+use crate::workload::{self, Rng};
+
+pub const SYSTEMS: [&str; 5] =
+    ["slos-serve", "vllm", "vllm-spec", "sarathi", "distserve"];
+
+pub fn make_policy(name: &str, cfg: &ScenarioConfig) -> Box<dyn Policy> {
+    match name {
+        "slos-serve" => Box::new(SlosServe::new(cfg)),
+        "slos-serve-ar" => Box::new(SlosServe::new(cfg).with_features(
+            Features { speculative: false, ..Features::default() })),
+        "slos-serve-greedy" => Box::new(SlosServe::new(cfg).with_features(
+            Features { burst_resilient: false, ..Features::default() })),
+        "baseline" => Box::new(SlosServe::new(cfg).with_features(
+            Features { speculative: false, burst_resilient: false,
+                       slo_scheduling: false })),
+        "vllm" => Box::new(Vllm::new()),
+        "vllm-spec" => Box::new(Vllm::speculative(cfg)),
+        "sarathi" => Box::new(Sarathi::new(cfg)),
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+fn attainment_at(sc: Scenario, system: &str, rate: f64, requests: usize,
+                 replicas: usize) -> f64 {
+    let cfg = ScenarioConfig::new(sc).with_rate(rate).with_requests(requests);
+    let wl = workload::generate(&cfg);
+    if system == "distserve" {
+        return baselines::distserve::best_ratio_attainment(&wl, &cfg);
+    }
+    if replicas > 1 {
+        let mut rc = RouterConfig::new(replicas);
+        if system == "slos-serve-ar" {
+            rc.features = Some(Features {
+                speculative: false,
+                ..Features::default()
+            });
+        }
+        // Per-GPU normalization: feed `replicas * rate` total.
+        let cfg = ScenarioConfig::new(sc)
+            .with_rate(rate * replicas as f64)
+            .with_requests(requests * replicas);
+        let wl = workload::generate(&cfg);
+        return run_multi_replica(wl, &cfg, &rc).metrics.attainment();
+    }
+    let mut p = make_policy(system, &cfg);
+    run(p.as_mut(), wl, &cfg).metrics.attainment()
+}
+
+/// Capacity (max rate at >= 90% attainment) for a scenario + system.
+pub fn capacity(sc: Scenario, system: &str, requests: usize,
+                replicas: usize) -> f64 {
+    capacity_search(
+        |rate| attainment_at(sc, system, rate, requests, replicas),
+        0.9, 0.25, 64.0, 10,
+    )
+}
+
+/// Fig. 1 / Fig. 9 — serving capacity per scenario per system.
+pub fn fig9_capacity(requests: usize, scenarios: &[Scenario])
+                     -> Vec<(Scenario, Vec<(String, f64)>)> {
+    let mut out = Vec::new();
+    println!("# Fig. 9 — serving capacity (req/s/GPU at 90% attainment)");
+    for &sc in scenarios {
+        let mut row = Vec::new();
+        // Spec variants don't apply where no drafter exists (paper setup).
+        let systems: Vec<&str> = SYSTEMS
+            .iter()
+            .copied()
+            .filter(|s| {
+                *s != "vllm-spec" || ScenarioConfig::new(sc).speculative
+            })
+            .collect();
+        for system in systems {
+            let cap = capacity(sc, system, requests, 1);
+            row.push((system.to_string(), cap));
+        }
+        let fmt: Vec<String> = row
+            .iter()
+            .map(|(s, c)| format!("{s}={c:.2}"))
+            .collect();
+        println!("{:12} {}", sc.name(), fmt.join(" "));
+        out.push((sc, row));
+    }
+    out
+}
+
+/// Fig. 1 summary: ours vs best baseline per scenario.
+pub fn fig1_summary(requests: usize) -> f64 {
+    let data = fig9_capacity(requests, &Scenario::ALL);
+    let mut ratios = Vec::new();
+    println!("# Fig. 1 — capacity, ours vs best baseline");
+    for (sc, row) in &data {
+        let ours = row.iter().find(|(s, _)| s == "slos-serve").unwrap().1;
+        let best_base = row
+            .iter()
+            .filter(|(s, _)| s != "slos-serve")
+            .map(|(_, c)| *c)
+            .fold(0.0f64, f64::max);
+        let ratio = if best_base > 0.0 { ours / best_base } else { f64::NAN };
+        println!("{:12} ours {ours:.2} best-baseline {best_base:.2} \
+                  ratio {ratio:.2}x", sc.name());
+        ratios.push(ratio);
+    }
+    let geo = ratios.iter().map(|r| r.ln()).sum::<f64>()
+        / ratios.len() as f64;
+    let geo = geo.exp();
+    println!("geo-mean improvement: {geo:.2}x");
+    geo
+}
+
+/// Fig. 2 — throughput-latency tradeoff of batching.
+pub fn fig2_tradeoff() -> Vec<(usize, f64, f64)> {
+    println!("# Fig. 2 — batch tokens vs latency vs throughput");
+    let mut out = Vec::new();
+    for hw in [Hardware::A100, Hardware::H100] {
+        let m = PerfModel::preset(hw);
+        println!("## {hw:?}");
+        for tokens in [32, 64, 128, 256, 512, 1024, 2048, 4096] {
+            if tokens > m.max_batch_tokens {
+                continue;
+            }
+            let t = m.batch_time(tokens, 0);
+            let tput = tokens as f64 / t;
+            println!("tokens {tokens:5} latency {:.1} ms tput {tput:.0} tok/s",
+                     1e3 * t);
+            out.push((tokens, t, tput));
+        }
+    }
+    out
+}
+
+/// Fig. 3 — the worked example: 6 tokens/unit server, 3 ongoing decodes,
+/// burst of 4 requests with 6-token prefills; TTFT SLO 6 units, TPOT 1.
+/// Prints attained counts for prefill-oriented, decode-oriented, and ours.
+pub fn fig3_worked_example() -> Vec<(String, usize)> {
+    // Perf model: exactly 6 tokens per 1.0-second "time unit".
+    let m = PerfModel::new(vec![Term { k1: 1.0 / 6.0, k2: 0.0, b: 0.0 }], 6);
+    let slo = SloSpec { ttft_slowdown: 6.0, tpot: 1.0 };
+    let mk = || -> Vec<Request> {
+        let mut v = Vec::new();
+        // Three ongoing decodes (prefill already done at t<0; model as
+        // tiny prefill long ago).
+        for i in 0..3 {
+            v.push(Request::simple(i, 0.0, 1, 20, SloSpec {
+                ttft_slowdown: 1000.0, tpot: 1.0 }));
+        }
+        for i in 3..7 {
+            // 6-token prefills; zero-load prefill = 1 unit => pDDL = 6.
+            v.push(Request::simple(i, 0.0, 6, 14, slo));
+        }
+        v
+    };
+    let mut cfg = ScenarioConfig::new(Scenario::ChatBot);
+    cfg.speculative = false;
+    cfg.kv_tokens = 10_000;
+    cfg.exec_noise = 0.0; // the pedagogical toy is deterministic
+    let mut out = Vec::new();
+    println!("# Fig. 3 — worked example (6 tok/unit, TTFT 6, TPOT 1)");
+    for name in ["vllm", "sarathi", "slos-serve"] {
+        let mut p: Box<dyn Policy> = match name {
+            "vllm" => Box::new(Vllm::new()),
+            "sarathi" => Box::new(Sarathi::with_cap(6)),
+            _ => Box::new({
+                let mut s = SlosServe::new(&cfg);
+                s.features.speculative = false;
+                s
+            }),
+        };
+        let res = crate::sim::run_with_model(p.as_mut(), mk(), &cfg,
+                                             m.clone());
+        let attained = res
+            .requests
+            .iter()
+            .filter(|r| r.is_finished() && r.slo_attained())
+            .count();
+        println!("{name:12} attained {attained}/7");
+        out.push((name.to_string(), attained));
+    }
+    out
+}
+
+/// Fig. 4 — DistServe capacity vs prefill:decode device ratio.
+pub fn fig4_distserve(requests: usize) -> Vec<(Scenario, [f64; 3])> {
+    println!("# Fig. 4 — DistServe capacity by PF:DCD ratio (per GPU)");
+    let mut out = Vec::new();
+    for sc in [Scenario::ChatBot, Scenario::Coder] {
+        let mut caps = [0.0f64; 3];
+        for (i, ratio) in baselines::DistServeConfig::RATIOS.iter().enumerate()
+        {
+            let cap = capacity_search(
+                |rate| {
+                    let cfg = ScenarioConfig::new(sc)
+                        .with_rate(rate * ratio.total_devices() as f64)
+                        .with_requests(requests);
+                    let wl = workload::generate(&cfg);
+                    let (_, m) = baselines::run_distserve(wl, &cfg, *ratio);
+                    m.attainment()
+                },
+                0.9, 0.25, 32.0, 9,
+            );
+            caps[i] = cap;
+            println!("{:8} {}PF:{}DCD capacity {cap:.2} req/s/GPU",
+                     sc.name(), ratio.prefill_devices, ratio.decode_devices);
+        }
+        out.push((sc, caps));
+    }
+    out
+}
+
+/// Fig. 8 — arrival trace shapes (per-second counts + CV).
+pub fn fig8_traces(requests: usize) {
+    println!("# Fig. 8 — synthetic Azure-like traces");
+    for sc in [Scenario::ChatBot, Scenario::Coder] {
+        let cfg = ScenarioConfig::new(sc).with_rate(3.0)
+            .with_requests(requests);
+        let wl = workload::generate(&cfg);
+        let arr: Vec<f64> = wl.iter().map(|r| r.arrival).collect();
+        let cv = workload::count_cv(&arr, 1.0);
+        println!("{:8} {} arrivals, count-CV {cv:.2}", sc.name(), arr.len());
+    }
+}
+
+/// Fig. 10a — cumulative execution time by batch size, ours vs Sarathi.
+pub fn fig10a_batch_cdf(requests: usize) -> Vec<(String, f64)> {
+    println!("# Fig. 10a — fraction of exec time in batches > cap");
+    let sc = Scenario::Summarizer;
+    let cfg = ScenarioConfig::new(sc).with_rate(1.2).with_requests(requests);
+    let mut out = Vec::new();
+    for name in ["sarathi", "slos-serve"] {
+        let wl = workload::generate(&cfg);
+        let mut p = make_policy(name, &cfg);
+        let res = run(p.as_mut(), wl, &cfg);
+        let total: f64 = res.batch_log.iter().map(|b| b.1).sum();
+        let cap = Sarathi::new(&cfg).token_cap;
+        let big: f64 = res
+            .batch_log
+            .iter()
+            .filter(|(tok, _)| *tok > cap)
+            .map(|b| b.1)
+            .sum();
+        let frac = if total > 0.0 { big / total } else { 0.0 };
+        println!("{name:12} time in batches > {cap} tokens: {:.1}%",
+                 100.0 * frac);
+        out.push((name.to_string(), frac));
+    }
+    out
+}
+
+/// Fig. 10b — perf-model fidelity: R² of fits on noisy profiled samples.
+pub fn fig10b_fidelity() -> Vec<(String, f64)> {
+    println!("# Fig. 10b — perf model fidelity (R²)");
+    let mut out = Vec::new();
+    for (name, hw) in [("A100", Hardware::A100), ("H100", Hardware::H100)] {
+        let truth = PerfModel::preset(hw);
+        let mut rng = Rng::new(7);
+        let mut samples = Vec::new();
+        for tok in (64..truth.max_batch_tokens).step_by(192) {
+            for sp in 0..4usize {
+                let t = truth.batch_time(tok, sp);
+                // 8% multiplicative measurement noise.
+                let noisy = t * (1.0 + 0.08 * rng.normal());
+                samples.push((tok, sp, noisy.max(1e-4)));
+            }
+        }
+        let (_, r2) = PerfModel::fit(&samples, truth.max_batch_tokens);
+        println!("{name}: R² = {r2:.3}");
+        out.push((name.to_string(), r2));
+    }
+    out
+}
+
+/// Fig. 11 — system load over time under a Coder burst (ours splits
+/// standard vs best-effort).
+pub fn fig11_burst(requests: usize) -> Vec<(f64, usize, usize)> {
+    println!("# Fig. 11 — load trace, Coder at high load (ours, STD vs BE)");
+    let cfg = ScenarioConfig::new(Scenario::Coder)
+        .with_rate(4.5)
+        .with_requests(requests);
+    let wl = workload::generate(&cfg);
+    let mut p = make_policy("slos-serve", &cfg);
+    let res = run(p.as_mut(), wl, &cfg);
+    // Downsample the trace for printing.
+    let step = (res.load_trace.len() / 30).max(1);
+    for w in res.load_trace.chunks(step) {
+        let (t, s, b) = w[0];
+        println!("t {t:7.2}s  std {s:4}  best-effort {b:4}");
+    }
+    println!("attainment {:.1}%", 100.0 * res.metrics.attainment());
+    res.load_trace
+}
+
+/// Fig. 12 — Mixed-scenario p99 TTFT slack / TPOT vs offered load.
+pub fn fig12_mixed(requests: usize) -> Vec<(String, f64, f64, f64)> {
+    println!("# Fig. 12 — Mixed scenario p99 latencies vs load");
+    let mut out = Vec::new();
+    for rate in [0.5, 1.0, 1.5, 2.0] {
+        for name in ["vllm", "sarathi", "slos-serve"] {
+            let cfg = ScenarioConfig::new(Scenario::Mixed)
+                .with_rate(rate)
+                .with_requests(requests);
+            let wl = workload::generate(&cfg);
+            let mut p = make_policy(name, &cfg);
+            let m = run(p.as_mut(), wl, &cfg).metrics;
+            println!("rate {rate:.1} {name:12} ttft-slack-p99 {:8.3}s \
+                      tpot-p99 {:6.1}ms", m.ttft_p99, 1e3 * m.tpot_p99);
+            out.push((name.to_string(), rate, m.ttft_p99, m.tpot_p99));
+        }
+    }
+    out
+}
+
+/// Fig. 13 — multi-replica capacity scaling (1..4 replicas).
+pub fn fig13_scaling(requests: usize, scenarios: &[Scenario])
+                     -> Vec<(Scenario, Vec<f64>)> {
+    println!("# Fig. 13 — multi-replica scaling (total capacity, req/s)");
+    let mut out = Vec::new();
+    for &sc in scenarios {
+        let mut caps = Vec::new();
+        for replicas in 1..=4usize {
+            let cap = capacity_search(
+                |rate| attainment_at(sc, "slos-serve", rate, requests,
+                                     replicas),
+                0.9, 0.25, 64.0, 9,
+            ) * replicas as f64;
+            caps.push(cap);
+        }
+        let scaling: Vec<String> = caps
+            .iter()
+            .map(|c| format!("{:.2}x", c / caps[0].max(1e-9)))
+            .collect();
+        println!("{:10} capacities {:?} scaling {}", sc.name(),
+                 caps.iter().map(|c| (c * 100.0).round() / 100.0)
+                     .collect::<Vec<_>>(),
+                 scaling.join(" "));
+        out.push((sc, caps));
+    }
+    out
+}
+
+/// Fig. 14 — ablation: remove routing / speculation / burst resilience /
+/// everything (prefill-oriented baseline).
+pub fn fig14_ablation(requests: usize, scenarios: &[Scenario])
+                      -> Vec<(Scenario, Vec<(String, f64)>)> {
+    println!("# Fig. 14 — ablation (capacity req/s/GPU)");
+    let variants: [(&str, &str); 4] = [
+        ("full+routing(2rep)", "slos-serve"),
+        ("-routing", "slos-serve"),
+        ("-spec", "slos-serve-ar"),
+        ("-burst(greedy)", "slos-serve-greedy"),
+    ];
+    let mut out = Vec::new();
+    for &sc in scenarios {
+        let mut row = Vec::new();
+        for (label, system) in variants {
+            let replicas = if label.contains("routing(2rep)") { 2 } else { 1 };
+            let cap = capacity(sc, system, requests, replicas);
+            row.push((label.to_string(), cap));
+        }
+        // The framework baseline: prefill-oriented greedy.
+        let cap = capacity(sc, "baseline", requests, 1);
+        row.push(("baseline".to_string(), cap));
+        let fmt: Vec<String> = row
+            .iter()
+            .map(|(l, c)| format!("{l}={c:.2}"))
+            .collect();
+        println!("{:10} {}", sc.name(), fmt.join(" "));
+        out.push((sc, row));
+    }
+    out
+}
+
+/// Fig. 15 — scheduling overhead distribution (wall-clock per plan call).
+pub fn fig15_overhead() -> Vec<f64> {
+    use crate::coordinator::dp::{Candidate, DpConfig, DpPlanner};
+    println!("# Fig. 15 — DP planner overhead (ms per call)");
+    let m = PerfModel::preset(Hardware::A100);
+    let mut rng = Rng::new(11);
+    let mut times = Vec::new();
+    for &new in &[1usize, 4, 8, 12] {
+        for &running in &[10usize, 50, 100, 200] {
+            let cfg = DpConfig {
+                tiers: vec![0.05, 0.1],
+                running_counts: vec![running / 2, running / 2],
+                mem_free_pages: 50_000,
+                speculative: true,
+                spec_alpha: 0.8,
+                max_spec_len: 6,
+            };
+            let cands: Vec<Candidate> = (0..new as u64)
+                .map(|i| Candidate {
+                    id: i,
+                    pddl: 0.2 + rng.f64() * 2.0,
+                    prefill_tokens: 200 + rng.below(2000),
+                    mem_pages: 40 + rng.below(150),
+                    tier: rng.below(2),
+                    forced: false,
+                })
+                .collect();
+            let planner = DpPlanner::new(&cfg, &m);
+            let t0 = std::time::Instant::now();
+            let iters = 20;
+            for _ in 0..iters {
+                let _ = planner.plan(0.0, &cands);
+            }
+            let ms = 1e3 * t0.elapsed().as_secs_f64() / iters as f64;
+            println!("new {new:3} running {running:4}: {ms:.3} ms/call");
+            times.push(ms);
+        }
+    }
+    let max = times.iter().fold(0.0f64, |a, &b| a.max(b));
+    println!("max {max:.3} ms (paper: < 10 ms)");
+    times
+}
+
+/// CLI dispatcher.
+pub fn run_figure(id: &str, requests: usize) -> anyhow::Result<()> {
+    match id {
+        "1" => {
+            fig1_summary(requests);
+        }
+        "2" => {
+            fig2_tradeoff();
+        }
+        "3" => {
+            fig3_worked_example();
+        }
+        "4" => {
+            fig4_distserve(requests);
+        }
+        "8" => fig8_traces(requests.max(1000)),
+        "9" => {
+            fig9_capacity(requests, &Scenario::ALL);
+        }
+        "10a" => {
+            fig10a_batch_cdf(requests);
+        }
+        "10b" => {
+            fig10b_fidelity();
+        }
+        "11" => {
+            fig11_burst(requests);
+        }
+        "12" => {
+            fig12_mixed(requests);
+        }
+        "13" => {
+            fig13_scaling(requests, &[Scenario::ChatBot, Scenario::Coder]);
+        }
+        "14" => {
+            fig14_ablation(requests,
+                           &[Scenario::ChatBot, Scenario::Coder]);
+        }
+        "15" => {
+            fig15_overhead();
+        }
+        other => anyhow::bail!("unknown figure {other}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! # SLOs-Serve — multi-SLO LLM serving (paper reproduction)
+//!
+//! Rust coordinator (L3) reproducing *SLOs-Serve: Optimized Serving of
+//! Multi-SLO LLMs* (Chen et al., 2025): a serving system that customizes
+//! per-batch token allocation so every **admitted** request meets all of its
+//! stage-specific SLOs (TTFT for prefill-like stages, TPOT for decode-like
+//! stages), with soft admission control, burst-resilient best-effort
+//! fallback, SLO-adaptive speculative decoding, and SLO-driven multi-replica
+//! routing.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`coordinator`] — the paper's contribution: roofline perf model (§3.1.1),
+//!   multi-SLO DP scheduler (§3.2.1), dynamic batch formation (§3.2.2, Alg. 2),
+//!   SLO-adaptive speculative decoding (§3.2.3, App. D), soft admission +
+//!   best-effort tier (§4.1).
+//! * [`baselines`] — vLLM-style, Sarathi-style, and DistServe-style
+//!   schedulers for the paper's comparison studies.
+//! * [`sim`] — discrete-event GPU substrate driven by the same roofline
+//!   model (substitution for the paper's A100/H100 testbed; DESIGN.md §2).
+//! * [`router`] — §4.2 centralized multi-replica controller.
+//! * [`runtime`] / [`engine`] — the *real* path: PJRT CPU client executing
+//!   the JAX/Pallas AOT artifacts (tiny OPT-style model) with paged KV.
+//! * [`workload`], [`metrics`], [`memory`], [`config`] — substrates.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod router;
+pub mod runtime;
+pub mod sim;
+pub mod workload;
+
+pub use config::{ScenarioConfig, SloSpec, SloTier};
+pub use coordinator::perf_model::PerfModel;
+pub use coordinator::request::{Request, RequestId, Stage, StageKind};

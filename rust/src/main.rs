@@ -1,0 +1,187 @@
+//! `slos-serve` CLI: serving experiments and paper figure regeneration.
+//!
+//! ```text
+//! slos-serve serve    [--scenario S] [--policy P] [--rate R]
+//!                     [--requests N] [--replicas K] [--seed X]
+//! slos-serve capacity [--scenario S] [--requests N]
+//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15> [--requests N]
+//! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline environment has no clap —
+//! DESIGN.md §2.)
+
+use std::collections::HashMap;
+
+use slos_serve::baselines;
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::figures::make_policy;
+use slos_serve::metrics::capacity_search;
+use slos_serve::router::{run_multi_replica, RouterConfig};
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn bool(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
+  serve    --scenario S --policy P --rate R --requests N --replicas K --seed X
+  capacity --scenario S --requests N
+  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15> --requests N
+  trace    --scenario S --rate R --requests N [--stats]
+scenarios: chatbot coder summarizer mixed toolllm reasoning
+policies:  slos-serve slos-serve-ar vllm vllm-spec sarathi";
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let scenario = |a: &Args, d: &str| -> anyhow::Result<Scenario> {
+        let s = a.str("scenario", d);
+        Scenario::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown scenario {s}"))
+    };
+
+    match cmd.as_str() {
+        "serve" => {
+            let sc = scenario(&args, "chatbot")?;
+            let policy = args.str("policy", "slos-serve");
+            let cfg = ScenarioConfig::new(sc)
+                .with_rate(args.get("rate", 2.0))
+                .with_requests(args.get("requests", 500))
+                .with_seed(args.get("seed", 0));
+            let replicas: usize = args.get("replicas", 1);
+            let wl = workload::generate(&cfg);
+            if replicas > 1 {
+                let res =
+                    run_multi_replica(wl, &cfg, &RouterConfig::new(replicas));
+                print_metrics(&policy, &res.metrics);
+                println!("rerouted: {}", res.rerouted);
+            } else {
+                let mut p = make_policy(&policy, &cfg);
+                let res = run(p.as_mut(), wl, &cfg);
+                print_metrics(&policy, &res.metrics);
+            }
+        }
+        "capacity" => {
+            let sc = scenario(&args, "chatbot")?;
+            let requests: usize = args.get("requests", 300);
+            for name in ["slos-serve", "vllm", "vllm-spec", "sarathi",
+                         "distserve"] {
+                if name == "vllm-spec" && !ScenarioConfig::new(sc).speculative {
+                    continue;
+                }
+                let cap = capacity_of(sc, name, requests);
+                println!("{:10} {name:12} capacity {cap:.2} req/s/GPU",
+                         sc.name());
+            }
+        }
+        "figure" => {
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("figure id required\n{USAGE}"))?;
+            slos_serve::figures::run_figure(id, args.get("requests", 300))?;
+        }
+        "trace" => {
+            let sc = scenario(&args, "coder")?;
+            let cfg = ScenarioConfig::new(sc)
+                .with_rate(args.get("rate", 2.0))
+                .with_requests(args.get("requests", 2000));
+            let wl = workload::generate(&cfg);
+            if args.bool("stats") {
+                let st = workload::stats(&wl);
+                println!("{}: prompt mean {:.0} p99 {:.0} | output mean \
+                          {:.0} p99 {:.0} | stages {:.2}",
+                         sc.name(), st.prompt_mean, st.prompt_p99,
+                         st.output_mean, st.output_p99, st.stages_mean);
+            } else {
+                let arrivals: Vec<f64> = wl.iter().map(|r| r.arrival).collect();
+                let cv = workload::count_cv(&arrivals, 1.0);
+                println!("# {} rate {} count-CV {cv:.2}", sc.name(),
+                         cfg.rate);
+                for r in &wl {
+                    println!("{:.4} {} {}", r.arrival,
+                             r.stages[0].prefill_tokens, r.total_tokens());
+                }
+            }
+        }
+        _ => {
+            println!("{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn capacity_of(sc: Scenario, name: &str, requests: usize) -> f64 {
+    capacity_search(
+        |rate| {
+            let cfg = ScenarioConfig::new(sc)
+                .with_rate(rate)
+                .with_requests(requests);
+            let wl = workload::generate(&cfg);
+            if name == "distserve" {
+                baselines::distserve::best_ratio_attainment(&wl, &cfg)
+            } else {
+                let mut p = make_policy(name, &cfg);
+                run(p.as_mut(), wl, &cfg).metrics.attainment()
+            }
+        },
+        0.9, 0.25, 64.0, 12,
+    )
+}
+
+fn print_metrics(policy: &str, m: &slos_serve::metrics::RunMetrics) {
+    println!(
+        "{policy}: total {} finished {} attained {} ({:.1}%) BE {} | \
+         ttft-slack p50 {:.3}s p99 {:.3}s | tpot p50 {:.1}ms p99 {:.1}ms | \
+         tput {:.2} req/s",
+        m.total, m.finished, m.attained, 100.0 * m.attainment(),
+        m.best_effort, m.ttft_p50, m.ttft_p99,
+        1e3 * m.tpot_p50, 1e3 * m.tpot_p99, m.throughput()
+    );
+}

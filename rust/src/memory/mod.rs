@@ -1,0 +1,237 @@
+//! Paged KV-cache memory management (PagedAttention-style, paper §5).
+//!
+//! The scheduler accounts for memory in pages; the real engine and the
+//! simulator both allocate through [`BlockAllocator`]. Pages are fixed-size
+//! (16 tokens, matching the Pallas kernel's page granularity).
+
+use std::collections::HashMap;
+
+use crate::coordinator::request::RequestId;
+
+pub type PageId = u32;
+
+/// Free-list page allocator over a fixed pool.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    page_size: usize,
+    free: Vec<PageId>,
+    total: usize,
+    /// High-watermark of allocated pages (for reporting).
+    watermark: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(total_pages: usize, page_size: usize) -> Self {
+        assert!(page_size > 0 && total_pages > 0);
+        BlockAllocator {
+            page_size,
+            free: (0..total_pages as PageId).rev().collect(),
+            total: total_pages,
+            watermark: 0,
+        }
+    }
+
+    /// Build from a token budget (rounds down to whole pages).
+    pub fn with_token_capacity(tokens: usize, page_size: usize) -> Self {
+        BlockAllocator::new(tokens / page_size, page_size)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Allocate `n` pages, or `None` (and allocate nothing) if short.
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<PageId>> {
+        if n > self.free.len() {
+            return None;
+        }
+        let at = self.free.len() - n;
+        let pages = self.free.split_off(at);
+        self.watermark = self.watermark.max(self.used_pages());
+        Some(pages)
+    }
+
+    /// Return pages to the pool. Panics on double-free (debug builds check
+    /// membership; release relies on the table layer).
+    pub fn free(&mut self, pages: &[PageId]) {
+        debug_assert!(pages.iter().all(|p| (*p as usize) < self.total));
+        debug_assert!(pages.iter().all(|p| !self.free.contains(p)),
+                      "double free");
+        self.free.extend_from_slice(pages);
+        debug_assert!(self.free.len() <= self.total);
+    }
+}
+
+/// Per-request page tables over a shared allocator.
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    tables: HashMap<RequestId, Table>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Table {
+    pages: Vec<PageId>,
+    tokens: usize,
+}
+
+impl KvCacheManager {
+    pub fn new(total_tokens: usize, page_size: usize) -> Self {
+        KvCacheManager {
+            alloc: BlockAllocator::with_token_capacity(total_tokens, page_size),
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn allocator(&self) -> &BlockAllocator {
+        &self.alloc
+    }
+
+    pub fn free_tokens(&self) -> usize {
+        self.alloc.free_pages() * self.alloc.page_size()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.alloc.total_pages() * self.alloc.page_size()
+    }
+
+    /// Tokens currently stored for `id`.
+    pub fn tokens_of(&self, id: RequestId) -> usize {
+        self.tables.get(&id).map_or(0, |t| t.tokens)
+    }
+
+    pub fn page_table(&self, id: RequestId) -> Option<&[PageId]> {
+        self.tables.get(&id).map(|t| t.pages.as_slice())
+    }
+
+    /// Can `extra` tokens be appended for `id` right now?
+    pub fn can_grow(&self, id: RequestId, extra: usize) -> bool {
+        self.pages_needed(id, extra) <= self.alloc.free_pages()
+    }
+
+    fn pages_needed(&self, id: RequestId, extra: usize) -> usize {
+        let t = self.tables.get(&id);
+        let tokens = t.map_or(0, |t| t.tokens);
+        let have = t.map_or(0, |t| t.pages.len());
+        self.alloc.pages_for(tokens + extra).saturating_sub(have)
+    }
+
+    /// Append `extra` tokens worth of KV for `id`, allocating pages as
+    /// needed. Returns false (state unchanged) if memory is short.
+    pub fn grow(&mut self, id: RequestId, extra: usize) -> bool {
+        let need = self.pages_needed(id, extra);
+        if need > 0 {
+            match self.alloc.alloc(need) {
+                Some(pages) => {
+                    self.tables.entry(id).or_default().pages.extend(pages)
+                }
+                None => return false,
+            }
+        }
+        self.tables.entry(id).or_default().tokens += extra;
+        true
+    }
+
+    /// Release everything held by `id` (completion or preemption §4.1 —
+    /// preemption keeps generated tokens *logically*, in the Request, while
+    /// the KV pages go back to the pool).
+    pub fn release(&mut self, id: RequestId) -> usize {
+        if let Some(t) = self.tables.remove(&id) {
+            self.alloc.free(&t.pages);
+            t.tokens
+        } else {
+            0
+        }
+    }
+
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(10, 16);
+        let p = a.alloc(4).unwrap();
+        assert_eq!(a.free_pages(), 6);
+        assert_eq!(a.used_pages(), 4);
+        a.free(&p);
+        assert_eq!(a.free_pages(), 10);
+        assert_eq!(a.watermark(), 4);
+    }
+
+    #[test]
+    fn alloc_fails_atomically() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert!(a.alloc(5).is_none());
+        assert_eq!(a.free_pages(), 4);
+        assert!(a.alloc(4).is_some());
+        assert!(a.alloc(1).is_none());
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let a = BlockAllocator::new(10, 16);
+        assert_eq!(a.pages_for(1), 1);
+        assert_eq!(a.pages_for(16), 1);
+        assert_eq!(a.pages_for(17), 2);
+        assert_eq!(a.pages_for(0), 0);
+    }
+
+    #[test]
+    fn manager_grow_and_release() {
+        let mut m = KvCacheManager::new(160, 16); // 10 pages
+        assert!(m.grow(1, 20)); // 2 pages
+        assert_eq!(m.tokens_of(1), 20);
+        assert_eq!(m.allocator().used_pages(), 2);
+        assert!(m.grow(1, 12)); // fits in existing page
+        assert_eq!(m.allocator().used_pages(), 2);
+        assert!(m.grow(1, 1)); // spills to 3rd page
+        assert_eq!(m.allocator().used_pages(), 3);
+        assert_eq!(m.release(1), 33);
+        assert_eq!(m.allocator().used_pages(), 0);
+    }
+
+    #[test]
+    fn manager_grow_fails_when_full() {
+        let mut m = KvCacheManager::new(32, 16); // 2 pages
+        assert!(m.grow(1, 32));
+        assert!(!m.grow(2, 1));
+        assert_eq!(m.tokens_of(2), 0);
+        assert!(m.can_grow(1, 0));
+        assert!(!m.can_grow(2, 1));
+        m.release(1);
+        assert!(m.grow(2, 1));
+    }
+
+    #[test]
+    fn release_unknown_is_zero() {
+        let mut m = KvCacheManager::new(32, 16);
+        assert_eq!(m.release(42), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! SLO attainment metrics and capacity search (paper §2.1, §6).
+//!
+//! *Serving capacity* = the maximum request rate per GPU sustaining the
+//! target SLO attainment (90% in the paper). [`capacity_search`] runs the
+//! paper's sweep as a monotone bisection over rate.
+
+use crate::coordinator::request::{Request, ServiceTier};
+
+/// Outcome summary of one serving run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub total: usize,
+    pub finished: usize,
+    pub attained: usize,
+    /// Requests that ended in the best-effort tier (declined / deferred).
+    pub best_effort: usize,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    /// Makespan of the run (last completion time).
+    pub span: f64,
+}
+
+impl RunMetrics {
+    /// SLO attainment over *all* issued requests (unfinished and
+    /// best-effort requests count as misses — the paper's capacity metric
+    /// allows <=10% total violations).
+    pub fn attainment(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        self.attained as f64 / self.total as f64
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.span > 0.0 {
+            self.finished as f64 / self.span
+        } else {
+            0.0
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+/// Collect metrics over completed requests.
+///
+/// TTFT is reported as *slack*: `prefill_finished - prefill_deadline`
+/// (<= 0 means on time) — absolute TTFT isn't comparable across requests
+/// with different prompt lengths, slack is. TPOT is the worst windowed
+/// inter-token time per stage.
+pub fn collect(requests: &[Request], span: f64) -> RunMetrics {
+    let mut attained = 0;
+    let mut finished = 0;
+    let mut best_effort = 0;
+    let mut ttft_slack = Vec::new();
+    let mut tpots = Vec::new();
+    for r in requests {
+        if r.tier == ServiceTier::BestEffort {
+            best_effort += 1;
+        }
+        if !r.is_finished() {
+            continue;
+        }
+        finished += 1;
+        // A standard-tier request attains only if every stage met both SLOs.
+        if r.tier == ServiceTier::Standard && r.slo_attained() {
+            attained += 1;
+        }
+        for rec in &r.stage_records {
+            ttft_slack.push(rec.prefill_finished - rec.prefill_deadline);
+            tpots.push(rec.worst_tpot);
+        }
+    }
+    ttft_slack.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    RunMetrics {
+        total: requests.len(),
+        finished,
+        attained,
+        best_effort,
+        ttft_p50: percentile(&ttft_slack, 0.5),
+        ttft_p99: percentile(&ttft_slack, 0.99),
+        tpot_p50: percentile(&tpots, 0.5),
+        tpot_p99: percentile(&tpots, 0.99),
+        span,
+    }
+}
+
+/// Binary-search the max rate with attainment >= target. `eval(rate)` runs
+/// a full serving experiment and returns the attainment.
+pub fn capacity_search(
+    mut eval: impl FnMut(f64) -> f64,
+    target: f64,
+    lo_hint: f64,
+    hi_hint: f64,
+    iters: usize,
+) -> f64 {
+    // Expand upper bound until it fails (or give up and return it).
+    let mut lo = 0.0;
+    let mut hi = hi_hint.max(lo_hint);
+    let mut probe = lo_hint.max(1e-3);
+    while probe <= hi && eval(probe) >= target {
+        lo = probe;
+        probe *= 2.0;
+    }
+    if probe > hi {
+        return lo.max(hi);
+    }
+    hi = probe;
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid) >= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SloSpec, SloTier};
+
+    fn finished_request(id: u64, on_time: bool) -> Request {
+        let slo = SloSpec::from_tiers(SloTier::Loose, SloTier::Loose);
+        let mut r = Request::simple(id, 0.0, 10, 2, slo);
+        r.begin_stage(0.0, 0.01);
+        let t = if on_time { 0.02 } else { 10.0 };
+        r.advance_prefill(10, t);
+        r.advance_decode(1, t + 0.05);
+        r.advance_decode(1, t + 0.10);
+        r
+    }
+
+    #[test]
+    fn attainment_counts_misses_and_unfinished() {
+        let reqs = vec![
+            finished_request(0, true),
+            finished_request(1, false),
+            Request::simple(2, 0.0, 10, 2,
+                            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)),
+        ];
+        let m = collect(&reqs, 10.0);
+        assert_eq!(m.total, 3);
+        assert_eq!(m.finished, 2);
+        assert_eq!(m.attained, 1);
+        assert!((m.attainment() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_effort_not_attained() {
+        let mut r = finished_request(0, true);
+        r.tier = ServiceTier::BestEffort;
+        let m = collect(&[r], 1.0);
+        assert_eq!(m.attained, 0);
+        assert_eq!(m.best_effort, 1);
+    }
+
+    #[test]
+    fn capacity_search_finds_threshold() {
+        // Synthetic system: attainment = 1 for rate <= 3.7, else 0.
+        let cap = capacity_search(
+            |r| if r <= 3.7 { 1.0 } else { 0.0 },
+            0.9, 0.5, 64.0, 24,
+        );
+        assert!((cap - 3.7).abs() < 0.01, "cap={cap}");
+    }
+
+    #[test]
+    fn capacity_search_monotone_smooth() {
+        let cap = capacity_search(
+            |r| (1.0 - (r - 2.0).max(0.0) * 0.2).max(0.0),
+            0.9, 0.25, 64.0, 24,
+        );
+        // attainment(r) = 1 - 0.2*(r-2)+ => 0.9 at r = 2.5.
+        assert!((cap - 2.5).abs() < 0.01, "cap={cap}");
+    }
+
+    #[test]
+    fn percentiles_of_empty_are_zero() {
+        let m = collect(&[], 0.0);
+        assert_eq!(m.ttft_p99, 0.0);
+        assert_eq!(m.attainment(), 1.0);
+    }
+}

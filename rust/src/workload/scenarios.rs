@@ -1,0 +1,227 @@
+//! Scenario request synthesis (paper Tab. 1, 2, 4): length distributions
+//! moment-matched to the published dataset statistics, multi-stage structure
+//! for ToolLLM and Reasoning, SLO assignment per application.
+
+use crate::config::{LengthStats, Scenario, ScenarioConfig, SloSpec, SloTier};
+use crate::coordinator::request::{Request, Stage, StageKind};
+use crate::workload::rng::Rng;
+use crate::workload::traces::ArrivalProcess;
+
+/// Sample a token length from Tab. 4 stats (log-normal moment match,
+/// clamped to [4, ~1.6 * P99] like the dataset truncation).
+fn sample_len(stats: LengthStats, rng: &mut Rng) -> usize {
+    let x = rng.lognormal_mean_std(stats.mean, stats.std);
+    x.clamp(4.0, stats.p99 * 1.6).round() as usize
+}
+
+/// ToolLLM structure (Tab. 4 caption): 2.7 +- 1.1 prefill-decode pairs per
+/// request; inner prefills are tool responses.
+const TOOL_PAIRS_MEAN: f64 = 2.7;
+const TOOL_PAIRS_STD: f64 = 1.1;
+const TOOL_RESPONSE_TOKENS: f64 = 220.0;
+const TOOL_RESPONSE_STD: f64 = 90.0;
+
+/// Build the stage chain for one request of `scenario`.
+pub fn build_stages(scenario: Scenario, rng: &mut Rng) -> Vec<Stage> {
+    let prompt = sample_len(scenario.prompt_stats(), rng);
+    let output = sample_len(scenario.output_stats(), rng);
+    let (pf_tier, dc_tier) = scenario.slo_template();
+    match scenario {
+        Scenario::ChatBot | Scenario::Coder | Scenario::Summarizer => {
+            vec![Stage {
+                kind: StageKind::Main,
+                prefill_tokens: prompt,
+                decode_tokens: output,
+                slo: SloSpec::from_tiers(pf_tier, dc_tier),
+            }]
+        }
+        Scenario::Mixed => unreachable!("Mixed samples a concrete scenario"),
+        Scenario::Reasoning => {
+            let think = sample_len(scenario.thinking_stats().unwrap(), rng);
+            vec![
+                // Tight prefill + tight thinking TPOT (squeeze time-to-answer).
+                Stage {
+                    kind: StageKind::Think,
+                    prefill_tokens: prompt,
+                    decode_tokens: think,
+                    slo: SloSpec::from_tiers(SloTier::Tight, SloTier::Tight),
+                },
+                // Reading-speed response.
+                Stage {
+                    kind: StageKind::Respond,
+                    prefill_tokens: 0,
+                    decode_tokens: output,
+                    slo: SloSpec::from_tiers(SloTier::Tight, SloTier::Loose),
+                },
+            ]
+        }
+        Scenario::ToolLlm => {
+            let pairs = (TOOL_PAIRS_MEAN + TOOL_PAIRS_STD * rng.normal())
+                .round()
+                .clamp(1.0, 6.0) as usize;
+            let tool_decode = (output / pairs).max(4);
+            let mut stages = vec![Stage {
+                kind: StageKind::Main,
+                prefill_tokens: prompt,
+                decode_tokens: tool_decode,
+                slo: SloSpec::from_tiers(SloTier::Tight, SloTier::Tight),
+            }];
+            for _ in 1..pairs {
+                let tool_resp = sample_len(
+                    LengthStats {
+                        mean: TOOL_RESPONSE_TOKENS,
+                        p99: TOOL_RESPONSE_TOKENS * 3.0,
+                        std: TOOL_RESPONSE_STD,
+                    },
+                    rng,
+                );
+                // Fast toolCall-toolResponse loop: tight on both.
+                stages.push(Stage {
+                    kind: StageKind::ToolCall,
+                    prefill_tokens: tool_resp,
+                    decode_tokens: tool_decode,
+                    slo: SloSpec::from_tiers(SloTier::Tight, SloTier::Tight),
+                });
+            }
+            // Reading-speed final response.
+            stages.push(Stage {
+                kind: StageKind::Respond,
+                prefill_tokens: 0,
+                decode_tokens: output.max(8),
+                slo: SloSpec::from_tiers(SloTier::Tight, SloTier::Loose),
+            });
+            stages
+        }
+    }
+}
+
+/// Generate the full workload for a config: arrival times from the
+/// scenario's Azure-like process, stages per request.
+pub fn generate(config: &ScenarioConfig) -> Vec<Request> {
+    let mut rng = Rng::new(config.seed);
+    let arrivals = ArrivalProcess::new(
+        config.scenario.arrival_pattern(),
+        config.rate,
+    )
+    .generate(config.num_requests, &mut rng);
+
+    arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let concrete = match config.scenario {
+                Scenario::Mixed => [Scenario::ChatBot, Scenario::Coder,
+                                    Scenario::Summarizer][rng.below(3)],
+                s => s,
+            };
+            Request::new(i as u64, t, build_stages(concrete, &mut rng))
+        })
+        .collect()
+}
+
+/// Summary statistics of a generated workload (for `repro trace --stats`
+/// and the Tab. 4 fidelity tests).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadStats {
+    pub prompt_mean: f64,
+    pub prompt_p99: f64,
+    pub output_mean: f64,
+    pub output_p99: f64,
+    pub stages_mean: f64,
+}
+
+pub fn stats(requests: &[Request]) -> WorkloadStats {
+    let mut prompts: Vec<f64> = requests
+        .iter()
+        .map(|r| r.stages[0].prefill_tokens as f64)
+        .collect();
+    let mut outputs: Vec<f64> = requests
+        .iter()
+        .map(|r| r.stages.iter().map(|s| s.decode_tokens as f64).sum())
+        .collect();
+    prompts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    outputs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = |v: &[f64]| v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)];
+    WorkloadStats {
+        prompt_mean: prompts.iter().sum::<f64>() / prompts.len() as f64,
+        prompt_p99: p99(&prompts),
+        output_mean: outputs.iter().sum::<f64>() / outputs.len() as f64,
+        output_p99: p99(&outputs),
+        stages_mean: requests.iter().map(|r| r.stages.len() as f64).sum::<f64>()
+            / requests.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+
+    fn gen(s: Scenario, n: usize) -> Vec<Request> {
+        generate(&ScenarioConfig::new(s).with_rate(2.0).with_requests(n))
+    }
+
+    #[test]
+    fn table4_prompt_means_within_tolerance() {
+        for s in [Scenario::ChatBot, Scenario::Coder, Scenario::Summarizer] {
+            let st = stats(&gen(s, 4000));
+            let want = s.prompt_stats().mean;
+            assert!(
+                (st.prompt_mean - want).abs() / want < 0.10,
+                "{s:?}: mean {} want {want}", st.prompt_mean
+            );
+        }
+    }
+
+    #[test]
+    fn chatbot_is_decode_heavy_summarizer_prefill_heavy() {
+        let chat = stats(&gen(Scenario::ChatBot, 2000));
+        let summ = stats(&gen(Scenario::Summarizer, 2000));
+        assert!(chat.output_mean / chat.prompt_mean
+                > summ.output_mean / summ.prompt_mean);
+    }
+
+    #[test]
+    fn toolllm_stage_structure() {
+        let reqs = gen(Scenario::ToolLlm, 2000);
+        let st = stats(&reqs);
+        // 2.7 pairs + final respond stage => ~3.7 stages on average.
+        assert!((st.stages_mean - 3.7).abs() < 0.4, "stages={}", st.stages_mean);
+        for r in &reqs {
+            assert!(matches!(r.stages.last().unwrap().kind, StageKind::Respond));
+            assert!(r.stages.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn reasoning_has_tight_think_loose_respond() {
+        let reqs = gen(Scenario::Reasoning, 100);
+        for r in &reqs {
+            assert_eq!(r.stages.len(), 2);
+            assert_eq!(r.stages[0].slo.tpot, SloTier::Tight.tpot());
+            assert_eq!(r.stages[1].slo.tpot, SloTier::Loose.tpot());
+            assert!(r.stages[0].decode_tokens > r.stages[1].decode_tokens,
+                    "thinking should dominate generation length");
+        }
+    }
+
+    #[test]
+    fn mixed_contains_multiple_slo_profiles() {
+        let reqs = gen(Scenario::Mixed, 500);
+        let tpots: std::collections::HashSet<u64> = reqs
+            .iter()
+            .map(|r| (r.stages[0].slo.tpot * 1000.0) as u64)
+            .collect();
+        assert!(tpots.len() >= 2, "mixed should blend SLO profiles");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen(Scenario::Coder, 50);
+        let b = gen(Scenario::Coder, 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.total_tokens(), y.total_tokens());
+        }
+    }
+}

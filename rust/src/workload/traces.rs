@@ -1,0 +1,142 @@
+//! Arrival-process synthesis matching the Azure LLM inference traces'
+//! characteristics (paper Fig. 8): Chatting is stable (near-Poisson),
+//! Coding is bursty (on/off modulated Poisson with pronounced spikes).
+
+use crate::config::ArrivalPattern;
+use crate::workload::rng::Rng;
+
+/// Generator of arrival timestamps with a target long-run mean rate.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    pattern: ArrivalPattern,
+    rate: f64,
+}
+
+/// Bursty process shape parameters (tuned so CV of per-second counts is
+/// ~2-3x the stable process, like Azure-Coding vs Azure-Chatting in Fig. 8).
+const BURST_MULT: f64 = 6.0; // spike rate multiplier over the base rate
+const BURST_FRACTION: f64 = 0.15; // fraction of time spent in spikes
+const MEAN_SPIKE_SECS: f64 = 4.0;
+
+impl ArrivalProcess {
+    pub fn new(pattern: ArrivalPattern, rate: f64) -> Self {
+        assert!(rate > 0.0);
+        ArrivalProcess { pattern, rate }
+    }
+
+    /// Generate `n` arrival times starting at t=0.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match self.pattern {
+            ArrivalPattern::Stable => self.poisson(n, rng),
+            ArrivalPattern::Bursty => self.mmpp(n, rng),
+        }
+    }
+
+    fn poisson(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += rng.exponential(self.rate);
+                t
+            })
+            .collect()
+    }
+
+    /// Two-state Markov-modulated Poisson: base state at `r_lo`, spike
+    /// state at `BURST_MULT * r_lo`, chosen so the long-run mean is `rate`.
+    fn mmpp(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let r_lo = self.rate
+            / ((1.0 - BURST_FRACTION) + BURST_FRACTION * BURST_MULT);
+        let r_hi = BURST_MULT * r_lo;
+        let mean_low_secs =
+            MEAN_SPIKE_SECS * (1.0 - BURST_FRACTION) / BURST_FRACTION;
+
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0;
+        let mut in_spike = false;
+        let mut state_end = rng.exponential(1.0 / mean_low_secs);
+        while out.len() < n {
+            let rate = if in_spike { r_hi } else { r_lo };
+            let dt = rng.exponential(rate);
+            if t + dt > state_end {
+                // State flips before the next arrival; resample from the
+                // flip point (memorylessness makes this exact).
+                t = state_end;
+                in_spike = !in_spike;
+                let dwell = if in_spike { MEAN_SPIKE_SECS } else { mean_low_secs };
+                state_end = t + rng.exponential(1.0 / dwell);
+                continue;
+            }
+            t += dt;
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Coefficient of variation of per-`window`-second arrival counts — the
+/// burstiness statistic Fig. 8 visualizes.
+pub fn count_cv(arrivals: &[f64], window: f64) -> f64 {
+    if arrivals.is_empty() {
+        return 0.0;
+    }
+    let end = arrivals.last().unwrap() + window;
+    let bins = (end / window).ceil() as usize;
+    let mut counts = vec![0.0f64; bins];
+    for &a in arrivals {
+        counts[(a / window) as usize] += 1.0;
+    }
+    let n = counts.len() as f64;
+    let mean = counts.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = counts.iter().map(|c| (c - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let p = ArrivalProcess::new(ArrivalPattern::Stable, 2.0);
+        let mut rng = Rng::new(0);
+        let a = p.generate(4000, &mut rng);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 2.0).abs() / 2.0 < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn bursty_mean_rate_preserved() {
+        let p = ArrivalProcess::new(ArrivalPattern::Bursty, 2.0);
+        let mut rng = Rng::new(1);
+        let a = p.generate(8000, &mut rng);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 2.0).abs() / 2.0 < 0.10, "rate={rate}");
+    }
+
+    #[test]
+    fn bursty_has_higher_cv_than_stable() {
+        let mut rng = Rng::new(2);
+        let stable = ArrivalProcess::new(ArrivalPattern::Stable, 3.0)
+            .generate(6000, &mut rng);
+        let bursty = ArrivalProcess::new(ArrivalPattern::Bursty, 3.0)
+            .generate(6000, &mut rng);
+        let cv_s = count_cv(&stable, 1.0);
+        let cv_b = count_cv(&bursty, 1.0);
+        assert!(cv_b > 1.5 * cv_s, "stable={cv_s:.2} bursty={cv_b:.2}");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_positive() {
+        let mut rng = Rng::new(3);
+        for pat in [ArrivalPattern::Stable, ArrivalPattern::Bursty] {
+            let a = ArrivalProcess::new(pat, 1.0).generate(500, &mut rng);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]));
+            assert!(a[0] > 0.0);
+            assert_eq!(a.len(), 500);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration tests over scheduler + simulator + workload + metrics:
+//! every scenario under every policy, plus the paper's qualitative
+//! orderings (ours >= baselines under load; burst resilience; worked
+//! example of Fig. 3).
+
+use slos_serve::baselines::{run_distserve, DistServeConfig};
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::coordinator::request::ServiceTier;
+use slos_serve::figures::make_policy;
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn cfg(sc: Scenario, rate: f64, n: usize) -> ScenarioConfig {
+    ScenarioConfig::new(sc).with_rate(rate).with_requests(n).with_seed(1)
+}
+
+#[test]
+fn all_scenarios_complete_under_light_load_all_policies() {
+    for sc in Scenario::ALL {
+        // "Light" is scenario-relative: Reasoning requests hold ~5.6k KV
+        // tokens for minutes, so their per-GPU capacity is far lower.
+        let rate = if sc == Scenario::Reasoning { 0.05 } else { 0.4 };
+        let c = cfg(sc, rate, 40);
+        let wl = workload::generate(&c);
+        for name in ["slos-serve", "slos-serve-ar", "vllm", "sarathi"] {
+            let mut p = make_policy(name, &c);
+            let res = run(p.as_mut(), wl.clone(), &c);
+            assert_eq!(res.metrics.finished, res.metrics.total,
+                       "{name} on {sc:?}: {:?}", res.metrics);
+            // Only ours guarantees attainment; the greedy baselines
+            // legitimately violate tight tool-loop TPOTs even at light
+            // load (the paper's §2.3 pathologies). Bursty scenarios
+            // (Coder/ToolLLM) legitimately defer spike arrivals to the
+            // best-effort tier even when the *average* load is light.
+            if name.starts_with("slos-serve") {
+                let floor = match sc.arrival_pattern() {
+                    slos_serve::config::ArrivalPattern::Bursty => 0.78,
+                    _ => 0.85,
+                };
+                assert!(res.metrics.attainment() > floor,
+                        "{name} on {sc:?}: attainment {}",
+                        res.metrics.attainment());
+            }
+        }
+        // DistServe too (per-GPU rate halves with 2 devices).
+        let (_, m) = run_distserve(
+            wl, &c, DistServeConfig { prefill_devices: 1, decode_devices: 1 });
+        assert_eq!(m.finished, m.total, "distserve on {sc:?}");
+    }
+}
+
+#[test]
+fn ours_beats_baselines_under_heavy_chatbot_load() {
+    let c = cfg(Scenario::ChatBot, 4.0, 250);
+    let wl = workload::generate(&c);
+    let ours = run(make_policy("slos-serve", &c).as_mut(), wl.clone(), &c)
+        .metrics
+        .attainment();
+    for name in ["vllm", "sarathi"] {
+        let base = run(make_policy(name, &c).as_mut(), wl.clone(), &c)
+            .metrics
+            .attainment();
+        assert!(ours >= base,
+                "slos-serve {ours} < {name} {base} under heavy load");
+    }
+}
+
+#[test]
+fn admitted_standard_requests_keep_their_guarantees() {
+    // The core soft-admission property (§3.1) across scenarios and loads:
+    // a standard-tier (admitted) request that finished met BOTH SLO
+    // families in every stage. This is *strict* under auto-regressive
+    // decoding. With speculation on, acceptance-sampling variance makes a
+    // worst-window TPOT guarantee impossible in principle (§3.2.3 only
+    // hedges), so there we allow a small tail.
+    for sc in [Scenario::ChatBot, Scenario::Coder, Scenario::Reasoning] {
+        for rate in [if sc == Scenario::Reasoning { 0.05 } else { 1.0 },
+                     if sc == Scenario::Reasoning { 0.15 } else { 3.0 }] {
+            for policy in ["slos-serve-ar", "slos-serve"] {
+                let c = cfg(sc, rate, 120);
+                let speculating =
+                    policy == "slos-serve" && c.speculative;
+                let wl = workload::generate(&c);
+                let res = run(make_policy(policy, &c).as_mut(), wl, &c);
+                let mut admitted_finished = 0;
+                let mut tpot_tails = 0;
+                let mut ttft_tails = 0;
+                for r in res.requests.iter().filter(|r| {
+                    r.tier == ServiceTier::Standard && r.is_finished()
+                }) {
+                    admitted_finished += 1;
+                    for rec in &r.stage_records {
+                        if !rec.ttft_met() {
+                            // Residual perf-model error (the paper's own
+                            // fits are R² 0.82-0.93): tolerate rare,
+                            // small boundary slips only.
+                            let slip = rec.prefill_finished
+                                - rec.prefill_deadline;
+                            assert!(slip < 0.15,
+                                    "{policy} {sc:?}@{rate}: req {} stage \
+                                     {:?} missed TTFT by {slip:.3}s",
+                                    r.id, rec.kind);
+                            ttft_tails += 1;
+                        }
+                        if !rec.tpot_met() {
+                            assert!(
+                                speculating,
+                                "{policy} {sc:?}@{rate}: req {} stage {:?} \
+                                 TPOT {:.1}ms > {:.1}ms (AR must be strict)",
+                                r.id, rec.kind, 1e3 * rec.worst_tpot,
+                                1e3 * rec.tpot_slo
+                            );
+                            tpot_tails += 1;
+                        }
+                    }
+                }
+                assert!(admitted_finished > 0,
+                        "{policy} {sc:?}@{rate}: nothing admitted");
+                assert!(tpot_tails as f64
+                        <= 0.18 * admitted_finished as f64,
+                        "{policy} {sc:?}@{rate}: {tpot_tails} TPOT tails \
+                         among {admitted_finished} admitted");
+                assert!(ttft_tails as f64
+                        <= 0.03 * admitted_finished as f64,
+                        "{policy} {sc:?}@{rate}: {ttft_tails} TTFT tails \
+                         among {admitted_finished} admitted");
+            }
+        }
+    }
+}
+
+#[test]
+fn fig3_worked_example_ordering() {
+    // Ours attains at least as many requests as both greedy baselines in
+    // the paper's toy (6 tokens/unit, 4-request burst over 3 decodes).
+    let rows = slos_serve::figures::fig3_worked_example();
+    let get = |name: &str| {
+        rows.iter().find(|r| r.0 == name).map(|r| r.1).unwrap()
+    };
+    let ours = get("slos-serve");
+    assert!(ours >= get("vllm"), "ours {ours} < vllm {}", get("vllm"));
+    assert!(ours >= get("sarathi"), "ours {ours} < sarathi {}",
+            get("sarathi"));
+    assert!(ours >= 5, "paper: all 3 existing + 3 of 4 new attained");
+}
+
+#[test]
+fn burst_deferral_preserves_standard_tier() {
+    let c = cfg(Scenario::Coder, 5.0, 200);
+    let wl = workload::generate(&c);
+    let res = run(make_policy("slos-serve", &c).as_mut(), wl, &c);
+    assert!(res.metrics.best_effort > 0,
+            "5 req/s Coder must exceed one A100");
+    // Best-effort requests eventually complete (drained in lulls).
+    let be_finished = res
+        .requests
+        .iter()
+        .filter(|r| r.tier == ServiceTier::BestEffort && r.is_finished())
+        .count();
+    assert!(be_finished > 0, "best-effort tier starved");
+}
+
+#[test]
+fn mixed_scenario_isolates_slo_classes() {
+    // In Mixed at moderate load, tight-prefill (summarizer-class) and
+    // tight-decode (coder-class) requests coexist; the scheduler keeps
+    // standard-tier p99s near their SLOs (Fig. 12's point).
+    let c = cfg(Scenario::Mixed, 1.5, 200);
+    let wl = workload::generate(&c);
+    let res = run(make_policy("slos-serve", &c).as_mut(), wl, &c);
+    assert!(res.metrics.attainment() > 0.8, "{:?}", res.metrics);
+    assert!(res.metrics.tpot_p99 <= 0.105,
+            "standard tpot p99 {:.1}ms", 1e3 * res.metrics.tpot_p99);
+}
+
+#[test]
+fn toolllm_multi_stage_slos_tracked_per_stage() {
+    let c = cfg(Scenario::ToolLlm, 0.8, 60);
+    let wl = workload::generate(&c);
+    let res = run(make_policy("slos-serve", &c).as_mut(), wl, &c);
+    let multi = res
+        .requests
+        .iter()
+        .filter(|r| r.is_finished() && r.stage_records.len() >= 2)
+        .count();
+    assert!(multi > 0, "ToolLLM requests should have multiple stages");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let c = cfg(Scenario::Coder, 2.0, 100);
+    let wl = workload::generate(&c);
+    let a = run(make_policy("slos-serve", &c).as_mut(), wl.clone(), &c);
+    let b = run(make_policy("slos-serve", &c).as_mut(), wl, &c);
+    assert_eq!(a.metrics.finished, b.metrics.finished);
+    assert_eq!(a.metrics.attained, b.metrics.attained);
+    assert!((a.metrics.span - b.metrics.span).abs() < 1e-9);
+}

@@ -1,0 +1,266 @@
+//! Property-based invariants over the coordinator (proptest-style, using
+//! the in-repo `proptest_lite` runner — DESIGN.md §2): randomized inputs,
+//! seeded and replayable.
+
+use slos_serve::config::{Hardware, Scenario, ScenarioConfig, SloSpec};
+use slos_serve::coordinator::batch_formation::{form_batches, DecodingReq};
+use slos_serve::coordinator::budget::{BudgetCurve, DemandLine};
+use slos_serve::coordinator::dp::{Candidate, DpConfig, DpPlanner};
+use slos_serve::coordinator::perf_model::PerfModel;
+use slos_serve::coordinator::request::{Request, ServiceTier};
+use slos_serve::coordinator::scheduler::SlosServe;
+use slos_serve::coordinator::spec_decode;
+use slos_serve::memory::BlockAllocator;
+use slos_serve::proptest_lite::{forall, Gen};
+use slos_serve::sim::run;
+
+const CASES: usize = 60;
+
+fn model() -> PerfModel {
+    PerfModel::preset(Hardware::A100)
+}
+
+#[test]
+fn prop_dp_admissions_fit_token_budget() {
+    // Fig. 5 invariant: cumulative admitted prefill by each deadline never
+    // exceeds what the hardware can produce by then.
+    let m = model();
+    forall(CASES, |g: &mut Gen| {
+        let n = g.usize(1, 12);
+        let cands: Vec<Candidate> = (0..n as u64)
+            .map(|i| Candidate {
+                id: i,
+                pddl: g.f64(0.05, 3.0),
+                prefill_tokens: g.usize(50, 4000),
+                mem_pages: g.usize(10, 300),
+                tier: g.usize(0, 1),
+                forced: false,
+            })
+            .collect();
+        let cfg = DpConfig {
+            tiers: vec![0.05, 0.1],
+            running_counts: vec![g.usize(0, 30), g.usize(0, 60)],
+            mem_free_pages: g.usize(500, 50_000),
+            speculative: g.bool(),
+            spec_alpha: 0.8,
+            max_spec_len: 5,
+        };
+        let plan = DpPlanner::new(&cfg, &m).plan(0.0, &cands);
+        let mut admitted: Vec<&Candidate> = cands
+            .iter()
+            .filter(|c| plan.admitted.contains(&c.id))
+            .collect();
+        admitted.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap());
+        let mut cum = 0usize;
+        for c in admitted {
+            cum += c.prefill_tokens;
+            let cap = m.tokens_within(c.pddl, 0);
+            assert!(cum <= cap,
+                    "demand {cum} by {} exceeds capacity {cap}", c.pddl);
+        }
+        // Memory: admitted reservations fit.
+        let pages: usize = cands
+            .iter()
+            .filter(|c| plan.admitted.contains(&c.id))
+            .map(|c| c.mem_pages)
+            .sum();
+        assert!(pages <= cfg.mem_free_pages + cfg.mem_free_pages / 16,
+                "pages {pages} > free {}", cfg.mem_free_pages);
+        // Partition: every candidate either admitted or declined, once.
+        assert_eq!(plan.admitted.len() + plan.declined.len(), n);
+    });
+}
+
+#[test]
+fn prop_batch_formation_meets_every_tpot() {
+    let m = model();
+    forall(CASES, |g: &mut Gen| {
+        let n = g.usize(1, 40);
+        let decoding: Vec<DecodingReq> = (0..n as u64)
+            .map(|i| DecodingReq {
+                id: i,
+                tpot: *g.choose(&[0.05, 0.1]),
+                remaining: g.usize(1, 500),
+            })
+            .collect();
+        let horizon = g.f64(0.2, 2.0);
+        let batches = form_batches(horizon, &decoding, &m);
+        // Replay: token k of request r completes by k*tpot (batch windows
+        // are t0-aligned).
+        let mut t = 0.0;
+        let mut served: std::collections::HashMap<u64, usize> =
+            Default::default();
+        for b in &batches {
+            t += b.duration;
+            assert!(b.prefill_budget + b.decodes.len()
+                    <= m.time2bs(b.duration, 0) + 1);
+            for &(id, k) in &b.decodes {
+                let r = decoding.iter().find(|r| r.id == id).unwrap();
+                let c = served.entry(id).or_insert(0);
+                *c += k;
+                assert!(*c <= r.remaining, "over-served {id}");
+                assert!(t <= *c as f64 * r.tpot + 1e-9,
+                        "req {id} token {c} late at {t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spec_solver_never_violates_binding_tier() {
+    let m = model();
+    forall(CASES, |g: &mut Gen| {
+        let tiers = [0.05, 0.1];
+        let counts = [g.usize(0, 200), g.usize(0, 200)];
+        let alpha = g.f64(0.1, 0.95);
+        if let Some(plan) = spec_decode::solve(&tiers, &counts, alpha, 8, &m) {
+            for l in 0..2 {
+                if counts[l] == 0 {
+                    continue;
+                }
+                let budget_time =
+                    tiers[l] * spec_decode::acc(alpha, plan.spec_lens[l]);
+                assert!(plan.batch_time <= budget_time + 1e-9,
+                        "tier {l}: batch {} > {}", plan.batch_time,
+                        budget_time);
+            }
+            // The batch physically fits.
+            let verify: usize = (0..2)
+                .map(|l| counts[l] * (plan.spec_lens[l] + 1))
+                .sum();
+            let step = *plan.spec_lens.iter().max().unwrap();
+            assert!(verify + plan.prefill_budget
+                    <= m.time2bs(plan.batch_time, step));
+        }
+    });
+}
+
+#[test]
+fn prop_allocator_conserves_pages() {
+    forall(CASES, |g: &mut Gen| {
+        let total = g.usize(4, 200);
+        let mut a = BlockAllocator::new(total, 16);
+        let mut held: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..g.usize(1, 60) {
+            if g.bool() || held.is_empty() {
+                let want = g.usize(1, 20);
+                if let Some(p) = a.alloc(want) {
+                    assert_eq!(p.len(), want);
+                    held.push(p);
+                }
+            } else {
+                let i = g.usize(0, held.len() - 1);
+                let p = held.swap_remove(i);
+                a.free(&p);
+            }
+            let held_n: usize = held.iter().map(|h| h.len()).sum();
+            assert_eq!(a.used_pages(), held_n, "leak or double count");
+            assert_eq!(a.free_pages() + a.used_pages(), total);
+            // No page appears twice across holders.
+            let mut all: Vec<u32> =
+                held.iter().flatten().copied().collect();
+            all.sort_unstable();
+            let len = all.len();
+            all.dedup();
+            assert_eq!(all.len(), len, "duplicate page handed out");
+        }
+    });
+}
+
+#[test]
+fn prop_budget_feasibility_checker_consistent() {
+    // feasible() <=> no violation_time(); removing a line never turns a
+    // feasible set infeasible (monotonicity).
+    use slos_serve::coordinator::budget::{feasible, violation_time};
+    forall(CASES, |g: &mut Gen| {
+        let n = g.usize(1, 8);
+        let lines: Vec<DemandLine> = (0..n)
+            .map(|_| DemandLine::new(
+                g.f64(0.0, 5.0), g.f64(1.0, 2000.0),
+                g.f64(0.0, 50.0), g.f64(0.0, 3000.0)))
+            .collect();
+        let budget = BudgetCurve::linear(0.0, g.f64(100.0, 20_000.0), 30.0);
+        let ok = feasible(&lines, &budget);
+        assert_eq!(ok, violation_time(&lines, &budget).is_none());
+        if ok {
+            for skip in 0..n {
+                let fewer: Vec<DemandLine> = lines
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != skip)
+                    .map(|(_, l)| *l)
+                    .collect();
+                assert!(feasible(&fewer, &budget),
+                        "removing demand broke feasibility");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sim_conservation_and_guarantees() {
+    // End-to-end randomized: request conservation, KV drained, and the
+    // standard tier's guarantees hold.
+    forall(20, |g: &mut Gen| {
+        let n = g.usize(5, 60);
+        let rate = g.f64(0.5, 5.0);
+        let mut c = ScenarioConfig::new(Scenario::ChatBot)
+            .with_requests(n)
+            .with_rate(rate)
+            .with_seed(g.usize(0, 1 << 30) as u64);
+        c.speculative = g.bool();
+        let mut t = 0.0;
+        let wl: Vec<Request> = (0..n as u64)
+            .map(|i| {
+                t += g.f64(0.0, 2.0 / rate);
+                // Decode >= 8: a sub-8-token generation under a 50 ms
+                // TPOT SLO has no meaningful windowed-TPOT semantics
+                // (every dataset in Tab. 4 has far longer outputs).
+                Request::simple(
+                    i, t, g.usize(16, 3000), g.usize(8, 300),
+                    SloSpec {
+                        ttft_slowdown: *g.choose(&[3.0, 5.0]),
+                        tpot: *g.choose(&[0.05, 0.1]),
+                    })
+            })
+            .collect();
+        let mut p = SlosServe::new(&c);
+        let speculative = c.speculative;
+        let res = run(&mut p, wl, &c);
+        assert_eq!(res.requests.len(), n, "request lost or duplicated");
+        assert_eq!(res.metrics.finished, n,
+                   "work-conserving scheduler must drain everything");
+        // Standard-tier guarantee, allowing the bounded tails the
+        // integration suite characterizes (spec-acceptance variance and
+        // batch-boundary TTFT slips of the perf-model error class).
+        let (mut std_total, mut std_missed) = (0usize, 0usize);
+        for r in &res.requests {
+            if r.tier == ServiceTier::Standard && r.is_finished() {
+                std_total += 1;
+                if !r.slo_attained() {
+                    std_missed += 1;
+                    for rec in &r.stage_records {
+                        let slip = rec.prefill_finished - rec.prefill_deadline;
+                        assert!(slip < 0.15,
+                                "req {} TTFT slip {slip:.3}s", r.id);
+                        if !speculative {
+                            assert!(rec.tpot_met(),
+                                    "AR TPOT must be strict: req {} \
+                                     {:.1}ms > {:.1}ms", r.id,
+                                    1e3 * rec.worst_tpot, 1e3 * rec.tpot_slo);
+                        }
+                    }
+                }
+            }
+        }
+        if std_total >= 10 {
+            // Speculative mode trades bounded TPOT tails for throughput
+            // (see EXPERIMENTS.md §Spec-tails); auto-regressive mode is
+            // strict (asserted above), so only its budget-level misses
+            // (bounded TTFT slips) may appear here.
+            let bound = if speculative { 0.25 } else { 0.10 };
+            assert!(std_missed as f64 <= bound * std_total as f64,
+                    "{std_missed}/{std_total} standard-tier misses                      (spec={speculative})");
+        }
+    });
+}

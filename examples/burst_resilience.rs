@@ -9,6 +9,7 @@
 
 use slos_serve::config::{Scenario, ScenarioConfig};
 use slos_serve::coordinator::scheduler::{Features, SlosServe};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::sim::run;
 use slos_serve::workload;
 
@@ -41,4 +42,17 @@ fn main() {
 
     println!("\nburst resilience gain: {:.2}x attainment",
              res.metrics.attainment() / res_g.metrics.attainment().max(1e-9));
+
+    // ---- §4.2: a 2-replica BurstAware pool on the same total load ----
+    // Spikes that one replica must defer to best-effort spill onto the
+    // other replica instead (feasibility-probed dispatch + migration of
+    // not-yet-prefilled deferred requests).
+    println!("\n== 2-replica pool, burst-aware routing (same total load) ==");
+    let wl2 = workload::generate(&cfg);
+    let rcfg = RouterConfig::new(2).with_policy(RoutePolicy::BurstAware);
+    let pool = run_multi_replica(wl2, &cfg, &rcfg);
+    println!("attainment {:.1}%  (BE-deferred: {}, rerouted: {}, \
+              migrated: {})",
+             100.0 * pool.metrics.attainment(), pool.metrics.best_effort,
+             pool.rerouted, pool.migrated);
 }

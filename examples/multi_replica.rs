@@ -1,18 +1,55 @@
-//! Multi-replica serving with SLO-driven routing (paper §4.2, Fig. 13):
-//! the same per-replica load served by 1..4 replicas; declined requests
-//! hop to the next replica, so the pool absorbs bursts single replicas
-//! cannot — yielding >= linear scaling of attained load.
+//! Multi-replica serving with SLO-driven routing (paper §4.2, Fig. 13).
+//!
+//! Part 1 compares the router's dispatch policies on one bursty Coder
+//! load over a heterogeneous 3-replica pool (one replica is
+//! memory-starved): load-blind round-robin overloads the weak replica,
+//! while the feasibility-probing policies route around it and BurstAware
+//! additionally migrates deferred requests out of overloaded queues.
+//!
+//! Part 2 scales 1..4 homogeneous replicas at a fixed per-replica rate —
+//! the pool absorbs bursts single replicas cannot, yielding >= linear
+//! scaling of attained load.
 //!
 //! ```bash
 //! cargo run --release --example multi_replica
 //! ```
 
-use slos_serve::config::{Scenario, ScenarioConfig};
-use slos_serve::router::{run_multi_replica, RouterConfig};
+use slos_serve::config::{ReplicaOverride, Scenario, ScenarioConfig};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::workload;
 
 fn main() {
+    // ---- Part 1: routing policies on a heterogeneous pool ----
+    let replicas = 3usize;
+    let cfg = ScenarioConfig::new(Scenario::Coder)
+        .with_rate(2.2 * replicas as f64)
+        .with_requests(200 * replicas)
+        .with_seed(11);
+    let overrides = vec![
+        ReplicaOverride::default(),
+        ReplicaOverride::default(),
+        // Replica 2: a quarter of the KV memory — a load-blind policy
+        // keeps sending it a third of the traffic anyway.
+        ReplicaOverride { kv_tokens: Some(25_000), ..Default::default() },
+    ];
+    println!("== routing policies, heterogeneous {replicas}-replica pool \
+              (replica 2 has 1/4 KV) ==");
+    println!("{:>16} {:>10} {:>9} {:>9} {:>9}",
+             "policy", "attained%", "finished", "rerouted", "migrated");
+    for policy in RoutePolicy::ALL {
+        let wl = workload::generate(&cfg);
+        let rcfg = RouterConfig::new(replicas)
+            .with_policy(policy)
+            .with_overrides(overrides.clone());
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("{:>16} {:>9.1}% {:>9} {:>9} {:>9}",
+                 policy.name(), 100.0 * res.metrics.attainment(),
+                 res.metrics.finished, res.rerouted, res.migrated);
+    }
+
+    // ---- Part 2: homogeneous scaling, slo-feasibility routing ----
     let per_replica_rate = 2.5;
+    println!("\n== scaling, slo-feasibility routing ==");
     println!("{:>9} {:>10} {:>10} {:>9} {:>9}",
              "replicas", "attained%", "finished", "rerouted", "served/s");
     let mut first = None;
@@ -22,7 +59,9 @@ fn main() {
             .with_requests(250 * replicas)
             .with_seed(11);
         let wl = workload::generate(&cfg);
-        let res = run_multi_replica(wl, &cfg, &RouterConfig::new(replicas));
+        let rcfg = RouterConfig::new(replicas)
+            .with_policy(RoutePolicy::SloFeasibility);
+        let res = run_multi_replica(wl, &cfg, &rcfg);
         let served_rate = res.metrics.attained as f64
             / res.metrics.span.max(1e-9);
         println!("{replicas:9} {:>9.1}% {:>10} {:>9} {served_rate:>9.2}",

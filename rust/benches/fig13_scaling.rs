@@ -2,7 +2,7 @@
 
 use slos_serve::bench_harness::Bench;
 use slos_serve::config::{Scenario, ScenarioConfig};
-use slos_serve::router::{run_multi_replica, RouterConfig};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::workload;
 
 fn main() {
@@ -16,10 +16,24 @@ fn main() {
             .with_requests(100 * replicas);
         b.bench(format!("{replicas}_replicas"), || {
             let wl = workload::generate(&cfg);
-            run_multi_replica(wl, &cfg, &RouterConfig::new(replicas))
-                .metrics
-                .attainment()
+            let rcfg = RouterConfig::new(replicas)
+                .with_policy(RoutePolicy::SloFeasibility);
+            run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
+        });
+    }
+    // Dispatch-policy overhead at a fixed pool size: the probing
+    // policies pay a DP dry-run per (arrival, replica).
+    let cfg = ScenarioConfig::new(Scenario::Coder)
+        .with_rate(2.4)
+        .with_requests(120);
+    let mut b2 = Bench::new("fig13_route_policy").with_target_time(1.5);
+    for policy in RoutePolicy::ALL {
+        b2.bench(policy.name(), || {
+            let wl = workload::generate(&cfg);
+            let rcfg = RouterConfig::new(2).with_policy(policy);
+            run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
         });
     }
     b.finish();
+    b2.finish();
 }

@@ -198,6 +198,10 @@ pub struct ScenarioConfig {
     /// residuals). Zero-margin schedulers break on it; margin-based ones
     /// absorb it.
     pub exec_noise: f64,
+    /// Optional cap (chunk budget) on tokens per batch below the hardware
+    /// preset's physical limit — used for heterogeneous replica pools
+    /// (§4.2) where replicas run different chunked-prefill budgets.
+    pub chunk_budget: Option<usize>,
     pub seed: u64,
 }
 
@@ -217,6 +221,7 @@ impl ScenarioConfig {
             spec_alpha: 0.8,
             max_spec_len: 8,
             exec_noise: 0.05,
+            chunk_budget: None,
             seed: 0,
         }
     }
@@ -242,8 +247,53 @@ impl ScenarioConfig {
     }
 
     pub fn perf_model(&self) -> PerfModel {
-        PerfModel::preset(self.hardware)
+        let mut m = PerfModel::preset(self.hardware);
+        if let Some(cap) = self.chunk_budget {
+            m.max_batch_tokens = m.max_batch_tokens.min(cap.max(1));
+        }
+        m
     }
+
+    /// Specialize this config for one replica of a heterogeneous pool
+    /// (§4.2): every `Some` field of the override replaces the pool-wide
+    /// value; `None` fields keep it.
+    pub fn for_replica(&self, ov: &ReplicaOverride) -> ScenarioConfig {
+        let mut c = self.clone();
+        if let Some(h) = ov.hardware {
+            c.hardware = h;
+        }
+        if let Some(kv) = ov.kv_tokens {
+            c.kv_tokens = kv;
+        }
+        if let Some(s) = ov.speculative {
+            c.speculative = s;
+        }
+        if let Some(a) = ov.spec_alpha {
+            c.spec_alpha = a;
+        }
+        if let Some(l) = ov.max_spec_len {
+            c.max_spec_len = l;
+        }
+        if let Some(cb) = ov.chunk_budget {
+            c.chunk_budget = Some(cb);
+        }
+        c
+    }
+}
+
+/// Per-replica deviations from the pool-wide [`ScenarioConfig`] for
+/// heterogeneous multi-replica serving (§4.2): replicas may differ in
+/// hardware generation, KV memory, speculative-decoding setup, and chunk
+/// budget. A default (all-`None`) override keeps the pool config.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplicaOverride {
+    pub hardware: Option<Hardware>,
+    pub kv_tokens: Option<usize>,
+    pub speculative: Option<bool>,
+    pub spec_alpha: Option<f64>,
+    pub max_spec_len: Option<usize>,
+    /// Cap on tokens per batch (chunked-prefill budget) for this replica.
+    pub chunk_budget: Option<usize>,
 }
 
 #[cfg(test)]
@@ -280,5 +330,37 @@ mod tests {
     fn coder_is_bursty_chat_is_stable() {
         assert_eq!(Scenario::Coder.arrival_pattern(), ArrivalPattern::Bursty);
         assert_eq!(Scenario::ChatBot.arrival_pattern(), ArrivalPattern::Stable);
+    }
+
+    #[test]
+    fn replica_override_specializes_config() {
+        let base = ScenarioConfig::new(Scenario::ChatBot);
+        let ov = ReplicaOverride {
+            kv_tokens: Some(12_000),
+            speculative: Some(false),
+            chunk_budget: Some(512),
+            ..Default::default()
+        };
+        let c = base.for_replica(&ov);
+        assert_eq!(c.kv_tokens, 12_000);
+        assert!(!c.speculative);
+        assert_eq!(c.perf_model().max_batch_tokens, 512);
+        // Untouched fields keep the pool config.
+        assert_eq!(c.hardware, base.hardware);
+        assert_eq!(c.spec_alpha, base.spec_alpha);
+        // Default override is the identity.
+        let same = base.for_replica(&ReplicaOverride::default());
+        assert_eq!(same.kv_tokens, base.kv_tokens);
+        assert_eq!(same.perf_model(), base.perf_model());
+    }
+
+    #[test]
+    fn chunk_budget_caps_but_never_raises_batch_tokens() {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        let physical = c.perf_model().max_batch_tokens;
+        c.chunk_budget = Some(physical * 4);
+        assert_eq!(c.perf_model().max_batch_tokens, physical);
+        c.chunk_budget = Some(0); // degenerate: clamped to 1 token
+        assert_eq!(c.perf_model().max_batch_tokens, 1);
     }
 }

@@ -198,10 +198,17 @@ impl<'a> DpPlanner<'a> {
                     counts.iter().map(|&c| c as usize).sum();
                 let non_forced = accepted - total_forced;
                 let cand = (non_forced, entry.pb, key);
+                // Ties break on the packed state key: HashMap iteration
+                // order is seeded per instance, so without a canonical
+                // tie-break two identical runs could reconstruct
+                // different (equally optimal) admission chains.
                 let better = match best_terminal {
                     None => true,
-                    Some((v, pb, _)) => {
-                        cand.0 > *v || (cand.0 == *v && cand.1 > *pb)
+                    Some((v, pb, k)) => {
+                        cand.0 > *v
+                            || (cand.0 == *v
+                                && (cand.1 > *pb
+                                    || (cand.1 == *pb && cand.2 < *k)))
                     }
                 };
                 if better {
@@ -249,7 +256,12 @@ impl<'a> DpPlanner<'a> {
                     let key = pack(ci, jmem + add_mem, &counts);
                     let cand_entry = Entry { pb: pb_new, parent: jkey };
                     let slot = next.entry(key).or_insert(cand_entry);
-                    if cand_entry.pb > slot.pb {
+                    // Equal-pb ties pick the smallest parent key so the
+                    // kept chain never depends on map iteration order.
+                    if cand_entry.pb > slot.pb
+                        || (cand_entry.pb == slot.pb
+                            && cand_entry.parent < slot.parent)
+                    {
                         *slot = cand_entry;
                     }
                 }
@@ -257,11 +269,14 @@ impl<'a> DpPlanner<'a> {
             if next.is_empty() {
                 break;
             }
-            // Merge into the global map, keep per-key max.
+            // Merge into the global map, keep per-key max (same canonical
+            // tie-break as above).
             frontier = Vec::with_capacity(next.len());
             for (key, entry) in next {
                 let slot = all_states.entry(key).or_insert(entry);
-                if entry.pb >= slot.pb {
+                if entry.pb > slot.pb
+                    || (entry.pb == slot.pb && entry.parent < slot.parent)
+                {
                     *slot = entry;
                 }
                 frontier.push(key);

@@ -177,22 +177,40 @@ impl SlosServe {
         last + k_last as f64 * r.stage().slo.tpot * HEADROOM
     }
 
-    /// Run DP admission over pending requests (Alg. 1 line 2).
-    fn admit(&mut self, now: f64, st: &mut ServerState) {
-        if st.pending.is_empty() {
-            return;
-        }
-        if !self.features.slo_scheduling {
-            // Ablation baseline: admit everything greedily.
-            let pending = std::mem::take(&mut st.pending);
-            for id in pending {
-                let pages = st.pages_for_request(st.req(id));
-                self.reserved.insert(id, pages);
-                st.running.push(id);
-            }
-            return;
-        }
+    /// Candidate set + DP configuration for an admission decision at
+    /// `now`: pending requests as non-forced candidates, running prefills
+    /// as forced candidates (their memory is already reserved, so mem
+    /// cost 0), running decodes as per-tier baseline counts. `probe`
+    /// prepends one extra non-forced candidate under the given id — the
+    /// router's §4.2 feasibility dry run. Shared by [`admit`] and
+    /// [`admission_probe`] so the probe can never drift from the real
+    /// admission pricing.
+    ///
+    /// [`admit`]: Self::admit
+    /// [`admission_probe`]: Self::admission_probe
+    fn admission_inputs(&self, now: f64, st: &ServerState,
+                        probe: Option<(RequestId, &Request)>)
+                        -> (Vec<Candidate>, DpConfig) {
         let mut candidates: Vec<Candidate> = Vec::new();
+        if let Some((pid, r)) = probe {
+            // A probe candidate not delivered anywhere yet has no deadline
+            // assigned; price it exactly as `sim::deliver` will set it —
+            // anchored at its arrival, not at the probe time.
+            let pddl = if r.pddl.is_finite() {
+                r.pddl
+            } else {
+                r.arrival + r.stage().slo.ttft_slowdown
+                    * st.model.zero_load_prefill(r.stage().prefill_tokens)
+            };
+            candidates.push(Candidate {
+                id: pid,
+                pddl,
+                prefill_tokens: r.prefill_remaining(),
+                mem_pages: st.pages_for_request(r),
+                tier: tier_of(r.tightest_tpot()),
+                forced: false,
+            });
+        }
         for &id in &st.pending {
             let r = st.req(id);
             candidates.push(Candidate {
@@ -204,8 +222,6 @@ impl SlosServe {
                 forced: false,
             });
         }
-        // Forced: admitted requests still prefilling (their memory is
-        // already reserved, so mem cost 0 here).
         let mut running_counts = vec![0usize; TIERS.len()];
         for &id in &st.running {
             let r = st.req(id);
@@ -234,6 +250,25 @@ impl SlosServe {
             spec_alpha: self.spec_alpha * 0.9,
             max_spec_len: self.max_spec_len,
         };
+        (candidates, dp_cfg)
+    }
+
+    /// Run DP admission over pending requests (Alg. 1 line 2).
+    fn admit(&mut self, now: f64, st: &mut ServerState) {
+        if st.pending.is_empty() {
+            return;
+        }
+        if !self.features.slo_scheduling {
+            // Ablation baseline: admit everything greedily.
+            let pending = std::mem::take(&mut st.pending);
+            for id in pending {
+                let pages = st.pages_for_request(st.req(id));
+                self.reserved.insert(id, pages);
+                st.running.push(id);
+            }
+            return;
+        }
+        let (candidates, dp_cfg) = self.admission_inputs(now, st, None);
         let plan = DpPlanner::new(&dp_cfg, &st.model).plan(now, &candidates);
         self.last_declined.clear();
         let pending = std::mem::take(&mut st.pending);
@@ -253,6 +288,24 @@ impl SlosServe {
                 st.running.push(id);
             }
         }
+    }
+
+    /// Feasibility probe for the §4.2 router: would the admission DP admit
+    /// `probe` on this replica *right now*, on top of its current token
+    /// and memory commitments? Pure — mutates nothing. Mirrors `admit`'s
+    /// candidate construction (pending competitors, forced running
+    /// prefills, running decode counts) with `probe` added as one more
+    /// non-forced candidate under a sentinel id.
+    pub fn admission_probe(&self, now: f64, st: &ServerState,
+                           probe: &Request) -> bool {
+        if !self.features.slo_scheduling {
+            return true; // the greedy ablation admits everything
+        }
+        const PROBE_ID: RequestId = RequestId::MAX;
+        let (candidates, dp_cfg) =
+            self.admission_inputs(now, st, Some((PROBE_ID, probe)));
+        let plan = DpPlanner::new(&dp_cfg, &st.model).plan(now, &candidates);
+        plan.admitted.contains(&PROBE_ID)
     }
 
     /// Preempt best-effort requests (drop KV, keep tokens) until at least

@@ -9,7 +9,7 @@ use crate::coordinator::perf_model::{PerfModel, Term};
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{Features, SlosServe};
 use crate::metrics::capacity_search;
-use crate::router::{run_multi_replica, RouterConfig};
+use crate::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use crate::sim::{run, Policy};
 use crate::workload::{self, Rng};
 
@@ -41,7 +41,10 @@ fn attainment_at(sc: Scenario, system: &str, rate: f64, requests: usize,
         return baselines::distserve::best_ratio_attainment(&wl, &cfg);
     }
     if replicas > 1 {
-        let mut rc = RouterConfig::new(replicas);
+        // SLO-driven dynamic routing (§4.2): feasibility probes + least
+        // load, not the static one-shot dispatcher.
+        let mut rc = RouterConfig::new(replicas)
+            .with_policy(RoutePolicy::SloFeasibility);
         if system == "slos-serve-ar" {
             rc.features = Some(Features {
                 speculative: false,
@@ -302,7 +305,8 @@ pub fn fig11_burst(requests: usize) -> Vec<(f64, usize, usize)> {
     res.load_trace
 }
 
-/// Fig. 12 — Mixed-scenario p99 TTFT slack / TPOT vs offered load.
+/// Fig. 12 — Mixed-scenario p99 TTFT slack / TPOT vs offered load,
+/// including a 2-replica SLO-routed pool at the same per-GPU load.
 pub fn fig12_mixed(requests: usize) -> Vec<(String, f64, f64, f64)> {
     println!("# Fig. 12 — Mixed scenario p99 latencies vs load");
     let mut out = Vec::new();
@@ -318,14 +322,28 @@ pub fn fig12_mixed(requests: usize) -> Vec<(String, f64, f64, f64)> {
                       tpot-p99 {:6.1}ms", m.ttft_p99, 1e3 * m.tpot_p99);
             out.push((name.to_string(), rate, m.ttft_p99, m.tpot_p99));
         }
+        // 2-replica pool with SLO-feasibility routing at the same
+        // per-GPU load (§4.2: multi-SLO + multi-replica).
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(rate * 2.0)
+            .with_requests(requests * 2);
+        let wl = workload::generate(&cfg);
+        let rc = RouterConfig::new(2).with_policy(RoutePolicy::SloFeasibility);
+        let m = run_multi_replica(wl, &cfg, &rc).metrics;
+        let name = "slos-serve-2rep";
+        println!("rate {rate:.1} {name:12} ttft-slack-p99 {:8.3}s \
+                  tpot-p99 {:6.1}ms", m.ttft_p99, 1e3 * m.tpot_p99);
+        out.push((name.to_string(), rate, m.ttft_p99, m.tpot_p99));
     }
     out
 }
 
-/// Fig. 13 — multi-replica capacity scaling (1..4 replicas).
+/// Fig. 13 — multi-replica capacity scaling (1..4 replicas) under
+/// SLO-feasibility routing (§4.2).
 pub fn fig13_scaling(requests: usize, scenarios: &[Scenario])
                      -> Vec<(Scenario, Vec<f64>)> {
-    println!("# Fig. 13 — multi-replica scaling (total capacity, req/s)");
+    println!("# Fig. 13 — multi-replica scaling (total capacity, req/s, \
+              slo-feasibility routing)");
     let mut out = Vec::new();
     for &sc in scenarios {
         let mut caps = Vec::new();
@@ -426,7 +444,7 @@ pub fn fig15_overhead() -> Vec<f64> {
 }
 
 /// CLI dispatcher.
-pub fn run_figure(id: &str, requests: usize) -> anyhow::Result<()> {
+pub fn run_figure(id: &str, requests: usize) -> Result<(), String> {
     match id {
         "1" => {
             fig1_summary(requests);
@@ -466,7 +484,7 @@ pub fn run_figure(id: &str, requests: usize) -> anyhow::Result<()> {
         "15" => {
             fig15_overhead();
         }
-        other => anyhow::bail!("unknown figure {other}"),
+        other => return Err(format!("unknown figure {other}")),
     }
     Ok(())
 }

@@ -17,21 +17,27 @@
 //!   schedulers for the paper's comparison studies.
 //! * [`sim`] — discrete-event GPU substrate driven by the same roofline
 //!   model (substitution for the paper's A100/H100 testbed; DESIGN.md §2).
-//! * [`router`] — §4.2 centralized multi-replica controller.
-//! * [`runtime`] / [`engine`] — the *real* path: PJRT CPU client executing
+//! * [`router`] — §4.2 multi-replica routing subsystem: per-replica
+//!   handles, feasibility probes, pluggable dispatch policies, and
+//!   cross-replica migration.
+//! * `runtime` / `engine` — the *real* path: PJRT CPU client executing
 //!   the JAX/Pallas AOT artifacts (tiny OPT-style model) with paged KV.
+//!   Gated behind the `xla` cargo feature (needs the vendored `xla` and
+//!   `anyhow` crates from the offline toolchain image).
 //! * [`workload`], [`metrics`], [`memory`], [`config`] — substrates.
 
 pub mod baselines;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod figures;
 pub mod memory;
 pub mod metrics;
 pub mod proptest_lite;
 pub mod router;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod workload;

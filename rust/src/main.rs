@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! slos-serve serve    [--scenario S] [--policy P] [--rate R]
-//!                     [--requests N] [--replicas K] [--seed X]
+//!                     [--requests N] [--replicas K] [--route-policy RP]
+//!                     [--seed X]
 //! slos-serve capacity [--scenario S] [--requests N]
 //! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15> [--requests N]
 //! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
@@ -17,7 +18,7 @@ use slos_serve::baselines;
 use slos_serve::config::{Scenario, ScenarioConfig};
 use slos_serve::figures::make_policy;
 use slos_serve::metrics::capacity_search;
-use slos_serve::router::{run_multi_replica, RouterConfig};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::sim::run;
 use slos_serve::workload;
 
@@ -66,14 +67,16 @@ impl Args {
 }
 
 const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
-  serve    --scenario S --policy P --rate R --requests N --replicas K --seed X
+  serve    --scenario S --policy P --rate R --requests N --replicas K
+           --route-policy RP --seed X
   capacity --scenario S --requests N
   figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15> --requests N
   trace    --scenario S --rate R --requests N [--stats]
-scenarios: chatbot coder summarizer mixed toolllm reasoning
-policies:  slos-serve slos-serve-ar vllm vllm-spec sarathi";
+scenarios:      chatbot coder summarizer mixed toolllm reasoning
+policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
+route policies: round-robin least-load slo-feasibility burst-aware";
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         println!("{USAGE}");
@@ -81,9 +84,9 @@ fn main() -> anyhow::Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
-    let scenario = |a: &Args, d: &str| -> anyhow::Result<Scenario> {
+    let scenario = |a: &Args, d: &str| -> Result<Scenario, String> {
         let s = a.str("scenario", d);
-        Scenario::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown scenario {s}"))
+        Scenario::parse(&s).ok_or_else(|| format!("unknown scenario {s}"))
     };
 
     match cmd.as_str() {
@@ -97,10 +100,14 @@ fn main() -> anyhow::Result<()> {
             let replicas: usize = args.get("replicas", 1);
             let wl = workload::generate(&cfg);
             if replicas > 1 {
-                let res =
-                    run_multi_replica(wl, &cfg, &RouterConfig::new(replicas));
+                let rp = args.str("route-policy", "slo-feasibility");
+                let rp = RoutePolicy::parse(&rp)
+                    .ok_or_else(|| format!("unknown route policy {rp}"))?;
+                let rcfg = RouterConfig::new(replicas).with_policy(rp);
+                let res = run_multi_replica(wl, &cfg, &rcfg);
                 print_metrics(&policy, &res.metrics);
-                println!("rerouted: {}", res.rerouted);
+                println!("route policy {} | rerouted {} | migrated {}",
+                         rp.name(), res.rerouted, res.migrated);
             } else {
                 let mut p = make_policy(&policy, &cfg);
                 let res = run(p.as_mut(), wl, &cfg);
@@ -124,7 +131,7 @@ fn main() -> anyhow::Result<()> {
             let id = args
                 .positional
                 .first()
-                .ok_or_else(|| anyhow::anyhow!("figure id required\n{USAGE}"))?;
+                .ok_or_else(|| format!("figure id required\n{USAGE}"))?;
             slos_serve::figures::run_figure(id, args.get("requests", 300))?;
         }
         "trace" => {

@@ -1,0 +1,348 @@
+//! The central multi-replica controller (paper §4.2): holds every
+//! replica's clock, routes each arrival through the configured
+//! [`RoutePolicy`], re-routes declined requests sequentially up to the
+//! route limit, and (under `BurstAware`) runs the cross-replica
+//! migration pass after every scheduling round.
+//!
+//! The event loop always advances the replica whose clock is furthest
+//! behind, so deliveries and re-routes happen in a deterministic global
+//! order; with one replica the loop degenerates to exactly the
+//! single-replica simulator's schedule (asserted by test).
+
+use std::collections::HashSet;
+
+use crate::config::ScenarioConfig;
+use crate::coordinator::request::{Request, RequestId};
+use crate::metrics::{collect, RunMetrics};
+use crate::router::migration;
+use crate::router::policy::RoutePolicy;
+use crate::router::replica::ReplicaHandle;
+use crate::router::RouterConfig;
+
+/// Outcome of a multi-replica run.
+pub struct MultiReplicaResult {
+    pub requests: Vec<Request>,
+    pub metrics: RunMetrics,
+    /// Requests that changed replica at least once (any mechanism).
+    pub rerouted: usize,
+    /// Requests moved by the BurstAware migration pass specifically.
+    pub migrated: usize,
+    /// Requests completed per replica (dispatch-balance diagnostics).
+    pub per_replica_finished: Vec<usize>,
+}
+
+/// The central router: replicas + dispatch state.
+pub struct Router {
+    pub replicas: Vec<ReplicaHandle>,
+    cfg: RouterConfig,
+    rr_next: usize,
+    /// Event-loop rounds so far (throttles the migration pass).
+    rounds: u64,
+    rerouted: HashSet<RequestId>,
+    migrated: HashSet<RequestId>,
+}
+
+impl Router {
+    pub fn new(scenario: &ScenarioConfig, rcfg: &RouterConfig) -> Router {
+        assert!(rcfg.replicas >= 1);
+        let replicas = (0..rcfg.replicas)
+            .map(|i| ReplicaHandle::new(i, scenario, rcfg.features,
+                                        rcfg.overrides.get(i)))
+            .collect();
+        Router {
+            replicas,
+            cfg: rcfg.clone(),
+            rr_next: 0,
+            rounds: 0,
+            rerouted: HashSet::new(),
+            migrated: HashSet::new(),
+        }
+    }
+
+    /// Serve `workload` to completion (or the safety horizon); consumes
+    /// the router.
+    pub fn run(mut self, mut workload: Vec<Request>) -> MultiReplicaResult {
+        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let total = workload.len();
+        let k = self.replicas.len();
+        let mut next_arrival = 0usize;
+        let mut finished = 0usize;
+        let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
+        let horizon = (span_guess + 120.0) * 20.0 + 600.0;
+
+        while finished < total {
+            // Advance the replica whose clock is furthest behind.
+            let r = (0..k)
+                .min_by(|&a, &b| {
+                    self.replicas[a]
+                        .clock
+                        .partial_cmp(&self.replicas[b].clock)
+                        .unwrap()
+                })
+                .unwrap();
+            let now = self.replicas[r].clock;
+            if now > horizon {
+                break;
+            }
+
+            // Route and deliver every arrival due by the lagging clock.
+            while next_arrival < total
+                && workload[next_arrival].arrival <= now
+            {
+                let req = workload[next_arrival].clone();
+                let dest =
+                    self.cfg.policy.route(&req, &self.replicas, self.rr_next);
+                self.rr_next += 1;
+                self.replicas[dest].deliver(req);
+                next_arrival += 1;
+            }
+
+            if self.replicas[r].step() {
+                finished = self.replicas.iter().map(|h| h.finished).sum();
+            } else {
+                // Idle: jump to the next interesting instant.
+                let mut next = f64::INFINITY;
+                if next_arrival < total {
+                    next = next.min(workload[next_arrival].arrival);
+                }
+                for (j, h) in self.replicas.iter().enumerate() {
+                    if j != r && h.clock > now {
+                        next = next.min(h.clock);
+                    }
+                }
+                if !next.is_finite() {
+                    // No timed event ahead — but another replica at an
+                    // equal clock may still hold work (e.g. a request we
+                    // just re-routed). Step aside instead of halting.
+                    let any_work = self
+                        .replicas
+                        .iter()
+                        .enumerate()
+                        .any(|(j, h)| j != r && h.has_work());
+                    if any_work {
+                        self.replicas[r].clock = now + 0.01;
+                        continue;
+                    }
+                    break; // nothing will ever happen again
+                }
+                self.replicas[r].clock = next.max(now + 1e-6);
+            }
+
+            self.reroute_declined(r);
+            self.rounds += 1;
+            // Migration is an overload valve, not a steady-state path:
+            // run it every few rounds so probing stays amortized.
+            if self.cfg.policy.migrates()
+                && self.rounds % 8 == 0
+                && !self.replicas[r].state.best_effort.is_empty()
+            {
+                for id in migration::rebalance(&mut self.replicas, r,
+                                               self.cfg.route_limit)
+                {
+                    self.migrated.insert(id);
+                    self.rerouted.insert(id);
+                }
+            }
+        }
+        self.finish()
+    }
+
+    /// §4.2 sequential re-route: requests replica `r` just declined hop
+    /// onwards until the route limit, then stay best-effort where they
+    /// are (the backup policy).
+    fn reroute_declined(&mut self, r: usize) {
+        let declined = self.replicas[r].take_declined();
+        if declined.is_empty() {
+            return;
+        }
+        let k = self.replicas.len();
+        for id in declined {
+            let hops = match self.replicas[r].state.requests.get(&id) {
+                Some(req) => req.route_hops,
+                None => continue,
+            };
+            if hops >= self.cfg.route_limit || k == 1 {
+                continue;
+            }
+            let dest = self.hop_target(r, id);
+            let mut req = self.replicas[r].extract(id).expect("declined id present");
+            req.route_hops += 1;
+            self.rerouted.insert(id);
+            self.replicas[dest].accept_rerouted(req);
+        }
+    }
+
+    /// Where a declined request hops: RoundRobin keeps the legacy
+    /// next-in-ring hop; LeastLoad picks the least-loaded other replica;
+    /// the SLO-aware policies probe for a replica that can still admit
+    /// it, preferring feasible-and-least-loaded.
+    fn hop_target(&self, r: usize, id: RequestId) -> usize {
+        let k = self.replicas.len();
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => (r + 1) % k,
+            RoutePolicy::LeastLoad => {
+                crate::router::policy::least_loaded(&self.replicas, Some(r))
+            }
+            RoutePolicy::SloFeasibility | RoutePolicy::BurstAware => {
+                let probe_req = self.replicas[r].state.requests[&id].clone();
+                crate::router::policy::best_probed(&probe_req,
+                                                   &self.replicas, Some(r))
+                    .map(|(j, _)| j)
+                    .unwrap_or((r + 1) % k)
+            }
+        }
+    }
+
+    fn finish(self) -> MultiReplicaResult {
+        let Router { replicas, rerouted, migrated, .. } = self;
+        let per_replica_finished: Vec<usize> =
+            replicas.iter().map(|h| h.finished).collect();
+        let span = replicas.iter().fold(0.0f64, |a, h| a.max(h.clock));
+        let mut requests: Vec<Request> = replicas
+            .into_iter()
+            .flat_map(|h| h.state.requests.into_values())
+            .collect();
+        requests.sort_by_key(|r| r.id);
+        let metrics = collect(&requests, span);
+        MultiReplicaResult {
+            requests,
+            metrics,
+            rerouted: rerouted.len(),
+            migrated: migrated.len(),
+            per_replica_finished,
+        }
+    }
+}
+
+/// Run `workload` over `rcfg.replicas` replicas of the scenario's server
+/// (thin wrapper over [`Router`], kept as the stable entry point).
+pub fn run_multi_replica(workload: Vec<Request>, cfg: &ScenarioConfig,
+                         rcfg: &RouterConfig) -> MultiReplicaResult {
+    Router::new(cfg, rcfg).run(workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ReplicaOverride, Scenario, SloSpec, SloTier};
+    use crate::coordinator::scheduler::SlosServe;
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn req(id: u64, arrival: f64, p: usize, d: usize) -> Request {
+        Request::simple(id, arrival, p, d,
+                        SloSpec::from_tiers(SloTier::Tight, SloTier::Loose))
+    }
+
+    #[test]
+    fn single_replica_equals_plain_sim() {
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| req(i, i as f64 * 0.8, 800, 40))
+            .collect();
+        let c = cfg();
+        let multi = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(1));
+        let mut p = SlosServe::new(&c);
+        let single = crate::sim::run(&mut p, reqs, &c);
+        assert_eq!(multi.metrics.finished, single.metrics.finished);
+        assert!((multi.metrics.attainment()
+                 - single.metrics.attainment()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replicas_scale_capacity() {
+        // A load that swamps 1 replica but fits 4.
+        let reqs: Vec<Request> = (0..80)
+            .map(|i| req(i, i as f64 * 0.05, 2000, 50))
+            .collect();
+        let c = cfg();
+        let one = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(1));
+        let four = run_multi_replica(reqs, &c, &RouterConfig::new(4));
+        assert!(four.metrics.attainment() > one.metrics.attainment() + 0.2,
+                "1-rep {} vs 4-rep {}",
+                one.metrics.attainment(), four.metrics.attainment());
+    }
+
+    #[test]
+    fn routing_rescues_declined_requests() {
+        // Marginal overload: each replica alone declines a few, and the
+        // pool absorbs some of them via sequential routing.
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| req(i, 0.08 * i as f64, 2500, 30))
+            .collect();
+        let c = cfg();
+        let two = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(2));
+        assert!(two.rerouted > 0, "expected re-routes under burst");
+        // Every rerouted request is still served (backup policy), and the
+        // pool does at least as well as a lone replica on the same load.
+        for r in two.requests.iter().filter(|r| r.route_hops > 0) {
+            assert!(r.is_finished(), "rerouted req {} dropped", r.id);
+        }
+        let one = run_multi_replica(reqs, &c, &RouterConfig::new(1));
+        assert!(two.metrics.attainment() + 1e-9 >= one.metrics.attainment(),
+                "2-replica {} < 1-replica {}",
+                two.metrics.attainment(), one.metrics.attainment());
+    }
+
+    #[test]
+    fn route_limit_respected() {
+        let reqs: Vec<Request> = (0..60)
+            .map(|i| req(i, 0.01 * i as f64, 3000, 30))
+            .collect();
+        let c = cfg();
+        let rcfg = RouterConfig { route_limit: 2, ..RouterConfig::new(3) };
+        let res = run_multi_replica(reqs, &c, &rcfg);
+        for r in &res.requests {
+            assert!(r.route_hops <= 2, "req {} hops {}", r.id, r.route_hops);
+        }
+    }
+
+    #[test]
+    fn per_replica_finished_sums_to_total() {
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, i as f64 * 0.3, 600, 20))
+            .collect();
+        let c = cfg();
+        let res = run_multi_replica(reqs, &c, &RouterConfig::new(3));
+        let sum: usize = res.per_replica_finished.iter().sum();
+        assert_eq!(sum, res.metrics.finished);
+        assert_eq!(res.per_replica_finished.len(), 3);
+    }
+
+    #[test]
+    fn heterogeneous_pool_builds_per_replica_configs() {
+        let c = cfg();
+        let rcfg = RouterConfig::new(2).with_overrides(vec![
+            ReplicaOverride { chunk_budget: Some(512),
+                              kv_tokens: Some(8_192),
+                              ..Default::default() },
+            ReplicaOverride::default(),
+        ]);
+        let router = Router::new(&c, &rcfg);
+        assert_eq!(router.replicas[0].state.model.max_batch_tokens, 512);
+        assert_eq!(router.replicas[0].state.kv.total_tokens(), 8_192);
+        assert_eq!(router.replicas[1].state.model.max_batch_tokens, 4096);
+        assert_eq!(router.replicas[1].state.kv.total_tokens(),
+                   c.kv_tokens / c.page_size * c.page_size);
+    }
+
+    #[test]
+    fn dynamic_policies_complete_all_work() {
+        // The same marginal-overload load drains fully under every policy
+        // (request conservation + no livelock).
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| req(i, 0.08 * i as f64, 2000, 25))
+            .collect();
+        let c = cfg();
+        for policy in RoutePolicy::ALL {
+            let rcfg = RouterConfig::new(2).with_policy(policy);
+            let res = run_multi_replica(reqs.clone(), &c, &rcfg);
+            assert_eq!(res.requests.len(), 40, "{policy:?} lost requests");
+            assert_eq!(res.metrics.finished, 40,
+                       "{policy:?} left work undone: {:?}", res.metrics);
+        }
+    }
+}

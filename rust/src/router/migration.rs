@@ -1,0 +1,146 @@
+//! Cross-replica re-queue of not-yet-prefilled requests (§4.2, the
+//! BurstAware policy's overload valve).
+//!
+//! When a burst lands on one replica, its DP defers the overflow to the
+//! best-effort tier (§4.1). Requests that have not produced anything
+//! replica-local yet — no KV pages, no prefill progress, no recompute
+//! debt — are free to move: a migration pass probes the other replicas
+//! and re-queues each such request, as standard tier, on a replica whose
+//! admission DP would still accept it. Every hop consumes one unit of
+//! the request's `route_hops` budget (`RouterConfig::route_limit`), which
+//! bounds ping-pong; requests keep their original prefill deadline, so
+//! migration can rescue an SLO but never relax one.
+
+use crate::coordinator::request::{Phase, RequestId};
+use crate::router::replica::ReplicaHandle;
+
+/// A request may migrate while nothing about it is replica-local.
+fn migratable(h: &ReplicaHandle, id: RequestId) -> bool {
+    let Some(r) = h.state.requests.get(&id) else { return false };
+    !r.is_finished()
+        && matches!(r.phase, Phase::Pending | Phase::Prefill)
+        && r.prefill_done == 0
+        && r.decode_done == 0
+        && r.recompute_pending == 0
+        && h.state.kv.tokens_of(id) == 0
+}
+
+/// Cap on candidates probed per pass: a probe costs one DP dry-run per
+/// peer replica, and the pass runs inside the router's event loop, so
+/// per-round work must stay bounded.
+const MAX_PROBED_PER_PASS: usize = 8;
+
+/// One migration pass for replica `src`: offload its not-yet-prefilled
+/// best-effort requests onto replicas whose feasibility probe still
+/// admits them. Returns the migrated ids (each request moves exactly
+/// once per pass; conservation is the caller's test invariant).
+pub fn rebalance(replicas: &mut [ReplicaHandle], src: usize,
+                 route_limit: u32) -> Vec<RequestId> {
+    let mut moved = Vec::new();
+    if replicas.len() < 2 {
+        return moved;
+    }
+    let mut probes_left = MAX_PROBED_PER_PASS;
+    let queue: Vec<RequestId> = replicas[src].state.best_effort.clone();
+    for id in queue {
+        if probes_left == 0 {
+            break;
+        }
+        if !migratable(&replicas[src], id) {
+            continue;
+        }
+        let probe_req = replicas[src].state.requests[&id].clone();
+        if probe_req.route_hops >= route_limit {
+            continue; // §4.2 backup policy: stays best-effort here
+        }
+        // Still-attainable requests only: a blown prefill deadline cannot
+        // be rescued anywhere, so don't spend probes on it.
+        if probe_req.pddl <= replicas[src].clock {
+            continue;
+        }
+        probes_left -= 1;
+        // Migration (unlike dispatch) moves only to a replica that would
+        // actually admit the request — no infeasible fallback.
+        let dest = match crate::router::policy::best_probed(
+            &probe_req, replicas, Some(src))
+        {
+            Some((dest, true)) => dest,
+            _ => continue,
+        };
+        let mut r = replicas[src].extract(id).expect("migratable implies present");
+        r.route_hops += 1;
+        replicas[dest].accept_rerouted(r);
+        moved.push(id);
+    }
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, ScenarioConfig, SloSpec, SloTier};
+    use crate::coordinator::request::{Request, ServiceTier};
+    use crate::sim::decline_to_best_effort;
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn handles(k: usize) -> Vec<ReplicaHandle> {
+        let c = cfg();
+        (0..k).map(|i| ReplicaHandle::new(i, &c, None, None)).collect()
+    }
+
+    fn deferred_request(h: &mut ReplicaHandle, id: u64) {
+        let r = Request::simple(id, 0.0, 600, 20,
+                                SloSpec::from_tiers(SloTier::Loose,
+                                                    SloTier::Loose));
+        h.deliver(r);
+        decline_to_best_effort(&mut h.state, id);
+    }
+
+    #[test]
+    fn rebalance_moves_deferred_request_to_feasible_replica() {
+        let mut reps = handles(2);
+        deferred_request(&mut reps[0], 7);
+        assert_eq!(reps[0].state.best_effort, vec![7]);
+        let moved = rebalance(&mut reps, 0, 2);
+        assert_eq!(moved, vec![7]);
+        assert!(!reps[0].state.requests.contains_key(&7));
+        let r = &reps[1].state.requests[&7];
+        assert_eq!(r.tier, ServiceTier::Standard);
+        assert_eq!(r.route_hops, 1);
+        assert!(reps[1].state.pending.contains(&7));
+        assert!(reps[1].state.best_effort.is_empty());
+    }
+
+    #[test]
+    fn route_limit_zero_pins_requests() {
+        let mut reps = handles(2);
+        deferred_request(&mut reps[0], 7);
+        let moved = rebalance(&mut reps, 0, 0);
+        assert!(moved.is_empty());
+        assert!(reps[0].state.requests.contains_key(&7));
+    }
+
+    #[test]
+    fn partially_prefilled_requests_stay_put() {
+        let mut reps = handles(2);
+        deferred_request(&mut reps[0], 7);
+        // Give it best-effort prefill progress + KV: now replica-local.
+        assert!(reps[0].state.kv.grow(7, 32));
+        reps[0].state.req_mut(7).advance_prefill(32, 0.01);
+        let moved = rebalance(&mut reps, 0, 2);
+        assert!(moved.is_empty());
+        assert!(reps[0].state.requests.contains_key(&7));
+    }
+
+    #[test]
+    fn single_replica_pool_never_migrates() {
+        let mut reps = handles(1);
+        deferred_request(&mut reps[0], 7);
+        assert!(rebalance(&mut reps, 0, 8).is_empty());
+    }
+}

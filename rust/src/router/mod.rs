@@ -1,27 +1,67 @@
-//! Multi-replica serving with SLO-driven request routing (paper §4.2).
+//! Multi-replica serving with SLO-driven request routing (paper §4.2) —
+//! a subsystem in four parts:
 //!
-//! A centralized controller virtualizes every replica: each replica has its
-//! own SLOs-Serve scheduler + perf model + state, and the controller holds
-//! all their clocks. New requests are dispatched round-robin; when a
-//! replica's scheduler declines a request (SLO unattainable *there*), the
-//! controller routes it to the next replica sequentially. After
-//! `route_limit` hops the backup policy applies: the request lands in the
-//! best-effort tier of its final replica.
+//! * [`replica`] — [`ReplicaHandle`]: one virtualized replica (its own
+//!   SLOs-Serve scheduler, server state, sim clock, and RNG stream),
+//!   plus the **feasibility probe**: a dry run of `DpPlanner::plan` over
+//!   the replica's current commitments answering "would this replica's
+//!   admission DP accept the candidate right now, under its own
+//!   `PerfModel`?".
+//! * [`policy`] — [`RoutePolicy`]: pluggable dispatch. `RoundRobin`
+//!   (static `i mod k`, the paper's one-shot dispatcher), `LeastLoad`
+//!   (fewest outstanding tokens), `SloFeasibility` (feasible-and-least-
+//!   loaded first, least-loaded spillover when no replica can admit),
+//!   and `BurstAware` (`SloFeasibility` + cross-replica migration).
+//! * [`balancer`] — [`Router`]: the central controller. Holds every
+//!   replica's clock, always advances the furthest-behind replica,
+//!   routes each arrival through the policy, and re-routes requests a
+//!   replica's DP declined — sequentially, up to `route_limit` hops,
+//!   after which the request stays in the best-effort tier where it is
+//!   (the §4.2 backup policy).
+//! * [`migration`] — the BurstAware overload valve: best-effort requests
+//!   that are **not yet prefilled** (no KV pages, no prefill progress,
+//!   no recompute debt — nothing replica-local) are re-queued, standard
+//!   tier, onto a replica whose probe still admits them. Hops consume
+//!   the same `route_limit` budget, bounding ping-pong. Requests keep
+//!   their original prefill deadline across every move: routing can
+//!   rescue an SLO, never relax one. A request extracted with partial
+//!   KV (the declined-hop path) releases its pages at the source and
+//!   carries recompute debt instead (§4.1 preemption semantics).
+//!
+//! Heterogeneous pools: `RouterConfig::overrides` gives replica `i` its
+//! own `ReplicaOverride` (hardware preset, KV budget, chunked-prefill
+//! budget, speculation setup) — see `ScenarioConfig::for_replica`.
 
-use crate::config::ScenarioConfig;
-use crate::coordinator::request::{Request, RequestId, ServiceTier};
-use crate::coordinator::scheduler::{Features, SlosServe};
-use crate::metrics::{collect, RunMetrics};
-use crate::sim::{apply_batch, Policy, ServerState};
-use crate::workload::Rng;
+pub mod balancer;
+pub mod migration;
+pub mod policy;
+pub mod replica;
 
+pub use balancer::{run_multi_replica, MultiReplicaResult, Router};
+pub use policy::RoutePolicy;
+pub use replica::{FeasibilityProbe, ReplicaHandle};
+
+use crate::config::ReplicaOverride;
+use crate::coordinator::scheduler::Features;
+
+/// Pool-level router configuration.
+#[derive(Debug, Clone)]
 pub struct RouterConfig {
     pub replicas: usize,
-    /// Max sequential re-routes before the backup policy (best-effort).
+    /// Max re-routes (declined hops + migrations) per request before the
+    /// backup policy (best-effort where it stands).
     pub route_limit: u32,
     /// Feature override for every replica's scheduler; `None` keeps the
     /// scenario's own configuration (speculation per Tab. 2 etc.).
     pub features: Option<Features>,
+    /// Dispatch policy for new arrivals (and hop-target selection).
+    pub policy: RoutePolicy,
+    /// Per-replica config overrides: entry `i` applies to replica `i`;
+    /// missing entries keep the pool [`ScenarioConfig`]. Empty =
+    /// homogeneous pool.
+    ///
+    /// [`ScenarioConfig`]: crate::config::ScenarioConfig
+    pub overrides: Vec<ReplicaOverride>,
 }
 
 impl RouterConfig {
@@ -30,223 +70,18 @@ impl RouterConfig {
             replicas,
             route_limit: replicas.saturating_sub(1) as u32,
             features: None,
-        }
-    }
-}
-
-/// Outcome of a multi-replica run.
-pub struct MultiReplicaResult {
-    pub requests: Vec<Request>,
-    pub metrics: RunMetrics,
-    /// Requests that were re-routed at least once.
-    pub rerouted: usize,
-}
-
-/// Run `workload` over `rcfg.replicas` replicas of the scenario's server.
-pub fn run_multi_replica(mut workload: Vec<Request>, cfg: &ScenarioConfig,
-                         rcfg: &RouterConfig) -> MultiReplicaResult {
-    assert!(rcfg.replicas >= 1);
-    workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    let k = rcfg.replicas;
-    let mut policies: Vec<SlosServe> = (0..k)
-        .map(|_| {
-            let p = SlosServe::new(cfg);
-            match rcfg.features {
-                Some(f) => p.with_features(f),
-                None => p,
-            }
-        })
-        .collect();
-    let mut states: Vec<ServerState> =
-        (0..k).map(|_| ServerState::new(cfg)).collect();
-    let mut clocks = vec![0.0f64; k];
-    let mut rngs: Vec<Rng> = (0..k)
-        .map(|i| Rng::new(cfg.seed ^ (0xB0B0 + i as u64)))
-        .collect();
-
-    let total = workload.len();
-    let mut next_arrival = 0usize;
-    let mut finished = 0usize;
-    let mut rerouted_ids: std::collections::HashSet<RequestId> =
-        Default::default();
-    let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
-    let horizon = (span_guess + 120.0) * 20.0 + 600.0;
-
-    // Round-robin dispatch decided up front (one-shot dispatcher, §6.2).
-    let assignment: Vec<usize> = (0..total).map(|i| i % k).collect();
-
-    while finished < total {
-        // Pick the replica whose clock is furthest behind.
-        let r = (0..k)
-            .min_by(|&a, &b| clocks[a].partial_cmp(&clocks[b]).unwrap())
-            .unwrap();
-        let now = clocks[r];
-        if now > horizon {
-            break;
-        }
-
-        // Deliver arrivals assigned to r that are due by its clock.
-        while next_arrival < total && workload[next_arrival].arrival <= now {
-            let idx = next_arrival;
-            let dest = assignment[idx];
-            let mut req = workload[idx].clone();
-            let zl = states[dest]
-                .model
-                .zero_load_prefill(req.stage().prefill_tokens);
-            let arr = req.arrival;
-            req.begin_stage(arr, zl);
-            states[dest].pending.push(req.id);
-            states[dest].requests.insert(req.id, req);
-            next_arrival += 1;
-        }
-
-        match policies[r].next_batch(now, &mut states[r]) {
-            Some(batch) if !batch.entries.is_empty() => {
-                let planned = batch.exec_time(&states[r].model);
-                let dt = states[r].sample_exec(planned);
-                clocks[r] = now + dt;
-                let (p, s) = (&mut policies[r], &mut states[r]);
-                finished += apply_batch(&batch, now + dt, s, &mut rngs[r], p);
-            }
-            _ => {
-                // Idle: jump to the next interesting instant.
-                let mut next = f64::INFINITY;
-                if next_arrival < total {
-                    next = next.min(workload[next_arrival].arrival);
-                }
-                for (j, &c) in clocks.iter().enumerate() {
-                    if j != r && c > now {
-                        next = next.min(c);
-                    }
-                }
-                if !next.is_finite() {
-                    // No timed event ahead — but another replica at an
-                    // equal clock may still hold work (e.g. a request we
-                    // just re-routed). Step aside instead of halting.
-                    let any_work = states.iter().enumerate().any(|(j, s)| {
-                        j != r
-                            && (!s.pending.is_empty()
-                                || !s.running.is_empty()
-                                || !s.best_effort.is_empty())
-                    });
-                    if any_work {
-                        clocks[r] = now + 0.01;
-                        continue;
-                    }
-                    break; // nothing will ever happen again
-                }
-                clocks[r] = next.max(now + 1e-6);
-            }
-        }
-
-        // SLO-driven routing: requests the replica just declined hop to the
-        // next replica (until the route limit).
-        let declined = std::mem::take(&mut policies[r].last_declined);
-        for id in declined {
-            let Some(req) = states[r].requests.get(&id) else { continue };
-            if req.route_hops >= rcfg.route_limit || k == 1 {
-                continue; // backup policy: stays best-effort here
-            }
-            let mut req = states[r].requests.remove(&id).unwrap();
-            states[r].best_effort.retain(|&x| x != id);
-            states[r].pending.retain(|&x| x != id);
-            req.route_hops += 1;
-            req.tier = ServiceTier::Standard;
-            rerouted_ids.insert(id);
-            let dest = (r + 1) % k;
-            states[dest].pending.push(id);
-            states[dest].requests.insert(id, req);
+            policy: RoutePolicy::RoundRobin,
+            overrides: Vec::new(),
         }
     }
 
-    let mut requests: Vec<Request> = states
-        .into_iter()
-        .flat_map(|s| s.requests.into_values())
-        .collect();
-    requests.sort_by_key(|r| r.id);
-    let span = clocks.iter().fold(0.0f64, |a, &b| a.max(b));
-    let metrics = collect(&requests, span);
-    MultiReplicaResult { requests, metrics, rerouted: rerouted_ids.len() }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::{Scenario, SloSpec, SloTier};
-
-    fn cfg() -> ScenarioConfig {
-        let mut c = ScenarioConfig::new(Scenario::ChatBot);
-        c.speculative = false;
-        c
+    pub fn with_policy(mut self, policy: RoutePolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
-    fn req(id: u64, arrival: f64, p: usize, d: usize) -> Request {
-        Request::simple(id, arrival, p, d,
-                        SloSpec::from_tiers(SloTier::Tight, SloTier::Loose))
-    }
-
-    #[test]
-    fn single_replica_equals_plain_sim() {
-        let reqs: Vec<Request> = (0..12)
-            .map(|i| req(i, i as f64 * 0.8, 800, 40))
-            .collect();
-        let c = cfg();
-        let multi = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(1));
-        let mut p = SlosServe::new(&c);
-        let single = crate::sim::run(&mut p, reqs, &c);
-        assert_eq!(multi.metrics.finished, single.metrics.finished);
-        assert!((multi.metrics.attainment()
-                 - single.metrics.attainment()).abs() < 1e-9);
-    }
-
-    #[test]
-    fn replicas_scale_capacity() {
-        // A load that swamps 1 replica but fits 4.
-        let reqs: Vec<Request> = (0..80)
-            .map(|i| req(i, i as f64 * 0.05, 2000, 50))
-            .collect();
-        let c = cfg();
-        let one = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(1));
-        let four = run_multi_replica(reqs, &c, &RouterConfig::new(4));
-        assert!(four.metrics.attainment() > one.metrics.attainment() + 0.2,
-                "1-rep {} vs 4-rep {}",
-                one.metrics.attainment(), four.metrics.attainment());
-    }
-
-    #[test]
-    fn routing_rescues_declined_requests() {
-        // Marginal overload: each replica alone declines a few, and the
-        // pool absorbs some of them via sequential routing.
-        let reqs: Vec<Request> = (0..40)
-            .map(|i| req(i, 0.08 * i as f64, 2500, 30))
-            .collect();
-        let c = cfg();
-        let two = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(2));
-        assert!(two.rerouted > 0, "expected re-routes under burst");
-        // Every rerouted request is still served (backup policy), and the
-        // pool does at least as well as a lone replica on the same load.
-        for r in two.requests.iter().filter(|r| r.route_hops > 0) {
-            assert!(r.is_finished(), "rerouted req {} dropped", r.id);
-        }
-        let one = run_multi_replica(reqs, &c, &RouterConfig::new(1));
-        assert!(two.metrics.attainment() + 1e-9 >= one.metrics.attainment(),
-                "2-replica {} < 1-replica {}",
-                two.metrics.attainment(), one.metrics.attainment());
-    }
-
-    #[test]
-    fn route_limit_respected() {
-        let reqs: Vec<Request> = (0..60)
-            .map(|i| req(i, 0.01 * i as f64, 3000, 30))
-            .collect();
-        let c = cfg();
-        let res = run_multi_replica(reqs, &c, &RouterConfig {
-            replicas: 3,
-            route_limit: 2,
-            features: None,
-        });
-        for r in &res.requests {
-            assert!(r.route_hops <= 2, "req {} hops {}", r.id, r.route_hops);
-        }
+    pub fn with_overrides(mut self, overrides: Vec<ReplicaOverride>) -> Self {
+        self.overrides = overrides;
+        self
     }
 }

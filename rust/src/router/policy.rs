@@ -1,0 +1,198 @@
+//! Pluggable dispatch policies for the §4.2 router.
+//!
+//! A policy picks the destination replica for each new arrival from the
+//! replicas' load signals and (for the SLO-aware policies) their
+//! feasibility probes — a `DpPlanner` dry run per replica answering
+//! "would your admission DP accept this request right now?". PolyServe-
+//! style cluster scheduling motivates probing per-replica feasibility
+//! instead of load-blind round-robin; AdaServe motivates coupling the
+//! routing decision with per-request SLO admission.
+
+use crate::coordinator::request::Request;
+use crate::router::replica::ReplicaHandle;
+
+/// How the router picks a destination replica for a new arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutePolicy {
+    /// Static `i mod k` assignment (the paper's one-shot dispatcher,
+    /// §6.2) — load- and SLO-blind.
+    #[default]
+    RoundRobin,
+    /// Fewest outstanding tokens (load-aware, SLO-blind).
+    LeastLoad,
+    /// Feasibility-probe first: among replicas whose admission DP would
+    /// accept the request, pick the least loaded; when none would, fall
+    /// back to the least loaded replica (its DP then defers the request
+    /// to best-effort — §4.1 spillover).
+    SloFeasibility,
+    /// [`SloFeasibility`](RoutePolicy::SloFeasibility) plus a periodic
+    /// cross-replica re-queue of not-yet-prefilled best-effort requests
+    /// onto replicas that can still admit them (see
+    /// [`migration`](crate::router::migration)) — the burst-resilient
+    /// pool behaviour of §4.2.
+    BurstAware,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastLoad,
+        RoutePolicy::SloFeasibility,
+        RoutePolicy::BurstAware,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastLoad => "least-load",
+            RoutePolicy::SloFeasibility => "slo-feasibility",
+            RoutePolicy::BurstAware => "burst-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        RoutePolicy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Does this policy run the cross-replica migration pass?
+    pub fn migrates(self) -> bool {
+        matches!(self, RoutePolicy::BurstAware)
+    }
+
+    /// Pick the destination replica for `req`. `rr_next` is the router's
+    /// running dispatch counter (used by RoundRobin only). Ties break on
+    /// the lowest replica index, keeping routing fully deterministic.
+    pub fn route(self, req: &Request, replicas: &[ReplicaHandle],
+                 rr_next: usize) -> usize {
+        debug_assert!(!replicas.is_empty());
+        match self {
+            RoutePolicy::RoundRobin => rr_next % replicas.len(),
+            RoutePolicy::LeastLoad => least_loaded(replicas, None),
+            RoutePolicy::SloFeasibility | RoutePolicy::BurstAware => {
+                best_probed(req, replicas, None)
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// Index of the replica with the fewest outstanding tokens (ties to the
+/// lowest index), optionally skipping one replica. Returns 0 when every
+/// replica is skipped (callers never skip in a 1-replica pool).
+pub fn least_loaded(replicas: &[ReplicaHandle], skip: Option<usize>)
+                    -> usize {
+    let mut best = 0usize;
+    let mut best_load = usize::MAX;
+    for (i, h) in replicas.iter().enumerate() {
+        if Some(i) == skip {
+            continue;
+        }
+        let load = h.outstanding_tokens();
+        if load < best_load {
+            best_load = load;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Probe every replica (optionally skipping one) and pick the best
+/// destination for `req`: feasible replicas sort strictly before
+/// infeasible ones, then fewest outstanding tokens, then lowest index.
+/// Returns `(index, feasible)`; `None` only when every replica was
+/// skipped. Shared by arrival dispatch, declined-hop targeting, and the
+/// migration pass so the three sites can never disagree on selection.
+pub fn best_probed(req: &Request, replicas: &[ReplicaHandle],
+                   skip: Option<usize>) -> Option<(usize, bool)> {
+    let mut best: Option<((usize, usize, usize), usize)> = None;
+    for (i, h) in replicas.iter().enumerate() {
+        if Some(i) == skip {
+            continue;
+        }
+        let p = h.probe(req);
+        let key = (usize::from(!p.feasible), p.outstanding_tokens, i);
+        if best.map_or(true, |(k, _)| key < k) {
+            best = Some((key, i));
+        }
+    }
+    best.map(|(k, i)| (i, k.0 == 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, ScenarioConfig, SloSpec, SloTier};
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn req(id: u64, prefill: usize, decode: usize) -> Request {
+        Request::simple(id, 0.0, prefill, decode,
+                        SloSpec::from_tiers(SloTier::Loose, SloTier::Loose))
+    }
+
+    /// A request already past prefill, decoding under a tight TPOT.
+    fn decoding_request(id: u64) -> Request {
+        let mut r = Request::simple(
+            id, 0.0, 16, 500,
+            SloSpec::from_tiers(SloTier::Tight, SloTier::Tight));
+        r.begin_stage(0.0, 0.01);
+        r.advance_prefill(16, 0.01);
+        r
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let c = cfg();
+        let replicas: Vec<ReplicaHandle> =
+            (0..3).map(|i| ReplicaHandle::new(i, &c, None, None)).collect();
+        let r = req(1, 100, 10);
+        assert_eq!(RoutePolicy::RoundRobin.route(&r, &replicas, 0), 0);
+        assert_eq!(RoutePolicy::RoundRobin.route(&r, &replicas, 4), 1);
+        assert_eq!(RoutePolicy::RoundRobin.route(&r, &replicas, 5), 2);
+    }
+
+    #[test]
+    fn least_load_prefers_idle_replica() {
+        let c = cfg();
+        let mut a = ReplicaHandle::new(0, &c, None, None);
+        let b = ReplicaHandle::new(1, &c, None, None);
+        a.deliver(req(1, 2000, 50));
+        let replicas = vec![a, b];
+        let fresh = req(2, 400, 20);
+        assert_eq!(RoutePolicy::LeastLoad.route(&fresh, &replicas, 0), 1);
+    }
+
+    #[test]
+    fn slo_feasibility_avoids_saturated_replica() {
+        let c = cfg();
+        let mut a = ReplicaHandle::new(0, &c, None, None);
+        let b = ReplicaHandle::new(1, &c, None, None);
+        // Saturate replica 0's decode capacity: far more tight-TPOT
+        // decoders than one batch window can serve (time2bs(42.5ms) ~ 166
+        // tokens on the A100 preset), so any enlarged set is unsustainable.
+        for i in 0..200u64 {
+            let r = decoding_request(100 + i);
+            a.state.running.push(r.id);
+            a.state.requests.insert(r.id, r);
+        }
+        let fresh = req(2, 400, 20);
+        assert!(!a.probe(&fresh).feasible, "saturated replica must refuse");
+        assert!(b.probe(&fresh).feasible);
+        let replicas = vec![a, b];
+        assert_eq!(RoutePolicy::SloFeasibility.route(&fresh, &replicas, 0), 1);
+        assert_eq!(RoutePolicy::BurstAware.route(&fresh, &replicas, 0), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+}

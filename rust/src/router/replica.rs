@@ -1,0 +1,231 @@
+//! One virtualized replica (paper §4.2): its own SLOs-Serve scheduler,
+//! server state, simulation clock, and speculative-acceptance RNG, plus
+//! the *feasibility probe* the router consults before dispatching.
+//!
+//! The probe is a dry run of the admission machinery: `DpPlanner::plan`
+//! over the replica's pending queue, running prefills, and running decode
+//! counts, with the candidate request added — i.e. "would this replica's
+//! DP admit the request right now, given its current token and memory
+//! commitments under its own `PerfModel`?". Probing mutates nothing.
+
+use crate::config::{ReplicaOverride, ScenarioConfig};
+use crate::coordinator::request::{Request, RequestId, ServiceTier};
+use crate::coordinator::scheduler::{Features, SlosServe};
+use crate::sim::{apply_batch, deliver, Policy, ServerState};
+use crate::workload::Rng;
+
+/// Snapshot a feasibility probe returns to the routing policy.
+#[derive(Debug, Clone, Copy)]
+pub struct FeasibilityProbe {
+    /// Would the admission DP admit the candidate here right now?
+    pub feasible: bool,
+    /// Tokens still to process across every live request (prefill +
+    /// recompute + decode) — the load signal.
+    pub outstanding_tokens: usize,
+    /// `outstanding_tokens` over peak throughput: estimated seconds to
+    /// drain the backlog.
+    pub drain_seconds: f64,
+    pub pending: usize,
+    pub running: usize,
+    pub best_effort: usize,
+}
+
+/// One simulated replica under the central router.
+pub struct ReplicaHandle {
+    pub id: usize,
+    /// This replica's resolved config (pool config + override).
+    pub cfg: ScenarioConfig,
+    pub policy: SlosServe,
+    pub state: ServerState,
+    /// This replica's virtual clock (the controller holds all clocks).
+    pub clock: f64,
+    /// Speculative-acceptance stream, deterministic per (seed, replica).
+    pub rng: Rng,
+    /// Requests completed on this replica.
+    pub finished: usize,
+}
+
+impl ReplicaHandle {
+    /// Build replica `id` from the pool config, an optional pool-wide
+    /// feature override, and an optional per-replica config override
+    /// (heterogeneous pools, §4.2).
+    pub fn new(id: usize, base: &ScenarioConfig, features: Option<Features>,
+               ov: Option<&ReplicaOverride>) -> Self {
+        let cfg = match ov {
+            Some(o) => base.for_replica(o),
+            None => base.clone(),
+        };
+        let mut policy = SlosServe::new(&cfg);
+        if let Some(f) = features {
+            policy = policy.with_features(f);
+        }
+        let state = ServerState::new(&cfg);
+        let rng = Rng::new(cfg.seed ^ (0xB0B0 + id as u64));
+        ReplicaHandle { id, cfg, policy, state, clock: 0.0, rng, finished: 0 }
+    }
+
+    /// Deliver a newly routed arrival: enters its stage against this
+    /// replica's perf model (prefill deadline set here) and queues it.
+    pub fn deliver(&mut self, r: Request) {
+        deliver(&mut self.state, r);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.state.pending.is_empty()
+            || !self.state.running.is_empty()
+            || !self.state.best_effort.is_empty()
+    }
+
+    /// Tokens still to be processed across every live request — the
+    /// LeastLoad signal (proportional to remaining GPU work).
+    pub fn outstanding_tokens(&self) -> usize {
+        self.state
+            .requests
+            .values()
+            .filter(|r| !r.is_finished())
+            .map(|r| {
+                r.prefill_remaining() + r.decode_remaining()
+                    + r.recompute_pending
+            })
+            .sum()
+    }
+
+    /// Dry-run admission for `candidate` plus load snapshot.
+    pub fn probe(&self, candidate: &Request) -> FeasibilityProbe {
+        let outstanding = self.outstanding_tokens();
+        FeasibilityProbe {
+            feasible: self
+                .policy
+                .admission_probe(self.clock, &self.state, candidate),
+            outstanding_tokens: outstanding,
+            drain_seconds: outstanding as f64
+                / self.state.model.peak_throughput(),
+            pending: self.state.pending.len(),
+            running: self.state.running.len(),
+            best_effort: self.state.best_effort.len(),
+        }
+    }
+
+    /// Execute one scheduling round at this replica's clock. Returns true
+    /// if a batch ran (clock advanced by its jittered execution time);
+    /// false if the replica idled.
+    pub fn step(&mut self) -> bool {
+        let now = self.clock;
+        match self.policy.next_batch(now, &mut self.state) {
+            Some(batch) if !batch.entries.is_empty() => {
+                let planned = batch.exec_time(&self.state.model);
+                let dt = self.state.sample_exec(planned);
+                self.clock = now + dt;
+                self.finished += apply_batch(&batch, now + dt,
+                                             &mut self.state, &mut self.rng,
+                                             &mut self.policy);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drain the ids the scheduler declined in its last admission round.
+    pub fn take_declined(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.policy.last_declined)
+    }
+
+    /// Remove a request from this replica entirely (re-route/migration).
+    /// Any KV built here is useless elsewhere: the pages are released and
+    /// the already-processed tokens become recompute debt on the next
+    /// replica (§4.1 preemption semantics) — this also fixes the page
+    /// leak the pre-subsystem router had on re-routing partially
+    /// prefilled best-effort requests.
+    pub fn extract(&mut self, id: RequestId) -> Option<Request> {
+        let mut r = self.state.requests.remove(&id)?;
+        self.state.pending.retain(|&x| x != id);
+        self.state.running.retain(|&x| x != id);
+        self.state.best_effort.retain(|&x| x != id);
+        if self.state.kv.release(id) > 0 {
+            r.recompute_pending = r.tokens_held();
+        }
+        Some(r)
+    }
+
+    /// Accept a request re-routed from another replica: it re-enters the
+    /// pending queue at standard tier so this replica's DP re-decides
+    /// admission. The prefill deadline is *kept* — SLOs are a property of
+    /// the request and its arrival, not of whichever replica serves it.
+    pub fn accept_rerouted(&mut self, mut r: Request) {
+        r.tier = ServiceTier::Standard;
+        let id = r.id;
+        self.state.pending.push(id);
+        self.state.requests.insert(id, r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scenario, SloSpec, SloTier};
+
+    fn cfg() -> ScenarioConfig {
+        let mut c = ScenarioConfig::new(Scenario::ChatBot);
+        c.speculative = false;
+        c
+    }
+
+    fn req(id: u64, prefill: usize, decode: usize) -> Request {
+        Request::simple(id, 0.0, prefill, decode,
+                        SloSpec::from_tiers(SloTier::Loose, SloTier::Loose))
+    }
+
+    #[test]
+    fn outstanding_tokens_tracks_delivered_work() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        assert_eq!(h.outstanding_tokens(), 0);
+        h.deliver(req(1, 500, 20));
+        h.deliver(req(2, 300, 10));
+        assert_eq!(h.outstanding_tokens(), 830);
+        assert!(h.has_work());
+    }
+
+    #[test]
+    fn probe_is_pure_and_feasible_on_idle_replica() {
+        let c = cfg();
+        let h = ReplicaHandle::new(0, &c, None, None);
+        let p = h.probe(&req(9, 800, 40));
+        assert!(p.feasible, "idle replica must admit a modest request");
+        assert_eq!(p.outstanding_tokens, 0);
+        assert_eq!(h.state.requests.len(), 0, "probe must not mutate");
+    }
+
+    #[test]
+    fn extract_releases_kv_and_sets_recompute_debt() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        h.deliver(req(1, 100, 4));
+        // Simulate partial prefill progress with KV held.
+        assert!(h.state.kv.grow(1, 48));
+        h.state.req_mut(1).advance_prefill(48, 0.1);
+        let free_before = h.state.kv.allocator().free_pages();
+        let r = h.extract(1).expect("present");
+        assert_eq!(r.recompute_pending, 48);
+        assert!(h.state.kv.allocator().free_pages() > free_before,
+                "pages must return to the pool");
+        assert!(h.state.requests.is_empty());
+        assert!(!h.has_work());
+    }
+
+    #[test]
+    fn heterogeneous_override_shapes_replica() {
+        use crate::config::ReplicaOverride;
+        let c = cfg();
+        let ov = ReplicaOverride {
+            kv_tokens: Some(4_096),
+            chunk_budget: Some(256),
+            ..Default::default()
+        };
+        let h = ReplicaHandle::new(1, &c, None, Some(&ov));
+        assert_eq!(h.state.model.max_batch_tokens, 256);
+        assert_eq!(h.state.kv.total_tokens(), 4_096);
+        let plain = ReplicaHandle::new(0, &c, None, None);
+        assert!(plain.state.model.max_batch_tokens > 256);
+    }
+}

@@ -125,11 +125,7 @@ pub fn run_with_model(policy: &mut dyn Policy, mut workload: Vec<Request>,
     while finished < total && now < horizon {
         // Deliver arrivals due by `now`.
         while next_arrival < total && workload[next_arrival].arrival <= now {
-            let mut r = workload[next_arrival].clone();
-            let zl = state.model.zero_load_prefill(r.stage().prefill_tokens);
-            r.begin_stage(r.arrival, zl);
-            state.pending.push(r.id);
-            state.requests.insert(r.id, r);
+            deliver(&mut state, workload[next_arrival].clone());
             next_arrival += 1;
         }
 
@@ -165,6 +161,19 @@ pub fn run_with_model(policy: &mut dyn Policy, mut workload: Vec<Request>,
     requests.sort_by_key(|r| r.id);
     let metrics = collect(&requests, now);
     SimResult { requests, metrics, load_trace, batch_log }
+}
+
+/// Deliver a newly arrived (or newly routed) request into `state`: its
+/// current stage is entered against *this* server's zero-load prefill
+/// latency (setting the prefill deadline) and it joins the pending queue.
+/// Shared by the single-replica loop and the §4.2 router so the two
+/// drivers cannot drift.
+pub fn deliver(state: &mut ServerState, mut r: Request) {
+    let zl = state.model.zero_load_prefill(r.stage().prefill_tokens);
+    let arrival = r.arrival;
+    r.begin_stage(arrival, zl);
+    state.pending.push(r.id);
+    state.requests.insert(r.id, r);
 }
 
 /// Apply a finished batch's token progress; returns #requests completed.

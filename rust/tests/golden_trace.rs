@@ -1,0 +1,76 @@
+//! Golden-trace regression lock: a small fixed-seed Mixed workload is
+//! served by the full SLOs-Serve scheduler and every request's
+//! completion record (tier, per-stage TTFT slack, worst windowed TPOT,
+//! SLO verdict) is compared *exactly* against a committed snapshot —
+//! future scheduler refactors cannot silently change behavior.
+//!
+//! Times are rounded to whole microseconds before comparison, so the
+//! snapshot is stable against last-ulp libm differences while still
+//! pinning every scheduling decision. On first run (snapshot missing,
+//! e.g. right after this test lands) the file is bootstrapped and the
+//! test passes with a notice: commit `tests/golden/mixed_seed7.trace`.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::coordinator::scheduler::SlosServe;
+use slos_serve::sim::run;
+use slos_serve::workload;
+
+fn trace() -> String {
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(1.5)
+        .with_requests(60)
+        .with_seed(7);
+    let wl = workload::generate(&cfg);
+    let res = run(&mut SlosServe::new(&cfg), wl, &cfg);
+    let mut out = String::new();
+    writeln!(out, "# golden v1: mixed seed=7 rate=1.5 n=60").unwrap();
+    for r in &res.requests {
+        write!(out, "req {:03} tier {:?} hops {} finished {}",
+               r.id, r.tier, r.route_hops, r.is_finished()).unwrap();
+        for rec in &r.stage_records {
+            let slack_us = ((rec.prefill_finished - rec.prefill_deadline)
+                            * 1e6).round() as i64;
+            let tpot_us = (rec.worst_tpot * 1e6).round() as i64;
+            write!(out, " | {:?} ttft_slack_us {} tpot_us {} met {}",
+                   rec.kind, slack_us, tpot_us, rec.met()).unwrap();
+        }
+        writeln!(out).unwrap();
+    }
+    writeln!(out, "attained {}/{} best_effort {} span_us {}",
+             res.metrics.attained, res.metrics.total,
+             res.metrics.best_effort,
+             (res.metrics.span * 1e6).round() as i64).unwrap();
+    out
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/mixed_seed7.trace")
+}
+
+#[test]
+fn golden_mixed_trace_matches_snapshot() {
+    let got = trace();
+    let path = golden_path();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        eprintln!("golden trace bootstrapped at {} — commit this file",
+                  path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(got, want,
+               "scheduler behavior changed vs the golden trace; if the \
+                change is intentional, delete {} and re-run to regenerate",
+               path.display());
+}
+
+#[test]
+fn golden_trace_is_deterministic_within_process() {
+    assert_eq!(trace(), trace(),
+               "two identical runs must produce identical traces");
+}

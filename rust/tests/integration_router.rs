@@ -1,0 +1,135 @@
+//! Deterministic integration tests for the §4.2 multi-replica routing
+//! subsystem: SLO-feasibility routing beats load-blind round-robin on a
+//! bursty Mixed workload over a heterogeneous pool, requests are
+//! conserved across routing/migration, and identical seeds give
+//! identical results.
+
+use std::collections::HashSet;
+
+use slos_serve::config::{ReplicaOverride, Scenario, ScenarioConfig};
+use slos_serve::coordinator::request::Request;
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+const REPLICAS: usize = 3;
+
+/// Mixed multi-SLO traffic for the 3-replica pool.
+fn pool_cfg() -> ScenarioConfig {
+    ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(3.3)
+        .with_requests(240)
+        .with_seed(42)
+}
+
+/// Mixed arrivals are near-Poisson; compress the middle third into a
+/// 4x-rate spike to get the bursty Mixed workload of the §4.2 claim.
+fn bursty_mixed(cfg: &ScenarioConfig) -> Vec<Request> {
+    let mut wl = workload::generate(cfg);
+    let n = wl.len();
+    let (a, b) = (n / 3, 2 * n / 3);
+    let t0 = wl[a].arrival;
+    for r in wl[a..b].iter_mut() {
+        r.arrival = t0 + (r.arrival - t0) / 4.0;
+    }
+    wl
+}
+
+/// Heterogeneous pool: replicas 1 and 2 are memory-starved (8k KV tokens
+/// vs 100k), so a load-blind dispatcher keeps overloading them while the
+/// feasibility probes route around them.
+fn hetero(rcfg: RouterConfig) -> RouterConfig {
+    rcfg.with_overrides(vec![
+        ReplicaOverride::default(),
+        ReplicaOverride { kv_tokens: Some(8_000), ..Default::default() },
+        ReplicaOverride { kv_tokens: Some(8_000), ..Default::default() },
+    ])
+}
+
+#[test]
+fn slo_feasibility_beats_round_robin_on_bursty_mixed() {
+    let cfg = pool_cfg();
+    let wl = bursty_mixed(&cfg);
+    let rr = run_multi_replica(
+        wl.clone(), &cfg, &hetero(RouterConfig::new(REPLICAS)));
+    let slo = run_multi_replica(
+        wl, &cfg,
+        &hetero(RouterConfig::new(REPLICAS)
+            .with_policy(RoutePolicy::SloFeasibility)));
+    assert!(rr.metrics.attainment() < 1.0,
+            "the burst must exceed the pool under round-robin, got {:?}",
+            rr.metrics);
+    assert!(slo.metrics.attainment() > rr.metrics.attainment(),
+            "slo-feasibility {:.3} must beat round-robin {:.3} on the \
+             bursty heterogeneous pool",
+            slo.metrics.attainment(), rr.metrics.attainment());
+}
+
+#[test]
+fn burst_aware_not_worse_than_plain_feasibility_routing() {
+    // Migration is an overload valve: on the bursty pool it must not
+    // lose requests and should not hurt attainment materially.
+    let cfg = pool_cfg();
+    let wl = bursty_mixed(&cfg);
+    let slo = run_multi_replica(
+        wl.clone(), &cfg,
+        &hetero(RouterConfig::new(REPLICAS)
+            .with_policy(RoutePolicy::SloFeasibility)));
+    let burst = run_multi_replica(
+        wl, &cfg,
+        &hetero(RouterConfig::new(REPLICAS)
+            .with_policy(RoutePolicy::BurstAware)));
+    assert!(burst.metrics.attainment() + 0.05
+            >= slo.metrics.attainment(),
+            "burst-aware {:.3} far below slo-feasibility {:.3}",
+            burst.metrics.attainment(), slo.metrics.attainment());
+}
+
+#[test]
+fn requests_conserved_across_routing_and_migration() {
+    let cfg = pool_cfg();
+    let wl = bursty_mixed(&cfg);
+    let n = wl.len();
+    for policy in RoutePolicy::ALL {
+        let rcfg = RouterConfig {
+            route_limit: 5,
+            ..hetero(RouterConfig::new(REPLICAS).with_policy(policy))
+        };
+        let res = run_multi_replica(wl.clone(), &cfg, &rcfg);
+        assert_eq!(res.requests.len(), n,
+                   "{policy:?}: request lost or duplicated");
+        let ids: HashSet<u64> = res.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), n, "{policy:?}: duplicate ids in result");
+        assert_eq!(res.metrics.finished, n,
+                   "{policy:?}: pool must drain everything: {:?}",
+                   res.metrics);
+        for r in &res.requests {
+            assert!(r.route_hops <= 5,
+                    "{policy:?}: req {} exceeded route limit ({} hops)",
+                    r.id, r.route_hops);
+        }
+        let sum: usize = res.per_replica_finished.iter().sum();
+        assert_eq!(sum, n, "{policy:?}: per-replica counts disagree");
+    }
+}
+
+#[test]
+fn identical_seeds_give_identical_results() {
+    let cfg = pool_cfg();
+    for policy in [RoutePolicy::SloFeasibility, RoutePolicy::BurstAware] {
+        let mk = || {
+            run_multi_replica(
+                bursty_mixed(&cfg), &cfg,
+                &hetero(RouterConfig::new(REPLICAS).with_policy(policy)))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.metrics.finished, b.metrics.finished, "{policy:?}");
+        assert_eq!(a.metrics.attained, b.metrics.attained, "{policy:?}");
+        assert_eq!(a.rerouted, b.rerouted, "{policy:?}");
+        assert_eq!(a.migrated, b.migrated, "{policy:?}");
+        assert_eq!(a.metrics.span.to_bits(), b.metrics.span.to_bits(),
+                   "{policy:?}: span must match bit-exactly");
+        assert_eq!(a.per_replica_finished, b.per_replica_finished,
+                   "{policy:?}");
+    }
+}

@@ -1,6 +1,9 @@
 //! Integration tests over the REAL path: PJRT runtime + engine executing
 //! the JAX/Pallas AOT artifacts. Skipped (with a notice) when
 //! `artifacts/manifest.txt` is missing — run `make artifacts` first.
+//! The whole file needs the `xla` feature (vendored PJRT crates); the
+//! default dependency-free build compiles it away.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

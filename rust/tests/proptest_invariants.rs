@@ -3,7 +3,9 @@
 //! seeded and replayable.
 
 use slos_serve::config::{Hardware, Scenario, ScenarioConfig, SloSpec};
-use slos_serve::coordinator::batch_formation::{form_batches, DecodingReq};
+use slos_serve::coordinator::batch_formation::{form_batches,
+                                               prefill_budget_ar,
+                                               DecodingReq};
 use slos_serve::coordinator::budget::{BudgetCurve, DemandLine};
 use slos_serve::coordinator::dp::{Candidate, DpConfig, DpPlanner};
 use slos_serve::coordinator::perf_model::PerfModel;
@@ -68,6 +70,132 @@ fn prop_dp_admissions_fit_token_budget() {
                 "pages {pages} > free {}", cfg.mem_free_pages);
         // Partition: every candidate either admitted or declined, once.
         assert_eq!(plan.admitted.len() + plan.declined.len(), n);
+    });
+}
+
+#[test]
+fn prop_dp_plan_respects_deadlines_under_its_budget() {
+    // Replay the DP's own accounting over random candidate sets: walk the
+    // admitted chain in plan order, price the prefill budget between
+    // consecutive deadlines exactly as the planner does (`PB*` with the
+    // accepted-so-far decode counts added to the running baseline), and
+    // assert the budget never goes negative after paying each admitted
+    // prefill — i.e. every admitted deadline is respected by the plan
+    // (Fig. 5 / Eqn. 5 invariant).
+    let m = model();
+    forall(CASES, |g: &mut Gen| {
+        let n = g.usize(1, 14);
+        let mut cands: Vec<Candidate> = (0..n as u64)
+            .map(|i| Candidate {
+                id: i,
+                pddl: g.f64(0.05, 3.0),
+                prefill_tokens: g.usize(50, 4000),
+                mem_pages: g.usize(10, 300),
+                tier: g.usize(0, 1),
+                forced: false,
+            })
+            .collect();
+        // Sprinkle forced candidates (running requests mid-prefill).
+        for c in cands.iter_mut() {
+            if g.usize(0, 9) == 0 {
+                c.forced = true;
+            }
+        }
+        let cfg = DpConfig {
+            tiers: vec![0.05, 0.1],
+            running_counts: vec![g.usize(0, 30), g.usize(0, 60)],
+            mem_free_pages: g.usize(500, 50_000),
+            speculative: g.bool(),
+            spec_alpha: 0.8,
+            max_spec_len: 5,
+        };
+        let plan = DpPlanner::new(&cfg, &m).plan(0.0, &cands);
+        let mut extra = vec![0usize; cfg.tiers.len()];
+        let mut prev = 0.0f64;
+        let mut pb = 0.0f64;
+        for id in &plan.admitted {
+            let c = cands.iter().find(|c| c.id == *id).unwrap();
+            let counts: Vec<usize> = cfg
+                .running_counts
+                .iter()
+                .zip(&extra)
+                .map(|(a, b)| *a + *b)
+                .collect();
+            let dt = (c.pddl - prev).max(0.0);
+            let budget = if cfg.speculative {
+                spec_decode::prefill_budget_spec(
+                    dt, &cfg.tiers, &counts, cfg.spec_alpha,
+                    cfg.max_spec_len, &m)
+            } else {
+                prefill_budget_ar(dt, &cfg.tiers, &counts, &m)
+            };
+            let budget = budget
+                .expect("admitted chain must stay decode-sustainable");
+            pb += budget - c.prefill_tokens as f64;
+            assert!(pb >= -1e-6,
+                    "admitted candidate {} breaks its deadline: pb={pb}",
+                    c.id);
+            extra[c.tier] += 1;
+            prev = c.pddl;
+        }
+    });
+}
+
+#[test]
+fn prop_dp_admitted_decode_load_forms_budget_safe_batches() {
+    // Per-batch token allocations planned for the DP's admitted decode
+    // set never exceed the hardware budget: run Alg. 2 over (running
+    // baseline + admitted candidates) and check every batch against
+    // `time2bs` and the physical cap.
+    let m = model();
+    let tiers = [0.05, 0.1];
+    forall(CASES, |g: &mut Gen| {
+        let n = g.usize(1, 12);
+        let cands: Vec<Candidate> = (0..n as u64)
+            .map(|i| Candidate {
+                id: i,
+                pddl: g.f64(0.1, 2.5),
+                prefill_tokens: g.usize(50, 3000),
+                mem_pages: g.usize(10, 200),
+                tier: g.usize(0, 1),
+                forced: false,
+            })
+            .collect();
+        let cfg = DpConfig {
+            tiers: tiers.to_vec(),
+            running_counts: vec![g.usize(0, 25), g.usize(0, 50)],
+            mem_free_pages: g.usize(1_000, 50_000),
+            speculative: false,
+            spec_alpha: 0.8,
+            max_spec_len: 5,
+        };
+        let plan = DpPlanner::new(&cfg, &m).plan(0.0, &cands);
+        let mut counts = cfg.running_counts.clone();
+        for id in &plan.admitted {
+            let c = cands.iter().find(|c| c.id == *id).unwrap();
+            counts[c.tier] += 1;
+        }
+        let mut decoding = Vec::new();
+        for (l, &cnt) in counts.iter().enumerate() {
+            for j in 0..cnt {
+                decoding.push(DecodingReq {
+                    id: (l * 1000 + j) as u64,
+                    tpot: tiers[l],
+                    remaining: g.usize(1, 400),
+                });
+            }
+        }
+        let horizon = g.f64(0.3, 2.0);
+        for b in &form_batches(horizon, &decoding, &m) {
+            let toks: usize = b.prefill_budget
+                + b.decodes.iter().map(|d| d.1).sum::<usize>();
+            assert!(toks <= m.time2bs(b.duration, b.spec_step),
+                    "batch of {toks} tokens exceeds the {}-token budget \
+                     of its {}s window",
+                    m.time2bs(b.duration, b.spec_step), b.duration);
+            assert!(toks <= m.max_batch_tokens,
+                    "batch of {toks} tokens exceeds the physical cap");
+        }
     });
 }
 

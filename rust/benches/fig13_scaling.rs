@@ -1,6 +1,6 @@
 //! Fig. 13 — multi-replica capacity scaling with SLO-driven routing.
 
-use slos_serve::bench_harness::Bench;
+use slos_serve::bench_harness::{Bench, JsonReport};
 use slos_serve::config::{Scenario, ScenarioConfig};
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::workload;
@@ -34,6 +34,12 @@ fn main() {
             run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
         });
     }
-    b.finish();
-    b2.finish();
+    // End-to-end throughput per wall-second is the planner perf work's
+    // tracked signal (PERF.md): same simulated workload, less scheduler
+    // wall time => higher requests-per-wall-second here.
+    let mut report = JsonReport::new("fig13");
+    report.add_group("fig13_replica_run", b.finish());
+    report.add_group("fig13_route_policy", b2.finish());
+    let path = report.write().expect("write BENCH_fig13.json");
+    println!("wrote {}", path.display());
 }

@@ -1,0 +1,105 @@
+//! Admission-planner microbench: flat-arena DP (`DpPlanner::plan_with`
+//! with a retained scratch) vs the retained pre-arena HashMap baseline
+//! (`dp::reference::plan`), at 24 and 48 candidates, auto-regressive and
+//! speculative.
+//!
+//! Acceptance gates (ISSUE 3, skipped under `SLOS_BENCH_QUICK` — quick
+//! medians are noise):
+//!   * >= 5x median speedup on the 24-candidate speculative case vs. the
+//!     reference implementation;
+//!   * < 1 ms median for the 48-candidate cases.
+//!
+//! Writes `BENCH_planner.json` (repo root) — the committed copy is the
+//! perf-trajectory baseline; CI uploads a fresh one per run (PERF.md).
+
+use slos_serve::bench_harness::{fmt_time, quick, Bench, JsonReport};
+use slos_serve::config::Hardware;
+use slos_serve::coordinator::dp::{
+    reference, Candidate, DpConfig, DpPlanner, PlannerScratch,
+};
+use slos_serve::coordinator::perf_model::PerfModel;
+use slos_serve::workload::Rng;
+
+/// Deterministic candidate set shaped like a burst round: spread prefill
+/// deadlines, mixed tiers, a couple of forced mid-prefill requests.
+fn candidates(n: usize, seed: u64) -> Vec<Candidate> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|i| Candidate {
+            id: i,
+            pddl: 0.2 + rng.f64() * 2.0,
+            prefill_tokens: 200 + rng.below(2000),
+            mem_pages: 40 + rng.below(150),
+            tier: rng.below(2),
+            forced: i % 11 == 3, // ~2 forced per 24 candidates
+        })
+        .collect()
+}
+
+fn dp_cfg(speculative: bool) -> DpConfig {
+    DpConfig {
+        tiers: vec![0.05, 0.1],
+        running_counts: vec![30, 30],
+        mem_free_pages: 50_000,
+        speculative,
+        spec_alpha: 0.8,
+        max_spec_len: 6,
+    }
+}
+
+fn main() {
+    let m = PerfModel::preset(Hardware::A100);
+    let mut report = JsonReport::new("planner");
+
+    for spec in [false, true] {
+        let mode = if spec { "spec" } else { "ar" };
+        let cfg = dp_cfg(spec);
+        let planner = DpPlanner::new(&cfg, &m);
+        let mut b = Bench::new(format!("planner_{mode}"))
+            .with_target_time(1.0);
+        for n in [24usize, 48] {
+            let cands = candidates(n, 7 + n as u64);
+            // Differential sanity on the exact bench inputs: the speedup
+            // claim is void unless the plans are bit-identical.
+            let mut scratch = PlannerScratch::default();
+            assert_eq!(planner.plan_with(0.0, &cands, &mut scratch),
+                       reference::plan(&cfg, &m, 0.0, &cands),
+                       "flat != reference on {mode}/{n}");
+            let flat = b.bench(format!("flat_{n}"), || {
+                planner.plan_with(0.0, &cands, &mut scratch)
+            });
+            if n == 48 {
+                report.add_derived(format!("flat_{mode}_48_median_s"),
+                                   flat.median);
+            } else {
+                let refs = b.bench(format!("reference_{n}"), || {
+                    reference::plan(&cfg, &m, 0.0, &cands)
+                });
+                let speedup = refs.median / flat.median;
+                println!("planner_{mode}/speedup_24: {speedup:.1}x \
+                          (reference {} vs flat {})",
+                         fmt_time(refs.median), fmt_time(flat.median));
+                report.add_derived(format!("speedup_{mode}_24"), speedup);
+            }
+        }
+        report.add_group(format!("planner_{mode}"), b.finish());
+    }
+
+    if !quick() {
+        let spec24 = report.derived("speedup_spec_24").unwrap();
+        assert!(spec24 >= 5.0,
+                "flat planner must be >= 5x the reference on the \
+                 24-candidate speculative case, got {spec24:.2}x");
+        for mode in ["ar", "spec"] {
+            let m48 = report
+                .derived(&format!("flat_{mode}_48_median_s"))
+                .unwrap();
+            assert!(m48 < 1e-3,
+                    "48-candidate {mode} plan must stay < 1 ms median, \
+                     got {}", fmt_time(m48));
+        }
+    }
+
+    let path = report.write().expect("write BENCH_planner.json");
+    println!("wrote {}", path.display());
+}

@@ -9,8 +9,26 @@
 //! ```
 //! Each case is warmed up, then timed over enough iterations for a stable
 //! median; results print as `group/case  median  mean  min..max (n iters)`.
+//!
+//! Two extras support the tracked perf trajectory (PERF.md):
+//!
+//! * **Quick mode** — setting `SLOS_BENCH_QUICK` (any value) shrinks the
+//!   per-case target time and iteration floor so CI can smoke-run a bench
+//!   in seconds. Benches should gate hard perf assertions on
+//!   [`quick`]`() == false`; quick numbers are noise, the run only proves
+//!   the bench still executes end to end.
+//! * **[`JsonReport`]** — a machine-readable emitter: groups of case
+//!   stats plus derived scalars (speedups, medians), serialized as
+//!   dependency-free JSON to `BENCH_<name>.json` at the repo root so the
+//!   trajectory can be committed and diffed across PRs.
 
 use std::time::Instant;
+
+/// True when `SLOS_BENCH_QUICK` is set: smoke-run mode (tiny iteration
+/// counts, perf assertions skipped by well-behaved benches).
+pub fn quick() -> bool {
+    std::env::var_os("SLOS_BENCH_QUICK").is_some()
+}
 
 pub struct Bench {
     group: String,
@@ -18,6 +36,8 @@ pub struct Bench {
     pub target_time: f64,
     /// Minimum timed iterations.
     pub min_iters: usize,
+    /// Smoke-run mode: pinned tiny target time (see [`quick`]).
+    is_quick: bool,
     results: Vec<(String, Stats)>,
 }
 
@@ -32,16 +52,22 @@ pub struct Stats {
 
 impl Bench {
     pub fn new(group: impl Into<String>) -> Self {
+        let is_quick = quick();
         Bench {
             group: group.into(),
-            target_time: 2.0,
-            min_iters: 10,
+            target_time: if is_quick { 0.05 } else { 2.0 },
+            min_iters: if is_quick { 3 } else { 10 },
+            is_quick,
             results: Vec::new(),
         }
     }
 
+    /// Quick mode wins: its pinned target keeps CI smoke runs fast no
+    /// matter what the bench asks for.
     pub fn with_target_time(mut self, secs: f64) -> Self {
-        self.target_time = secs;
+        if !self.is_quick {
+            self.target_time = secs;
+        }
         self
     }
 
@@ -81,6 +107,127 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench report: named groups of case [`Stats`] plus
+/// derived scalar metrics, serialized as JSON. Written to
+/// `BENCH_<name>.json` at the repository root by default (one directory
+/// above this crate's manifest), overridable with the `SLOS_BENCH_JSON`
+/// env var (a file path). The committed files are the perf trajectory;
+/// CI uploads a fresh copy as an artifact on every run (status "quick"
+/// under `SLOS_BENCH_QUICK` — smoke evidence, not trajectory numbers).
+pub struct JsonReport {
+    name: String,
+    groups: Vec<(String, Vec<(String, Stats)>)>,
+    derived: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new(name: impl Into<String>) -> Self {
+        JsonReport { name: name.into(), groups: Vec::new(),
+                     derived: Vec::new() }
+    }
+
+    /// Add one finished group (pair with [`Bench::finish`]).
+    pub fn add_group(&mut self, group: impl Into<String>,
+                     results: Vec<(String, Stats)>) {
+        self.groups.push((group.into(), results));
+    }
+
+    /// Add a derived scalar (speedup ratio, worst median, ...).
+    pub fn add_derived(&mut self, key: impl Into<String>, value: f64) {
+        self.derived.push((key.into(), value));
+    }
+
+    /// Look up a derived scalar recorded earlier (bench-side assertions).
+    pub fn derived(&self, key: &str) -> Option<f64> {
+        self.derived.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    pub fn default_path(&self) -> std::path::PathBuf {
+        match std::env::var_os("SLOS_BENCH_JSON") {
+            Some(p) => p.into(),
+            None => std::path::PathBuf::from(
+                concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+                .join(format!("BENCH_{}.json", self.name)),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"slos-serve-bench-v1\",\n");
+        s.push_str(&format!("  \"benchmark\": {},\n", json_str(&self.name)));
+        // Discriminator the committed trajectory relies on: "bootstrap"
+        // (hand-written placeholder), "quick" (smoke-run noise — never
+        // commit), "measured" (full run on quiet hardware).
+        s.push_str(&format!("  \"status\": {},\n",
+                            json_str(if quick() { "quick" }
+                                     else { "measured" })));
+        s.push_str(&format!("  \"quick\": {},\n", quick()));
+        s.push_str("  \"groups\": [\n");
+        for (gi, (group, cases)) in self.groups.iter().enumerate() {
+            s.push_str(&format!("    {{\"group\": {}, \"cases\": [\n",
+                                json_str(group)));
+            for (ci, (id, st)) in cases.iter().enumerate() {
+                s.push_str(&format!(
+                    "      {{\"id\": {}, \"median_s\": {}, \"mean_s\": {}, \
+                     \"min_s\": {}, \"max_s\": {}, \"iters\": {}}}{}\n",
+                    json_str(id), json_f64(st.median), json_f64(st.mean),
+                    json_f64(st.min), json_f64(st.max), st.iters,
+                    if ci + 1 < cases.len() { "," } else { "" }));
+            }
+            s.push_str(&format!("    ]}}{}\n",
+                                if gi + 1 < self.groups.len() { "," }
+                                else { "" }));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"derived\": {");
+        for (i, (k, v)) in self.derived.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("{}: {}", json_str(k), json_f64(*v)));
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Serialize and write to [`default_path`](Self::default_path);
+    /// returns the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = self.default_path();
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON has no NaN/Infinity; clamp to null so the file stays parseable
+/// even if a degenerate stat slips through.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3} s")
@@ -111,6 +258,36 @@ mod tests {
         assert!(s.min <= s.median && s.median <= s.max);
         assert!(s.iters >= 10);
         assert_eq!(b.finish().len(), 1);
+    }
+
+    #[test]
+    fn json_report_serializes_groups_and_derived() {
+        let mut r = JsonReport::new("unit");
+        let st = Stats { median: 1.5e-4, mean: 1.6e-4, min: 1.0e-4,
+                         max: 9.0e-4, iters: 42 };
+        r.add_group("g1", vec![("case \"a\"".to_string(), st),
+                               ("b".to_string(), st)]);
+        r.add_derived("speedup", 7.25);
+        assert_eq!(r.derived("speedup"), Some(7.25));
+        assert_eq!(r.derived("missing"), None);
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"slos-serve-bench-v1\""));
+        assert!(j.contains("\"benchmark\": \"unit\""));
+        assert!(j.contains("\"group\": \"g1\""));
+        assert!(j.contains("\\\"a\\\""), "quotes must be escaped: {j}");
+        assert!(j.contains("\"iters\": 42"));
+        assert!(j.contains("\"speedup\": 7.25"));
+        // Balanced braces/brackets — cheap well-formedness check.
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(j.matches(open).count(), j.matches(close).count());
+        }
+    }
+
+    #[test]
+    fn json_f64_rejects_non_finite() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(0.5), "0.5");
     }
 
     #[test]

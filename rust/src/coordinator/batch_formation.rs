@@ -140,11 +140,11 @@ pub fn form_batches(t: f64, decoding: &[DecodingReq], m: &PerfModel)
         .collect();
     let n_batches = (t / t0).floor().max(1.0) as usize;
     let mut out = Vec::with_capacity(n_batches);
+    let mut requeue = Vec::with_capacity(decoding.len());
     for i in 0..n_batches {
         let window_end = (i + 1) as f64 * t0;
         let mut budget = per_batch;
         let mut decodes = Vec::new();
-        let mut requeue = Vec::new();
         // Serve every decode whose next-token deadline falls inside this
         // batch window (EDF order), one token each.
         while let Some(&front) = q.peek() {
@@ -161,7 +161,7 @@ pub fn form_batches(t: f64, decoding: &[DecodingReq], m: &PerfModel)
             item.sch_ddl += item.tpot;
             requeue.push(item);
         }
-        for it in requeue {
+        for it in requeue.drain(..) {
             q.push(it);
         }
         out.push(PlannedBatch {

@@ -17,8 +17,59 @@
 //! requests still mid-prefill appear as forced candidates every chain must
 //! include. Since the objective (accepted count per tier) is part of the
 //! state key, maximizing `pb` per key is exact — no Pareto frontier needed.
+//!
+//! # Flat-arena implementation
+//!
+//! This is the per-tick hot path: [`DpPlanner::plan`] runs on every
+//! `next_batch` invocation and again inside every router feasibility
+//! probe, so the DP core is a flat arena rather than per-layer hash maps:
+//!
+//! * **Key packing** — a state packs into a `u64` as three 7-bit fields
+//!   low-to-high: candidate index + 1 (bits 0..7), memory bucket (bits
+//!   7..14), then one 7-bit accepted-count per tier (bits 14..). The
+//!   field order makes `u64` comparison a lexicographic order on
+//!   `(counts_L..counts_1, mem, i)`, which is the canonical tie-break for
+//!   equal-value states (identical to the pre-arena packing, widened from
+//!   6-bit fields to admit [`MAX_CANDIDATES`] = 48).
+//! * **Arena layout** — every reachable state is one [`Node`] in a
+//!   `Vec`, with its parent as a `u32` arena index. States of chain
+//!   length `ℓ` have `sum(counts) == ℓ`, so a packed key can only ever be
+//!   produced in exactly one DP layer: the arena is append-only, each
+//!   layer occupies one contiguous index range, and the frontier is just
+//!   that range — no global map, no cross-layer dedup.
+//! * **Per-layer dedup** — a layer's raw transitions are collected into a
+//!   scratch `Vec`, sorted by key, and each equal-key run is reduced with
+//!   the canonical rule (max `pb`, ties to the smallest *parent key*),
+//!   which is order-independent and bit-identical to the retained
+//!   [`reference`] planner.
+//! * **`PB*` memo** — per-plan tables in [`PlannerScratch`] keyed by the
+//!   *exact bits* of `dt` plus the extra-count vector. The same
+//!   `(pDDL_i - pDDL_j, n⃗)` pairs recur across hundreds of transitions;
+//!   bit-exact keying keeps memoized answers identical to direct solver
+//!   calls (no quantization drift). Feasibility (`PB* == None`) depends
+//!   only on the count vector, never on `dt` (both solvers reject purely
+//!   on decode demand vs. per-window capacity), so it is cached per
+//!   counts-vector and consulted before any solve.
+//! * **Superset cutoffs** — naive monotonicity ("infeasible `n⃗` ⇒ every
+//!   superset infeasible") is *unsound* here: adding a tighter-tier
+//!   request shrinks the batch window, and in the capped-`time2bs` regime
+//!   a superset can become feasible (e.g. 300 loose decoders at 100 ms
+//!   overflow a 256-token cap, while adding one 50 ms decoder halves
+//!   per-window demand below the uncapped 240-token budget). The cutoff
+//!   is therefore restricted to the provable cases: a known-infeasible
+//!   vector rules out a dominating vector only when the binding window
+//!   `t0` (auto-regressive) or the live-tier set (speculative) is
+//!   unchanged — then demand grows while the budget stays fixed.
+//! * **[`PlannerScratch`]** — all of the above live in one reusable
+//!   scratch; steady-state planning performs no allocation (buffers and
+//!   table capacity are retained across `plan_with` calls).
+//!
+//! The pre-arena HashMap planner is retained verbatim in [`reference`]
+//! as the differential-test and benchmark baseline; the two must return
+//! bit-identical [`Plan`]s (see `tests/planner_diff.rs`).
 
 use std::collections::HashMap;
+use std::hash::BuildHasherDefault;
 
 use crate::coordinator::perf_model::PerfModel;
 use crate::coordinator::request::RequestId;
@@ -26,10 +77,15 @@ use crate::coordinator::{batch_formation, spec_decode};
 
 pub const MAX_TIERS: usize = 3;
 /// DP candidate cap per planning round; extras stay pending for the next
-/// round (paper: 0-10 new requests per invocation).
-pub const MAX_CANDIDATES: usize = 24;
+/// round (paper: 0-10 new requests per invocation). 48 fits the widened
+/// 7-bit index packing with room for deep burst queues.
+pub const MAX_CANDIDATES: usize = 48;
 /// Memory quantization buckets.
 const MEM_BUCKETS: usize = 64;
+/// Packed-field width (candidate index, mem bucket, per-tier count).
+const FIELD_BITS: u32 = 7;
+/// Per-tier accepted-count cap implied by the field width.
+const COUNT_CAP: u32 = 1 << FIELD_BITS;
 
 /// One admission candidate (a new request, or a running request still in
 /// prefill — `forced`).
@@ -64,7 +120,7 @@ pub struct DpConfig {
 }
 
 /// Admission plan produced by the DP.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Plan {
     pub admitted: Vec<RequestId>,
     pub declined: Vec<RequestId>,
@@ -72,32 +128,146 @@ pub struct Plan {
     pub value: usize,
 }
 
-#[derive(Clone, Copy)]
-struct Entry {
-    pb: f64,
-    parent: u32,
-}
-
-/// State key packing: candidate index+1 (6 bits) | mem bucket (7 bits) |
-/// per-tier counts (6 bits each, up to 3 tiers).
-fn pack(i: usize, mem: usize, counts: &[u8; MAX_TIERS]) -> u32 {
-    debug_assert!(i < 64 && mem < 128);
-    let mut k = (i as u32) | ((mem as u32) << 6);
+/// State key packing: candidate index+1 | mem bucket | per-tier counts,
+/// 7 bits each (low to high). Key comparison is the canonical state
+/// tie-break: lexicographic on `(counts_L.., mem, i)`.
+fn pack(i: usize, mem: usize, counts: &[u8; MAX_TIERS]) -> u64 {
+    debug_assert!(i < 1 << FIELD_BITS && mem < 1 << FIELD_BITS);
+    let mut k = (i as u64) | ((mem as u64) << FIELD_BITS);
     for (t, &c) in counts.iter().enumerate() {
-        debug_assert!(c < 64);
-        k |= (c as u32) << (13 + 6 * t);
+        debug_assert!((c as u32) < COUNT_CAP);
+        k |= (c as u64) << (2 * FIELD_BITS + FIELD_BITS * t as u32);
     }
     k
 }
 
-fn unpack(k: u32) -> (usize, usize, [u8; MAX_TIERS]) {
-    let i = (k & 63) as usize;
-    let mem = ((k >> 6) & 127) as usize;
+fn unpack(k: u64) -> (usize, usize, [u8; MAX_TIERS]) {
+    let mask = (1u64 << FIELD_BITS) - 1;
+    let i = (k & mask) as usize;
+    let mem = ((k >> FIELD_BITS) & mask) as usize;
     let mut counts = [0u8; MAX_TIERS];
     for (t, c) in counts.iter_mut().enumerate() {
-        *c = ((k >> (13 + 6 * t)) & 63) as u8;
+        *c = ((k >> (2 * FIELD_BITS + FIELD_BITS * t as u32)) & mask) as u8;
     }
     (i, mem, counts)
+}
+
+/// The memo key packs one byte per tier into a `u32`; raising
+/// [`MAX_TIERS`] past 4 must widen the key type, not silently truncate.
+const _: () = assert!(MAX_TIERS <= 4);
+
+/// Extra-count vector packed one byte per tier (memo key).
+fn counts_key(extra: &[u8; MAX_TIERS]) -> u32 {
+    let mut k = 0u32;
+    for (t, &c) in extra.iter().enumerate() {
+        k |= (c as u32) << (8 * t);
+    }
+    k
+}
+
+/// Component-wise `a <= b` on byte-packed count vectors.
+fn dominated_by(a: u32, b: u32) -> bool {
+    (0..MAX_TIERS)
+        .all(|t| ((a >> (8 * t)) & 0xFF) <= ((b >> (8 * t)) & 0xFF))
+}
+
+/// Multiply-rotate hasher for the small integer keys of the `PB*` memo
+/// (FxHash-style; the offline image has no external hash crates, and
+/// SipHash costs more than a memo hit saves).
+#[derive(Default)]
+pub struct FxHasher(u64);
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        const K: u64 = 0x517c_c1b7_2722_0a95;
+        self.0 = (self.0.rotate_left(5) ^ v).wrapping_mul(K);
+    }
+}
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// One arena state: packed key, best prefill budget, parent arena index
+/// (`u32::MAX`-free: the root is index 0 and is its own sentinel).
+#[derive(Clone, Copy)]
+struct Node {
+    key: u64,
+    pb: f64,
+    parent: u32,
+}
+
+/// One raw (pre-dedup) transition produced while expanding a layer.
+#[derive(Clone, Copy)]
+struct Trans {
+    key: u64,
+    pb: f64,
+    /// Arena index of the source state.
+    parent: u32,
+    /// Packed key of the source state — the canonical tie-break field.
+    parent_key: u64,
+}
+
+/// A counts-vector proven infeasible, with the context that makes the
+/// superset cutoff sound (see module doc).
+#[derive(Clone, Copy)]
+struct InfeasRec {
+    /// Live-tier bitmask of (running + extra).
+    mask: u8,
+    /// Bits of the binding window `min tpot over live tiers`.
+    t0: u64,
+    /// Packed extra-count vector.
+    key: u32,
+}
+
+/// Reusable planner state: arena, transition buffer, and the per-plan
+/// `PB*` memo tables. Steady-state planning with a retained scratch is
+/// allocation-free (capacity persists across [`DpPlanner::plan_with`]
+/// calls; contents are cleared at each call).
+#[derive(Default)]
+pub struct PlannerScratch {
+    cands: Vec<Candidate>,
+    overflow: Vec<RequestId>,
+    forced_prefix: Vec<u32>,
+    nodes: Vec<Node>,
+    trans: Vec<Trans>,
+    admitted_flags: Vec<bool>,
+    pb_memo: FxMap<(u64, u32), f64>,
+    pb_feas: FxMap<u32, bool>,
+    pb_infeasible: Vec<InfeasRec>,
+    counts_buf: Vec<usize>,
+}
+
+/// Split-borrow view of the memo tables (the arena fields are borrowed
+/// separately inside `plan_with`).
+struct PbCache<'s> {
+    memo: &'s mut FxMap<(u64, u32), f64>,
+    feas: &'s mut FxMap<u32, bool>,
+    infeasible: &'s mut Vec<InfeasRec>,
+    counts: &'s mut Vec<usize>,
 }
 
 pub struct DpPlanner<'a> {
@@ -114,34 +284,396 @@ impl<'a> DpPlanner<'a> {
 
     /// `PB*(dt, n⃗)` — prefill budget over `dt` seconds while the running
     /// baseline plus `extra` accepted candidates decode at their tiers.
-    fn pb_star(&self, dt: f64, extra: &[u8; MAX_TIERS]) -> Option<f64> {
-        let counts: Vec<usize> = self
-            .cfg
-            .running_counts
-            .iter()
-            .enumerate()
-            .map(|(l, &c)| c + extra[l] as usize)
-            .collect();
+    /// Direct (uncached) solve; the planning loop goes through
+    /// [`pb_star_memo`](Self::pb_star_memo) instead.
+    pub fn pb_star(&self, dt: f64, extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        let mut buf = Vec::with_capacity(self.cfg.tiers.len());
+        self.pb_star_into(&mut buf, dt, extra)
+    }
+
+    fn pb_star_into(&self, buf: &mut Vec<usize>, dt: f64,
+                    extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        buf.clear();
+        buf.extend(
+            self.cfg
+                .running_counts
+                .iter()
+                .enumerate()
+                .map(|(l, &c)| c + extra[l] as usize),
+        );
         if self.cfg.speculative {
             spec_decode::prefill_budget_spec(
-                dt.max(0.0), &self.cfg.tiers, &counts, self.cfg.spec_alpha,
+                dt.max(0.0), &self.cfg.tiers, buf, self.cfg.spec_alpha,
                 self.cfg.max_spec_len, self.model)
         } else {
             batch_formation::prefill_budget_ar(
-                dt.max(0.0), &self.cfg.tiers, &counts, self.model)
+                dt.max(0.0), &self.cfg.tiers, buf, self.model)
         }
+    }
+
+    /// Live-tier bitmask and binding window of `running + extra`.
+    fn live_signature(&self, extra: &[u8; MAX_TIERS]) -> (u8, u64) {
+        let mut mask = 0u8;
+        let mut t0 = f64::INFINITY;
+        for (l, &tp) in self.cfg.tiers.iter().enumerate() {
+            if self.cfg.running_counts[l] + extra[l] as usize > 0 {
+                mask |= 1 << l;
+                t0 = t0.min(tp);
+            }
+        }
+        (mask, t0.to_bits())
+    }
+
+    /// Memoized `PB*`, bit-identical to [`pb_star`](Self::pb_star) for
+    /// any call sequence against one `(DpConfig, PerfModel)` pair
+    /// (tables are per-plan; `plan_with` clears them on entry).
+    ///
+    /// Feasibility is `dt`-independent (module doc), so `None` results
+    /// are cached per counts-vector, and a sound subset of supersets is
+    /// rejected without solving at all.
+    pub fn pb_star_memo(&self, s: &mut PlannerScratch, dt: f64,
+                        extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        let mut cache = PbCache {
+            memo: &mut s.pb_memo,
+            feas: &mut s.pb_feas,
+            infeasible: &mut s.pb_infeasible,
+            counts: &mut s.counts_buf,
+        };
+        self.pb_star_cached(&mut cache, dt, extra)
+    }
+
+    fn pb_star_cached(&self, c: &mut PbCache, dt: f64,
+                      extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        let ck = counts_key(extra);
+        if let Some(&feasible) = c.feas.get(&ck) {
+            if !feasible {
+                return None;
+            }
+            let mk = (dt.to_bits(), ck);
+            if let Some(&v) = c.memo.get(&mk) {
+                return Some(v);
+            }
+            let v = self.pb_star_into(c.counts, dt, extra);
+            match v {
+                Some(x) => {
+                    c.memo.insert(mk, x);
+                }
+                // Defensive only: feasibility is dt-independent, so this
+                // arm is unreachable; keeping the tables consistent with
+                // the solver costs nothing.
+                None => {
+                    c.feas.insert(ck, false);
+                }
+            }
+            return v;
+        }
+        // Unknown counts vector: sound superset cutoff before solving.
+        let (mask, t0) = self.live_signature(extra);
+        let cut = if self.cfg.speculative {
+            // Same live set ⇒ same speculation grid and round cap; only
+            // verify demand grew.
+            c.infeasible
+                .iter()
+                .any(|r| r.mask == mask && dominated_by(r.key, ck))
+        } else {
+            // Same binding window ⇒ same per-window budget; only decode
+            // demand grew.
+            c.infeasible
+                .iter()
+                .any(|r| r.t0 == t0 && dominated_by(r.key, ck))
+        };
+        if cut {
+            c.feas.insert(ck, false);
+            return None;
+        }
+        let v = self.pb_star_into(c.counts, dt, extra);
+        match v {
+            Some(x) => {
+                c.feas.insert(ck, true);
+                c.memo.insert((dt.to_bits(), ck), x);
+            }
+            None => {
+                c.feas.insert(ck, false);
+                c.infeasible.push(InfeasRec { mask, t0, key: ck });
+            }
+        }
+        v
+    }
+
+    /// Run the DP with a one-shot scratch. Prefer
+    /// [`plan_with`](Self::plan_with) plus a retained [`PlannerScratch`]
+    /// on hot paths.
+    pub fn plan(&self, now: f64, candidates: &[Candidate]) -> Plan {
+        let mut scratch = PlannerScratch::default();
+        self.plan_with(now, candidates, &mut scratch)
     }
 
     /// Run the DP. `now` anchors the budget curve; `candidates` need not be
     /// sorted. Returns the admission plan (forced candidates are always
     /// admitted; if even forced admissions are infeasible the plan reports
     /// the non-forced subset it could keep and declines the rest).
-    pub fn plan(&self, now: f64, candidates: &[Candidate]) -> Plan {
-        let mut cands: Vec<Candidate> = candidates.to_vec();
+    pub fn plan_with(&self, now: f64, candidates: &[Candidate],
+                     s: &mut PlannerScratch) -> Plan {
+        let PlannerScratch {
+            cands,
+            overflow,
+            forced_prefix,
+            nodes,
+            trans,
+            admitted_flags,
+            pb_memo,
+            pb_feas,
+            pb_infeasible,
+            counts_buf,
+        } = s;
+        cands.clear();
+        overflow.clear();
+        forced_prefix.clear();
+        nodes.clear();
+        admitted_flags.clear();
+        pb_memo.clear();
+        pb_feas.clear();
+        pb_infeasible.clear();
+        let mut cache = PbCache {
+            memo: pb_memo,
+            feas: pb_feas,
+            infeasible: pb_infeasible,
+            counts: counts_buf,
+        };
+
+        cands.extend_from_slice(candidates);
         cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
             .then(a.id.cmp(&b.id)));
         // Cap the DP size; overflow candidates are declined this round
-        // (they will be retried at the next invocation).
+        // (they will be retried at the next invocation). Keep all forced
+        // plus the earliest-deadline non-forced; `retain` preserves the
+        // sort, so no re-sort is needed.
+        if cands.len() > MAX_CANDIDATES {
+            let forced_count = cands.iter().filter(|c| c.forced).count();
+            let keep = MAX_CANDIDATES.saturating_sub(forced_count);
+            let mut kept_nf = 0usize;
+            cands.retain(|c| {
+                if c.forced {
+                    true
+                } else if kept_nf < keep {
+                    kept_nf += 1;
+                    true
+                } else {
+                    overflow.push(c.id);
+                    false
+                }
+            });
+        }
+        let n = cands.len();
+        let mem_bucket = (self.cfg.mem_free_pages.max(1)).div_ceil(MEM_BUCKETS - 1);
+        let qmem = |pages: usize| pages.div_ceil(mem_bucket);
+        let mem_cap = qmem(self.cfg.mem_free_pages);
+
+        // Prefix count of forced candidates, for the continuity constraint:
+        // a transition j -> i must not skip any forced candidate.
+        forced_prefix.push(0);
+        let mut acc = 0u32;
+        for c in cands.iter() {
+            acc += c.forced as u32;
+            forced_prefix.push(acc);
+        }
+        let total_forced = forced_prefix[n];
+
+        let base_key = pack(0, 0, &[0; MAX_TIERS]);
+        nodes.push(Node { key: base_key, pb: 0.0, parent: 0 });
+
+        // Best terminal state (max non-forced count, then pb, ties on the
+        // packed key so reconstruction never depends on expansion order),
+        // subject to "no forced candidate after the last accepted".
+        // Fields: (non_forced, pb, key, arena index).
+        let mut best_terminal: Option<(usize, f64, u64, u32)> = None;
+        let consider_terminal =
+            |key: u64, pb: f64, idx: u32, forced_upto: u32,
+             best: &mut Option<(usize, f64, u64, u32)>| {
+                if forced_upto != total_forced {
+                    return; // skips a forced candidate — not a valid endpoint
+                }
+                let (_, _, counts) = unpack(key);
+                let accepted: usize =
+                    counts.iter().map(|&c| c as usize).sum();
+                let non_forced = accepted - total_forced as usize;
+                let better = match best {
+                    None => true,
+                    Some((v, bpb, k, _)) => {
+                        non_forced > *v
+                            || (non_forced == *v
+                                && (pb > *bpb || (pb == *bpb && key < *k)))
+                    }
+                };
+                if better {
+                    *best = Some((non_forced, pb, key, idx));
+                }
+            };
+        consider_terminal(base_key, 0.0, 0, 0, &mut best_terminal);
+
+        // Expand layer by layer. A state of chain length ℓ has
+        // sum(counts) == ℓ, so each layer's keys are globally unique and
+        // the arena grows append-only; the frontier is the contiguous
+        // range the previous layer appended.
+        let mut lo = 0usize;
+        let mut hi = 1usize;
+        for _len in 0..n {
+            trans.clear();
+            for jidx in lo..hi {
+                let jnode = nodes[jidx];
+                let (ji, jmem, jcounts) = unpack(jnode.key);
+                let j_pddl = if ji == 0 { now } else { cands[ji - 1].pddl };
+                for (i, c) in cands.iter().enumerate().skip(ji).take(n - ji) {
+                    // Continuity: no forced candidate strictly between.
+                    if forced_prefix[i] > forced_prefix[ji] {
+                        break; // a forced candidate was skipped
+                    }
+                    let add_mem = qmem(c.mem_pages);
+                    if jmem + add_mem > mem_cap {
+                        continue;
+                    }
+                    let dt = c.pddl - j_pddl;
+                    let Some(dpb) = self.pb_star_cached(&mut cache, dt,
+                                                        &jcounts)
+                    else {
+                        continue;
+                    };
+                    let pb_new = jnode.pb + dpb - c.prefill_tokens as f64;
+                    if pb_new < -1e-9 {
+                        continue;
+                    }
+                    let mut counts = jcounts;
+                    if counts[c.tier] as u32 + 1 >= COUNT_CAP {
+                        continue;
+                    }
+                    counts[c.tier] += 1;
+                    // The enlarged decode set must itself be sustainable.
+                    if self
+                        .pb_star_cached(&mut cache, self.cfg.tiers[c.tier],
+                                        &counts)
+                        .is_none()
+                    {
+                        continue;
+                    }
+                    trans.push(Trans {
+                        key: pack(i + 1, jmem + add_mem, &counts),
+                        pb: pb_new,
+                        parent: jidx as u32,
+                        parent_key: jnode.key,
+                    });
+                }
+            }
+            if trans.is_empty() {
+                break;
+            }
+            // Reduce each equal-key run to its canonical best: max pb,
+            // exact ties to the smallest parent key (order-independent,
+            // same rule as the reference's per-slot update).
+            trans.sort_unstable_by(|a, b| a.key.cmp(&b.key));
+            let new_lo = nodes.len();
+            let mut g0 = 0usize;
+            while g0 < trans.len() {
+                let key = trans[g0].key;
+                let mut best = trans[g0];
+                let mut g1 = g0 + 1;
+                while g1 < trans.len() && trans[g1].key == key {
+                    let t = trans[g1];
+                    if t.pb > best.pb
+                        || (t.pb == best.pb && t.parent_key < best.parent_key)
+                    {
+                        best = t;
+                    }
+                    g1 += 1;
+                }
+                let idx = nodes.len() as u32;
+                nodes.push(Node { key, pb: best.pb, parent: best.parent });
+                let (ci, _, _) = unpack(key);
+                consider_terminal(key, best.pb, idx, forced_prefix[ci],
+                                  &mut best_terminal);
+                g0 = g1;
+            }
+            lo = new_lo;
+            hi = nodes.len();
+        }
+
+        // Reconstruct (O(n + chain): membership via flags, not scans).
+        admitted_flags.resize(n, false);
+        let mut admitted = Vec::new();
+        if let Some((_, _, _, mut idx)) = best_terminal {
+            while idx != 0 {
+                let node = nodes[idx as usize];
+                let (ci, _, _) = unpack(node.key);
+                admitted.push(cands[ci - 1].id);
+                admitted_flags[ci - 1] = true;
+                idx = node.parent;
+            }
+        }
+        admitted.reverse();
+        let declined: Vec<RequestId> = cands
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| !admitted_flags[i])
+            .map(|(_, c)| c.id)
+            .chain(overflow.drain(..))
+            .collect();
+        let value = cands
+            .iter()
+            .enumerate()
+            .filter(|&(i, c)| admitted_flags[i] && !c.forced)
+            .count();
+        Plan { admitted, declined, value }
+    }
+}
+
+/// The pre-arena HashMap planner, retained as the differential-testing
+/// and benchmark baseline (`tests/planner_diff.rs`, `benches/planner.rs`).
+/// Semantically frozen: it must keep returning bit-identical [`Plan`]s to
+/// [`DpPlanner::plan_with`]. Only the key width follows the production
+/// packing (6-bit fields widened to 7 so both sides share
+/// [`MAX_CANDIDATES`]).
+pub mod reference {
+    use std::collections::HashMap;
+
+    use super::{pack, unpack, Candidate, DpConfig, Plan, COUNT_CAP,
+                MAX_CANDIDATES, MAX_TIERS, MEM_BUCKETS};
+    use crate::coordinator::perf_model::PerfModel;
+    use crate::coordinator::request::RequestId;
+    use crate::coordinator::{batch_formation, spec_decode};
+
+    #[derive(Clone, Copy)]
+    struct Entry {
+        pb: f64,
+        parent: u64,
+    }
+
+    fn pb_star(cfg: &DpConfig, model: &PerfModel, dt: f64,
+               extra: &[u8; MAX_TIERS]) -> Option<f64> {
+        let counts: Vec<usize> = cfg
+            .running_counts
+            .iter()
+            .enumerate()
+            .map(|(l, &c)| c + extra[l] as usize)
+            .collect();
+        if cfg.speculative {
+            spec_decode::prefill_budget_spec(
+                dt.max(0.0), &cfg.tiers, &counts, cfg.spec_alpha,
+                cfg.max_spec_len, model)
+        } else {
+            batch_formation::prefill_budget_ar(
+                dt.max(0.0), &cfg.tiers, &counts, model)
+        }
+    }
+
+    /// The original per-layer HashMap DP (see the module history): same
+    /// transitions, same canonical tie-breaks, fresh maps per layer and a
+    /// full `PB*` solve per transition.
+    pub fn plan(cfg: &DpConfig, model: &PerfModel, now: f64,
+                candidates: &[Candidate]) -> Plan {
+        assert!(cfg.tiers.len() <= MAX_TIERS);
+        assert_eq!(cfg.tiers.len(), cfg.running_counts.len());
+        let mut cands: Vec<Candidate> = candidates.to_vec();
+        cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+            .then(a.id.cmp(&b.id)));
         let mut overflow: Vec<RequestId> = Vec::new();
         if cands.len() > MAX_CANDIDATES {
             // Keep all forced plus the earliest-deadline non-forced.
@@ -158,12 +690,11 @@ impl<'a> DpPlanner<'a> {
                 .then(a.id.cmp(&b.id)));
         }
         let n = cands.len();
-        let mem_bucket = (self.cfg.mem_free_pages.max(1)).div_ceil(MEM_BUCKETS - 1);
+        let mem_bucket =
+            (cfg.mem_free_pages.max(1)).div_ceil(MEM_BUCKETS - 1);
         let qmem = |pages: usize| pages.div_ceil(mem_bucket);
-        let mem_cap = qmem(self.cfg.mem_free_pages);
+        let mem_cap = qmem(cfg.mem_free_pages);
 
-        // Prefix count of forced candidates, for the continuity constraint:
-        // a transition j -> i must not skip any forced candidate.
         let forced_prefix: Vec<usize> = {
             let mut acc = 0;
             let mut v = Vec::with_capacity(n + 1);
@@ -175,33 +706,25 @@ impl<'a> DpPlanner<'a> {
             v
         };
 
-        // dp layers by chain length to process states in a valid order:
-        // transitions only go from shorter chains to longer ones.
         let base_key = pack(0, 0, &[0; MAX_TIERS]);
-        let mut frontier: Vec<u32> = vec![base_key];
-        let mut all_states: HashMap<u32, Entry> = HashMap::new();
-        all_states.insert(base_key, Entry { pb: 0.0, parent: u32::MAX });
+        let mut frontier: Vec<u64> = vec![base_key];
+        let mut all_states: HashMap<u64, Entry> = HashMap::new();
+        all_states.insert(base_key, Entry { pb: 0.0, parent: u64::MAX });
 
-        // Track the best terminal state (max non-forced count, then pb),
-        // subject to "no forced candidate after the last accepted".
-        let mut best_terminal: Option<(usize, f64, u32)> = None;
+        let mut best_terminal: Option<(usize, f64, u64)> = None;
         let total_forced = forced_prefix[n];
 
         let consider_terminal =
-            |key: u32, entry: &Entry, forced_upto: usize,
-             best_terminal: &mut Option<(usize, f64, u32)>| {
+            |key: u64, entry: &Entry, forced_upto: usize,
+             best_terminal: &mut Option<(usize, f64, u64)>| {
                 if forced_upto != total_forced {
-                    return; // skips a forced candidate — not a valid endpoint
+                    return;
                 }
                 let (_, _, counts) = unpack(key);
                 let accepted: usize =
                     counts.iter().map(|&c| c as usize).sum();
                 let non_forced = accepted - total_forced;
                 let cand = (non_forced, entry.pb, key);
-                // Ties break on the packed state key: HashMap iteration
-                // order is seeded per instance, so without a canonical
-                // tie-break two identical runs could reconstruct
-                // different (equally optimal) admission chains.
                 let better = match best_terminal {
                     None => true,
                     Some((v, pb, k)) => {
@@ -215,20 +738,19 @@ impl<'a> DpPlanner<'a> {
                     *best_terminal = Some(cand);
                 }
             };
-        consider_terminal(base_key, &Entry { pb: 0.0, parent: u32::MAX }, 0,
+        consider_terminal(base_key, &Entry { pb: 0.0, parent: u64::MAX }, 0,
                           &mut best_terminal);
 
         for _len in 0..n {
-            let mut next: HashMap<u32, Entry> = HashMap::new();
+            let mut next: HashMap<u64, Entry> = HashMap::new();
             for &jkey in &frontier {
                 let entry = all_states[&jkey];
                 let (ji, jmem, jcounts) = unpack(jkey);
                 let j = ji; // 0 = base, else candidate index j-1
                 let j_pddl = if j == 0 { now } else { cands[j - 1].pddl };
                 for i in j..n {
-                    // Continuity: no forced candidate strictly between.
                     if forced_prefix[i] > forced_prefix[j] {
-                        break; // a forced candidate was skipped
+                        break;
                     }
                     let c = &cands[i];
                     let ci = i + 1;
@@ -237,7 +759,7 @@ impl<'a> DpPlanner<'a> {
                         continue;
                     }
                     let dt = c.pddl - j_pddl;
-                    let Some(dpb) = self.pb_star(dt, &jcounts) else {
+                    let Some(dpb) = pb_star(cfg, model, dt, &jcounts) else {
                         continue;
                     };
                     let pb_new = entry.pb + dpb - c.prefill_tokens as f64;
@@ -245,19 +767,18 @@ impl<'a> DpPlanner<'a> {
                         continue;
                     }
                     let mut counts = jcounts;
-                    if counts[c.tier] as usize + 1 >= 64 {
+                    if counts[c.tier] as u32 + 1 >= COUNT_CAP {
                         continue;
                     }
                     counts[c.tier] += 1;
-                    // The enlarged decode set must itself be sustainable.
-                    if self.pb_star(self.cfg.tiers[c.tier], &counts).is_none() {
+                    if pb_star(cfg, model, cfg.tiers[c.tier], &counts)
+                        .is_none()
+                    {
                         continue;
                     }
                     let key = pack(ci, jmem + add_mem, &counts);
                     let cand_entry = Entry { pb: pb_new, parent: jkey };
                     let slot = next.entry(key).or_insert(cand_entry);
-                    // Equal-pb ties pick the smallest parent key so the
-                    // kept chain never depends on map iteration order.
                     if cand_entry.pb > slot.pb
                         || (cand_entry.pb == slot.pb
                             && cand_entry.parent < slot.parent)
@@ -269,8 +790,6 @@ impl<'a> DpPlanner<'a> {
             if next.is_empty() {
                 break;
             }
-            // Merge into the global map, keep per-key max (same canonical
-            // tie-break as above).
             frontier = Vec::with_capacity(next.len());
             for (key, entry) in next {
                 let slot = all_states.entry(key).or_insert(entry);
@@ -286,7 +805,6 @@ impl<'a> DpPlanner<'a> {
             }
         }
 
-        // Reconstruct.
         let mut admitted = Vec::new();
         if let Some((_, _, mut key)) = best_terminal {
             while key != base_key {
@@ -473,14 +991,14 @@ mod tests {
         let cfg = cfg(vec![0, 0], 1_000_000, false);
         let m = model();
         let p = DpPlanner::new(&cfg, &m);
-        let cands: Vec<Candidate> = (0..40)
+        let cands: Vec<Candidate> = (0..60)
             .map(|i| cand(i, 1.0 + 0.1 * i as f64, 10, 1))
             .collect();
         let plan = p.plan(0.0, &cands);
         let mut all: Vec<u64> = plan.admitted.iter()
             .chain(plan.declined.iter()).copied().collect();
         all.sort();
-        assert_eq!(all, (0..40).collect::<Vec<_>>());
+        assert_eq!(all, (0..60).collect::<Vec<_>>());
         assert!(plan.admitted.len() <= MAX_CANDIDATES);
     }
 
@@ -491,5 +1009,61 @@ mod tests {
         let plan = DpPlanner::new(&cfg, &m).plan(0.0, &[]);
         assert!(plan.admitted.is_empty());
         assert!(plan.declined.is_empty());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_at_widened_widths() {
+        for &(i, mem, counts) in &[
+            (0usize, 0usize, [0u8; MAX_TIERS]),
+            (48, 63, [47, 13, 0]),
+            (127, 127, [126, 126, 126]),
+            (1, 2, [3, 4, 5]),
+        ] {
+            let k = pack(i, mem, &counts);
+            assert_eq!(unpack(k), (i, mem, counts));
+        }
+        // Key order = lexicographic (counts desc-significance, mem, i):
+        // the canonical tie-break the planner relies on.
+        assert!(pack(2, 0, &[0; MAX_TIERS]) > pack(1, 0, &[0; MAX_TIERS]));
+        assert!(pack(0, 1, &[0; MAX_TIERS]) > pack(127, 0, &[0; MAX_TIERS]));
+        assert!(pack(0, 0, &[1, 0, 0]) > pack(127, 127, &[0, 0, 0]));
+        assert!(pack(0, 0, &[0, 1, 0]) > pack(127, 127, &[126, 0, 0]));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        let m = model();
+        let mut scratch = PlannerScratch::default();
+        for (run, spec) in [(0, false), (1, true), (2, false)] {
+            let cfg = cfg(vec![run * 10, run * 5], 50_000, spec);
+            let cands: Vec<Candidate> = (0..12)
+                .map(|i| cand(i, 0.3 + 0.2 * i as f64, 800 + 100 * run as usize,
+                              (i % 2) as usize))
+                .collect();
+            let p = DpPlanner::new(&cfg, &m);
+            let reused = p.plan_with(0.0, &cands, &mut scratch);
+            let fresh = p.plan(0.0, &cands);
+            assert_eq!(reused, fresh, "run {run}");
+        }
+    }
+
+    #[test]
+    fn flat_matches_reference_on_the_unit_cases() {
+        let m = model();
+        let mut scratch = PlannerScratch::default();
+        for spec in [false, true] {
+            for running in [vec![0, 0], vec![40, 40], vec![250, 0]] {
+                let cfg = cfg(running, 100_000, spec);
+                let mut cands: Vec<Candidate> = (0..10)
+                    .map(|i| cand(i, 0.3 + 0.25 * i as f64, 2500,
+                                  (i % 2) as usize))
+                    .collect();
+                cands[3].forced = true;
+                let p = DpPlanner::new(&cfg, &m);
+                let flat = p.plan_with(0.0, &cands, &mut scratch);
+                let refp = reference::plan(&cfg, &m, 0.0, &cands);
+                assert_eq!(flat, refp, "spec={spec}");
+            }
+        }
     }
 }

@@ -19,6 +19,7 @@ pub struct Term {
 }
 
 impl Term {
+    #[inline]
     pub fn eval(&self, tokens: f64, spec_step: f64) -> f64 {
         self.k1 * tokens + self.k2 * spec_step + self.b
     }
@@ -77,6 +78,7 @@ impl PerfModel {
     /// Predicted execution time for a batch of `tokens` total tokens with
     /// `spec_step` speculation steps (0 when not speculating; otherwise the
     /// max speculation length in the batch, §3.1.1).
+    #[inline]
     pub fn batch_time(&self, tokens: usize, spec_step: usize) -> f64 {
         let (t, s) = (tokens as f64, spec_step as f64);
         self.terms
@@ -87,6 +89,9 @@ impl PerfModel {
 
     /// Largest batch size (tokens) executable within `t` seconds at
     /// `spec_step` speculation steps — the `time2bs` primitive of Alg. 2.
+    /// Inlined: this and [`batch_time`](Self::batch_time) dominate the
+    /// admission DP's `PB*` inner loop.
+    #[inline]
     pub fn time2bs(&self, t: f64, spec_step: usize) -> usize {
         if t < self.batch_time(0, spec_step) {
             return 0;

@@ -14,11 +14,12 @@
 //!    leftover to the best-effort tier if memory allows (preempting
 //!    best-effort KV when standard admissions need the pages).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 
 use crate::config::ScenarioConfig;
 use crate::coordinator::batch_formation::{Batch, BatchEntry, EntryKind};
-use crate::coordinator::dp::{Candidate, DpConfig, DpPlanner};
+use crate::coordinator::dp::{Candidate, DpConfig, DpPlanner, PlannerScratch};
 use crate::coordinator::request::{Phase, Request, RequestId};
 use crate::coordinator::spec_decode::{self, tightened_tpot};
 use crate::sim::{decline_to_best_effort, Policy, ServerState};
@@ -90,6 +91,10 @@ pub struct SlosServe {
     reserved: HashMap<RequestId, usize>,
     /// Scratch declined list from the last plan (for router integration).
     pub last_declined: Vec<RequestId>,
+    /// Reusable DP arena + `PB*` memo tables: admission planning (and the
+    /// router's probes, which run through `&self`) is allocation-free in
+    /// steady state.
+    planner_scratch: RefCell<PlannerScratch>,
 }
 
 impl SlosServe {
@@ -101,6 +106,7 @@ impl SlosServe {
             max_spec_len: cfg.max_spec_len,
             reserved: HashMap::new(),
             last_declined: Vec::new(),
+            planner_scratch: RefCell::new(PlannerScratch::default()),
         }
     }
 
@@ -269,7 +275,8 @@ impl SlosServe {
             return;
         }
         let (candidates, dp_cfg) = self.admission_inputs(now, st, None);
-        let plan = DpPlanner::new(&dp_cfg, &st.model).plan(now, &candidates);
+        let plan = DpPlanner::new(&dp_cfg, &st.model)
+            .plan_with(now, &candidates, &mut self.planner_scratch.borrow_mut());
         self.last_declined.clear();
         let pending = std::mem::take(&mut st.pending);
         for id in pending {
@@ -304,7 +311,8 @@ impl SlosServe {
         const PROBE_ID: RequestId = RequestId::MAX;
         let (candidates, dp_cfg) =
             self.admission_inputs(now, st, Some((PROBE_ID, probe)));
-        let plan = DpPlanner::new(&dp_cfg, &st.model).plan(now, &candidates);
+        let plan = DpPlanner::new(&dp_cfg, &st.model)
+            .plan_with(now, &candidates, &mut self.planner_scratch.borrow_mut());
         plan.admitted.contains(&PROBE_ID)
     }
 

@@ -64,6 +64,10 @@ pub fn solve_capped(tpots: &[f64], counts: &[usize], alpha: f64,
     }
 
     let mut best: Option<SpecPlan> = None;
+    // Per-combination speculation lengths; one buffer reused across the
+    // whole enumeration (this runs inside every admission-DP `PB*` call),
+    // cloned only when a combination improves on the incumbent.
+    let mut spec_lens = vec![0usize; tpots.len()];
     // Candidate binding tiers and their speculation length.
     for &lstar in &live {
         for sl_star in 0..=max_sl {
@@ -73,7 +77,7 @@ pub fn solve_capped(tpots: &[f64], counts: &[usize], alpha: f64,
             }
             // Other tiers: smallest sl with TPOT_l * Acc(sl) >= t, i.e.
             // enough expected tokens per batch to hold their rate.
-            let mut spec_lens = vec![0usize; tpots.len()];
+            spec_lens.fill(0);
             let mut ok = true;
             for &l in &live {
                 if l == lstar {
@@ -110,7 +114,7 @@ pub fn solve_capped(tpots: &[f64], counts: &[usize], alpha: f64,
             };
             if better {
                 best = Some(SpecPlan {
-                    spec_lens,
+                    spec_lens: spec_lens.clone(),
                     batch_time: t,
                     prefill_budget,
                     prefill_tpt,

@@ -29,6 +29,10 @@ pub struct MultiReplicaResult {
     pub migrated: usize,
     /// Requests completed per replica (dispatch-balance diagnostics).
     pub per_replica_finished: Vec<usize>,
+    /// Wall-clock seconds spent inside `Policy::next_batch` summed over
+    /// all replicas — the pool's scheduler overhead (Fig. 15-style), the
+    /// denominator-side signal the planner perf work tracks.
+    pub sched_wall_seconds: f64,
 }
 
 /// The central router: replicas + dispatch state.
@@ -197,6 +201,8 @@ impl Router {
         let Router { replicas, rerouted, migrated, .. } = self;
         let per_replica_finished: Vec<usize> =
             replicas.iter().map(|h| h.finished).collect();
+        let sched_wall_seconds: f64 =
+            replicas.iter().map(|h| h.sched_wall_seconds).sum();
         let span = replicas.iter().fold(0.0f64, |a, h| a.max(h.clock));
         let mut requests: Vec<Request> = replicas
             .into_iter()
@@ -210,6 +216,7 @@ impl Router {
             rerouted: rerouted.len(),
             migrated: migrated.len(),
             per_replica_finished,
+            sched_wall_seconds,
         }
     }
 }

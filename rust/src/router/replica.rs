@@ -7,6 +7,19 @@
 //! counts, with the candidate request added — i.e. "would this replica's
 //! DP admit the request right now, given its current token and memory
 //! commitments under its own `PerfModel`?". Probing mutates nothing.
+//!
+//! Probes are memoized: the handle keeps a small cache of recent probe
+//! results, keyed on everything the admission pricing reads from the
+//! candidate, and invalidated by a dirty-bit epoch that every
+//! state-mutating entry point (delivery, scheduling step, extraction,
+//! re-route acceptance) bumps, plus the clock and a cheap queue/KV
+//! fingerprint. Burst dispatch, declined-hop targeting, and the
+//! migration pass repeatedly probe the same request against unchanged
+//! replicas; those repeats skip the DP dry-run entirely. Cached answers
+//! are bit-identical to recomputation — external code that mutates
+//! `state` directly (tests) changes the fingerprint or misses the cache.
+
+use std::cell::RefCell;
 
 use crate::config::{ReplicaOverride, ScenarioConfig};
 use crate::coordinator::request::{Request, RequestId, ServiceTier};
@@ -30,6 +43,37 @@ pub struct FeasibilityProbe {
     pub best_effort: usize,
 }
 
+/// Everything a probe's answer depends on: the replica side (clock +
+/// cheap state fingerprint) and the candidate side (exactly the fields
+/// `SlosServe::admission_inputs` prices a probe candidate from).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ProbeKey {
+    clock: u64,
+    pending: usize,
+    running: usize,
+    best_effort: usize,
+    kv_free_tokens: usize,
+    pddl: u64,
+    arrival: u64,
+    ttft_slowdown: u64,
+    stage_prefill: usize,
+    prefill_remaining: usize,
+    total_tokens: usize,
+    tightest_tpot: u64,
+}
+
+/// Recent probe results for one epoch (cleared whenever the epoch moves).
+#[derive(Debug, Default)]
+struct ProbeCache {
+    epoch: u64,
+    entries: Vec<(ProbeKey, FeasibilityProbe)>,
+}
+
+/// Distinct candidate shapes remembered per epoch; a burst round probes
+/// each arrival against every replica, so a handful of entries already
+/// absorbs the repeat probes (hop targeting, migration).
+const PROBE_CACHE_CAP: usize = 16;
+
 /// One simulated replica under the central router.
 pub struct ReplicaHandle {
     pub id: usize,
@@ -43,6 +87,12 @@ pub struct ReplicaHandle {
     pub rng: Rng,
     /// Requests completed on this replica.
     pub finished: usize,
+    /// Wall-clock seconds spent inside `Policy::next_batch` (scheduler
+    /// overhead, Fig. 15-style accounting for multi-replica runs).
+    pub sched_wall_seconds: f64,
+    /// Probe-cache dirty bit: bumped by every state-mutating entry point.
+    epoch: u64,
+    probe_cache: RefCell<ProbeCache>,
 }
 
 impl ReplicaHandle {
@@ -61,12 +111,24 @@ impl ReplicaHandle {
         }
         let state = ServerState::new(&cfg);
         let rng = Rng::new(cfg.seed ^ (0xB0B0 + id as u64));
-        ReplicaHandle { id, cfg, policy, state, clock: 0.0, rng, finished: 0 }
+        ReplicaHandle {
+            id,
+            cfg,
+            policy,
+            state,
+            clock: 0.0,
+            rng,
+            finished: 0,
+            sched_wall_seconds: 0.0,
+            epoch: 0,
+            probe_cache: RefCell::new(ProbeCache::default()),
+        }
     }
 
     /// Deliver a newly routed arrival: enters its stage against this
     /// replica's perf model (prefill deadline set here) and queues it.
     pub fn deliver(&mut self, r: Request) {
+        self.epoch += 1;
         deliver(&mut self.state, r);
     }
 
@@ -90,10 +152,42 @@ impl ReplicaHandle {
             .sum()
     }
 
-    /// Dry-run admission for `candidate` plus load snapshot.
+    /// Cache key for a probe of `candidate` against the current state.
+    fn probe_key(&self, candidate: &Request) -> ProbeKey {
+        ProbeKey {
+            clock: self.clock.to_bits(),
+            pending: self.state.pending.len(),
+            running: self.state.running.len(),
+            best_effort: self.state.best_effort.len(),
+            kv_free_tokens: self.state.kv.free_tokens(),
+            pddl: candidate.pddl.to_bits(),
+            arrival: candidate.arrival.to_bits(),
+            ttft_slowdown: candidate.stage().slo.ttft_slowdown.to_bits(),
+            stage_prefill: candidate.stage().prefill_tokens,
+            prefill_remaining: candidate.prefill_remaining(),
+            total_tokens: candidate.total_tokens(),
+            tightest_tpot: candidate.tightest_tpot().to_bits(),
+        }
+    }
+
+    /// Dry-run admission for `candidate` plus load snapshot. Memoized:
+    /// a repeat probe of the same candidate shape against an unchanged
+    /// replica returns the cached snapshot without re-running the DP.
     pub fn probe(&self, candidate: &Request) -> FeasibilityProbe {
+        let key = self.probe_key(candidate);
+        {
+            let mut cache = self.probe_cache.borrow_mut();
+            if cache.epoch != self.epoch {
+                cache.epoch = self.epoch;
+                cache.entries.clear();
+            } else if let Some(&(_, hit)) =
+                cache.entries.iter().find(|(k, _)| *k == key)
+            {
+                return hit;
+            }
+        }
         let outstanding = self.outstanding_tokens();
-        FeasibilityProbe {
+        let p = FeasibilityProbe {
             feasible: self
                 .policy
                 .admission_probe(self.clock, &self.state, candidate),
@@ -103,7 +197,13 @@ impl ReplicaHandle {
             pending: self.state.pending.len(),
             running: self.state.running.len(),
             best_effort: self.state.best_effort.len(),
+        };
+        let mut cache = self.probe_cache.borrow_mut();
+        if cache.entries.len() >= PROBE_CACHE_CAP {
+            cache.entries.clear();
         }
+        cache.entries.push((key, p));
+        p
     }
 
     /// Execute one scheduling round at this replica's clock. Returns true
@@ -111,7 +211,14 @@ impl ReplicaHandle {
     /// false if the replica idled.
     pub fn step(&mut self) -> bool {
         let now = self.clock;
-        match self.policy.next_batch(now, &mut self.state) {
+        // Admission inside `next_batch` can move pending requests even
+        // when no batch forms, so the probe cache must go stale whenever
+        // there was anything to admit.
+        let had_pending = !self.state.pending.is_empty();
+        let t_sched = std::time::Instant::now();
+        let planned_batch = self.policy.next_batch(now, &mut self.state);
+        self.sched_wall_seconds += t_sched.elapsed().as_secs_f64();
+        let ran = match planned_batch {
             Some(batch) if !batch.entries.is_empty() => {
                 let planned = batch.exec_time(&self.state.model);
                 let dt = self.state.sample_exec(planned);
@@ -122,7 +229,11 @@ impl ReplicaHandle {
                 true
             }
             _ => false,
+        };
+        if ran || had_pending {
+            self.epoch += 1;
         }
+        ran
     }
 
     /// Drain the ids the scheduler declined in its last admission round.
@@ -137,6 +248,7 @@ impl ReplicaHandle {
     /// leak the pre-subsystem router had on re-routing partially
     /// prefilled best-effort requests.
     pub fn extract(&mut self, id: RequestId) -> Option<Request> {
+        self.epoch += 1;
         let mut r = self.state.requests.remove(&id)?;
         self.state.pending.retain(|&x| x != id);
         self.state.running.retain(|&x| x != id);
@@ -152,6 +264,7 @@ impl ReplicaHandle {
     /// admission. The prefill deadline is *kept* — SLOs are a property of
     /// the request and its arrival, not of whichever replica serves it.
     pub fn accept_rerouted(&mut self, mut r: Request) {
+        self.epoch += 1;
         r.tier = ServiceTier::Standard;
         let id = r.id;
         self.state.pending.push(id);
@@ -194,6 +307,28 @@ mod tests {
         assert!(p.feasible, "idle replica must admit a modest request");
         assert_eq!(p.outstanding_tokens, 0);
         assert_eq!(h.state.requests.len(), 0, "probe must not mutate");
+    }
+
+    #[test]
+    fn probe_cache_repeats_and_invalidates_on_mutation() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        let candidate = req(9, 800, 40);
+        let p1 = h.probe(&candidate);
+        let p2 = h.probe(&candidate); // second probe served from cache
+        assert_eq!(p1.feasible, p2.feasible);
+        assert_eq!(p1.outstanding_tokens, p2.outstanding_tokens);
+        assert_eq!(p1.pending, p2.pending);
+        // A different candidate shape is its own cache entry, not a
+        // stale hit on the first one.
+        let p3 = h.probe(&req(10, 1_200, 80));
+        assert_eq!(p3.outstanding_tokens, 0);
+        // State mutation bumps the epoch: the next probe must see the
+        // delivered load, not the cached idle snapshot.
+        h.deliver(req(1, 500, 20));
+        let p4 = h.probe(&candidate);
+        assert_eq!(p4.outstanding_tokens, 520);
+        assert_eq!(p4.pending, 1);
     }
 
     #[test]

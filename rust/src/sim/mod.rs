@@ -95,6 +95,9 @@ pub struct SimResult {
     pub load_trace: Vec<(f64, usize, usize)>,
     /// (batch_tokens, batch_seconds) log for Fig. 2 / Fig. 10a.
     pub batch_log: Vec<(usize, f64)>,
+    /// Wall-clock seconds spent inside `Policy::next_batch` over the run
+    /// (scheduler overhead — the planner perf work's tracked signal).
+    pub sched_wall_seconds: f64,
 }
 
 /// Run one policy over a workload on a single replica.
@@ -118,6 +121,7 @@ pub fn run_with_model(policy: &mut dyn Policy, mut workload: Vec<Request>,
     let mut finished = 0usize;
     let mut load_trace = Vec::new();
     let mut batch_log = Vec::new();
+    let mut sched_wall_seconds = 0.0f64;
     // Hard safety horizon: generous multiple of the workload span.
     let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
     let horizon = (span_guess + 120.0) * 20.0 + 600.0;
@@ -129,7 +133,10 @@ pub fn run_with_model(policy: &mut dyn Policy, mut workload: Vec<Request>,
             next_arrival += 1;
         }
 
-        match policy.next_batch(now, &mut state) {
+        let t_sched = std::time::Instant::now();
+        let planned_batch = policy.next_batch(now, &mut state);
+        sched_wall_seconds += t_sched.elapsed().as_secs_f64();
+        match planned_batch {
             Some(batch) if !batch.entries.is_empty() => {
                 let dt = state.sample_exec(batch.exec_time(&state.model));
                 now += dt;
@@ -160,7 +167,7 @@ pub fn run_with_model(policy: &mut dyn Policy, mut workload: Vec<Request>,
     let mut requests: Vec<Request> = state.requests.into_values().collect();
     requests.sort_by_key(|r| r.id);
     let metrics = collect(&requests, now);
-    SimResult { requests, metrics, load_trace, batch_log }
+    SimResult { requests, metrics, load_trace, batch_log, sched_wall_seconds }
 }
 
 /// Deliver a newly arrived (or newly routed) request into `state`: its

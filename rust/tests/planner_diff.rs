@@ -1,0 +1,137 @@
+//! Differential tests for the flat-arena admission planner (ISSUE 3):
+//! `DpPlanner::plan_with` must return *bit-identical* `Plan`s to the
+//! retained pre-arena HashMap baseline (`dp::reference::plan`) — same
+//! admitted ids in the same order, same declined order, same value —
+//! across seeded random candidate sets, and the memoized `PB*` must never
+//! diverge from the direct solver. Determinism from PR 1 (canonical
+//! tie-breaks) is what makes bit-identity a meaningful bar: any drift
+//! here would silently re-baseline the golden traces.
+
+use slos_serve::config::Hardware;
+use slos_serve::coordinator::dp::{
+    reference, Candidate, DpConfig, DpPlanner, PlannerScratch,
+    MAX_CANDIDATES, MAX_TIERS,
+};
+use slos_serve::coordinator::perf_model::PerfModel;
+use slos_serve::proptest_lite::{forall, Gen};
+
+fn gen_cfg(g: &mut Gen) -> DpConfig {
+    let n_tiers = g.usize(1, MAX_TIERS);
+    // Distinct, sorted-tight-first TPOT tiers in a realistic range.
+    let base = g.f64(0.030, 0.060);
+    let tiers: Vec<f64> = (0..n_tiers)
+        .map(|l| base * (1.0 + l as f64 * g.f64(0.5, 1.2)))
+        .collect();
+    DpConfig {
+        tiers,
+        running_counts: (0..n_tiers).map(|_| g.usize(0, 60)).collect(),
+        mem_free_pages: g.usize(200, 100_000),
+        speculative: g.bool(),
+        spec_alpha: g.f64(0.4, 0.95),
+        max_spec_len: g.usize(1, 8),
+    }
+}
+
+fn gen_cands(g: &mut Gen, n_tiers: usize, max_n: usize) -> Vec<Candidate> {
+    let n = g.usize(0, max_n);
+    (0..n)
+        .map(|i| Candidate {
+            id: i as u64,
+            pddl: g.f64(0.05, 3.0),
+            prefill_tokens: g.usize(1, 4000),
+            mem_pages: g.usize(1, 400),
+            tier: g.usize(0, n_tiers - 1),
+            forced: g.usize(0, 9) == 0,
+        })
+        .collect()
+}
+
+/// ISSUE 3 acceptance: identical plans on >= 200 seeded random candidate
+/// sets, with ONE scratch reused across every case — the production mode
+/// (scheduler + router probes share a retained `PlannerScratch`), so any
+/// stale-state bug in the arena/memo clearing shows up as a diff here.
+#[test]
+fn flat_matches_reference_on_200_seeded_random_sets() {
+    let m = PerfModel::preset(Hardware::A100);
+    let mut scratch = PlannerScratch::default();
+    for case in 0..200u64 {
+        let mut g = Gen::new(0xC0FFEE ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let cfg = gen_cfg(&mut g);
+        let cands = gen_cands(&mut g, cfg.tiers.len(), 14);
+        let now = g.f64(0.0, 0.2);
+        let planner = DpPlanner::new(&cfg, &m);
+        let flat = planner.plan_with(now, &cands, &mut scratch);
+        let refp = reference::plan(&cfg, &m, now, &cands);
+        assert_eq!(flat, refp, "case {case} cfg={cfg:?} cands={cands:?}");
+    }
+}
+
+/// The candidate cap changed shape (filter+re-sort -> retain): overflow
+/// sets beyond `MAX_CANDIDATES`, with forced candidates sprinkled in,
+/// must keep/decline exactly the same ids in the same order.
+#[test]
+fn overflow_and_forced_cap_parity() {
+    let m = PerfModel::preset(Hardware::A100);
+    let mut scratch = PlannerScratch::default();
+    for case in 0..24u64 {
+        let mut g = Gen::new(0xBEEF ^ case.wrapping_mul(0x9E37_79B9));
+        let mut cfg = gen_cfg(&mut g);
+        cfg.speculative = false; // AR keeps the big reference DP fast
+        let cands =
+            gen_cands(&mut g, cfg.tiers.len(), MAX_CANDIDATES + 20);
+        let planner = DpPlanner::new(&cfg, &m);
+        let flat = planner.plan_with(0.0, &cands, &mut scratch);
+        let refp = reference::plan(&cfg, &m, 0.0, &cands);
+        assert_eq!(flat, refp, "case {case}");
+        // Nothing lost: every candidate id lands in exactly one list.
+        let mut all: Vec<u64> = flat
+            .admitted
+            .iter()
+            .chain(flat.declined.iter())
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..cands.len() as u64).collect::<Vec<_>>());
+    }
+}
+
+/// Proptest: the per-plan `PB*` memo (feasibility table + superset
+/// cutoff + value memo) answers every query with the exact bits the
+/// direct solver returns, over adversarial sequences that mix fresh
+/// queries, exact repeats, negative `dt`, and dominating count vectors
+/// (the cutoff's target).
+#[test]
+fn pb_star_memo_never_diverges_from_direct_solver() {
+    forall(200, |g| {
+        let m = PerfModel::preset(Hardware::A100);
+        let cfg = gen_cfg(g);
+        let n_tiers = cfg.tiers.len();
+        let planner = DpPlanner::new(&cfg, &m);
+        let mut scratch = PlannerScratch::default();
+        let mut seen: Vec<(f64, [u8; MAX_TIERS])> = Vec::new();
+        for _ in 0..60 {
+            let (dt, extra) = if !seen.is_empty() && g.bool() {
+                // Replay an earlier query (memo-hit path), sometimes
+                // bumping one tier to probe the superset cutoff.
+                let (dt, mut extra) = *g.choose(&seen);
+                if g.bool() {
+                    let l = g.usize(0, n_tiers - 1);
+                    extra[l] = extra[l].saturating_add(g.usize(0, 5) as u8);
+                }
+                (dt, extra)
+            } else {
+                let mut extra = [0u8; MAX_TIERS];
+                for e in extra.iter_mut().take(n_tiers) {
+                    *e = g.usize(0, 40) as u8;
+                }
+                (g.f64(-0.05, 2.5), extra)
+            };
+            seen.push((dt, extra));
+            let memo = planner.pb_star_memo(&mut scratch, dt, &extra);
+            let direct = planner.pb_star(dt, &extra);
+            assert_eq!(memo.map(f64::to_bits), direct.map(f64::to_bits),
+                       "dt={dt} extra={extra:?} memo={memo:?} \
+                        direct={direct:?} cfg={cfg:?}");
+        }
+    });
+}

@@ -281,6 +281,58 @@ impl ScenarioConfig {
     }
 }
 
+/// Elastic-pool controller configuration (§4.2 follow-on): bounds and
+/// signal thresholds for the attainment-driven autoscaler in
+/// [`router::autoscaler`](crate::router::autoscaler).
+///
+/// Scale **up** when the pool keeps refusing feasible-SLO requests: the
+/// probe-refusal rate over a sliding `window` exceeds `up_threshold`
+/// (with at least `min_samples` routed arrivals in the window, so a
+/// single unlucky probe can't trigger growth). Scale **down** via
+/// warm-down when the window saw no refusals and the mean per-replica
+/// backlog (`drain_seconds`) sits below `down_util * window`.
+/// `cooldown` plus the up/down asymmetry is the hysteresis that keeps an
+/// oscillating load signal from flapping the pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Pool never shrinks below this many replicas (>= 1).
+    pub min_replicas: usize,
+    /// Pool never grows beyond this many replicas.
+    pub max_replicas: usize,
+    /// Sliding-window length (seconds) of the probe-refusal signal.
+    pub window: f64,
+    /// Refusal rate (refused / routed arrivals in window) at or above
+    /// which the pool scales up.
+    pub up_threshold: f64,
+    /// Minimum routed arrivals in the window before scale-up may fire.
+    pub min_samples: usize,
+    /// Utilization target for scale-down: warm-down begins only when the
+    /// mean Active-replica backlog is below `down_util * window` seconds
+    /// (aggregate `drain_seconds` ~ 0) and the window saw no refusals.
+    pub down_util: f64,
+    /// Simulated seconds a freshly added replica spends `Warming` (model
+    /// load / cache warm) before it becomes routable.
+    pub warmup_seconds: f64,
+    /// Minimum seconds between scaling actions (hysteresis).
+    pub cooldown: f64,
+}
+
+impl AutoscalerConfig {
+    pub fn new(min_replicas: usize, max_replicas: usize) -> Self {
+        assert!(min_replicas >= 1 && max_replicas >= min_replicas);
+        AutoscalerConfig {
+            min_replicas,
+            max_replicas,
+            window: 3.0,
+            up_threshold: 0.2,
+            min_samples: 4,
+            down_util: 0.1,
+            warmup_seconds: 0.5,
+            cooldown: 2.0,
+        }
+    }
+}
+
 /// Per-replica deviations from the pool-wide [`ScenarioConfig`] for
 /// heterogeneous multi-replica serving (§4.2): replicas may differ in
 /// hardware generation, KV memory, speculative-decoding setup, and chunk
@@ -352,6 +404,22 @@ mod tests {
         let same = base.for_replica(&ReplicaOverride::default());
         assert_eq!(same.kv_tokens, base.kv_tokens);
         assert_eq!(same.perf_model(), base.perf_model());
+    }
+
+    #[test]
+    fn autoscaler_config_defaults_are_sane() {
+        let a = AutoscalerConfig::new(1, 4);
+        assert_eq!((a.min_replicas, a.max_replicas), (1, 4));
+        assert!(a.window > 0.0 && a.cooldown > 0.0);
+        assert!(a.up_threshold > 0.0 && a.up_threshold < 1.0);
+        assert!(a.down_util > 0.0 && a.down_util < a.up_threshold + 1.0);
+        assert!(a.warmup_seconds >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn autoscaler_config_rejects_inverted_bounds() {
+        AutoscalerConfig::new(3, 2);
     }
 
     #[test]

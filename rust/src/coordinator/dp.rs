@@ -259,6 +259,10 @@ pub struct PlannerScratch {
     pb_feas: FxMap<u32, bool>,
     pb_infeasible: Vec<InfeasRec>,
     counts_buf: Vec<usize>,
+    /// Generation key of the retained `PB*` tables (see
+    /// [`DpPlanner::plan_keyed`]): `None` means the tables belong to no
+    /// generation and the next plan clears them unconditionally.
+    memo_gen: Option<u64>,
 }
 
 /// Split-borrow view of the memo tables (the arena fields are borrowed
@@ -412,8 +416,49 @@ impl<'a> DpPlanner<'a> {
     /// sorted. Returns the admission plan (forced candidates are always
     /// admitted; if even forced admissions are infeasible the plan reports
     /// the non-forced subset it could keep and declines the rest).
+    ///
+    /// Clears the scratch's `PB*` memo tables on entry (per-plan memo).
+    /// When many plans run against *one unchanged replica state* — the
+    /// router's burst of feasibility probes within a single tick — use
+    /// [`plan_keyed`](Self::plan_keyed) instead so the tables survive
+    /// across calls.
     pub fn plan_with(&self, now: f64, candidates: &[Candidate],
                      s: &mut PlannerScratch) -> Plan {
+        s.memo_gen = None;
+        s.pb_memo.clear();
+        s.pb_feas.clear();
+        s.pb_infeasible.clear();
+        self.plan_core(now, candidates, s)
+    }
+
+    /// Like [`plan_with`](Self::plan_with), but the `PB*` memo tables are
+    /// keyed by a caller-supplied *generation*: they are cleared only when
+    /// `gen` differs from the generation of the previous keyed call.
+    ///
+    /// Soundness: a memo entry depends on `(DpConfig, PerfModel)` and the
+    /// bit-exact `(dt, counts)` key — never on the candidate set — so
+    /// reuse is exact whenever the caller guarantees `gen` changes with
+    /// anything that changes `DpConfig` or the model. The router derives
+    /// `gen` from the replica's mutation epoch plus its clock bits (the
+    /// running-decode tier classification reads `now`), so every probe a
+    /// tick issues against one unchanged replica shares one warm memo
+    /// instead of re-solving `PB*` from scratch per probe.
+    pub fn plan_keyed(&self, now: f64, candidates: &[Candidate],
+                      s: &mut PlannerScratch, gen: u64) -> Plan {
+        if s.memo_gen != Some(gen) {
+            s.memo_gen = Some(gen);
+            s.pb_memo.clear();
+            s.pb_feas.clear();
+            s.pb_infeasible.clear();
+        }
+        self.plan_core(now, candidates, s)
+    }
+
+    /// DP core shared by [`plan_with`](Self::plan_with) and
+    /// [`plan_keyed`](Self::plan_keyed): clears the arena buffers, keeps
+    /// the `PB*` tables as the caller prepared them.
+    fn plan_core(&self, now: f64, candidates: &[Candidate],
+                 s: &mut PlannerScratch) -> Plan {
         let PlannerScratch {
             cands,
             overflow,
@@ -425,15 +470,13 @@ impl<'a> DpPlanner<'a> {
             pb_feas,
             pb_infeasible,
             counts_buf,
+            memo_gen: _,
         } = s;
         cands.clear();
         overflow.clear();
         forced_prefix.clear();
         nodes.clear();
         admitted_flags.clear();
-        pb_memo.clear();
-        pb_feas.clear();
-        pb_infeasible.clear();
         let mut cache = PbCache {
             memo: pb_memo,
             feas: pb_feas,
@@ -1044,6 +1087,34 @@ mod tests {
             let reused = p.plan_with(0.0, &cands, &mut scratch);
             let fresh = p.plan(0.0, &cands);
             assert_eq!(reused, fresh, "run {run}");
+        }
+    }
+
+    #[test]
+    fn keyed_memo_reuse_is_bit_identical() {
+        // A router tick probes one unchanged replica with many candidate
+        // shapes: plan_keyed under one generation must return exactly what
+        // a cold scratch returns, for every call in the sequence — and a
+        // generation change must behave like a fresh scratch again.
+        let m = model();
+        for spec in [false, true] {
+            let cfg = cfg(vec![30, 20], 60_000, spec);
+            let p = DpPlanner::new(&cfg, &m);
+            let mut keyed = PlannerScratch::default();
+            for probe in 0..6u64 {
+                let cands: Vec<Candidate> = (0..8)
+                    .map(|i| cand(100 * probe + i, 0.3 + 0.2 * i as f64,
+                                  600 + 150 * probe as usize,
+                                  (i % 2) as usize))
+                    .collect();
+                let warm = p.plan_keyed(0.0, &cands, &mut keyed, 7);
+                let cold = p.plan(0.0, &cands);
+                assert_eq!(warm, cold, "spec={spec} probe={probe}");
+            }
+            // New generation: tables cleared, same answers still.
+            let cands = vec![cand(999, 0.5, 900, 0)];
+            assert_eq!(p.plan_keyed(0.0, &cands, &mut keyed, 8),
+                       p.plan(0.0, &cands), "spec={spec} post-gen-bump");
         }
     }
 

@@ -86,6 +86,11 @@ pub struct Request {
     pub stage_records: Vec<StageRecord>,
     /// Times this request was re-routed between replicas (§4.2).
     pub route_hops: u32,
+    /// Times this request was evicted from a `Draining` replica and
+    /// re-queued onto the pool (warm-down outflow; lifecycle evictions
+    /// are counted separately from SLO-driven `route_hops` and do not
+    /// consume the route-limit budget).
+    pub drain_requeues: u32,
     /// Preemption count (best-effort tier, §4.1).
     pub preemptions: u32,
     /// KV tokens to re-prefill before progress can resume after a
@@ -137,6 +142,7 @@ impl Request {
             token_times: Vec::new(),
             stage_records: Vec::new(),
             route_hops: 0,
+            drain_requeues: 0,
             preemptions: 0,
             recompute_pending: 0,
         }

@@ -305,14 +305,36 @@ impl SlosServe {
     /// non-forced candidate under a sentinel id.
     pub fn admission_probe(&self, now: f64, st: &ServerState,
                            probe: &Request) -> bool {
+        self.probe_inner(now, st, probe, None)
+    }
+
+    /// [`admission_probe`](Self::admission_probe) with a caller-supplied
+    /// memo *generation*: all probes issued under one `gen` share the
+    /// scratch's `PB*` tables instead of re-solving them per probe (see
+    /// `DpPlanner::plan_keyed`). The caller must change `gen` whenever
+    /// `st` (or the probe-relevant clock `now`) changes — the §4.2 router
+    /// derives it from the replica's mutation epoch + clock bits, so a
+    /// burst round's probes against one unchanged replica reuse every
+    /// feasibility verdict the first probe computed.
+    pub fn admission_probe_keyed(&self, now: f64, st: &ServerState,
+                                 probe: &Request, gen: u64) -> bool {
+        self.probe_inner(now, st, probe, Some(gen))
+    }
+
+    fn probe_inner(&self, now: f64, st: &ServerState, probe: &Request,
+                   gen: Option<u64>) -> bool {
         if !self.features.slo_scheduling {
             return true; // the greedy ablation admits everything
         }
         const PROBE_ID: RequestId = RequestId::MAX;
         let (candidates, dp_cfg) =
             self.admission_inputs(now, st, Some((PROBE_ID, probe)));
-        let plan = DpPlanner::new(&dp_cfg, &st.model)
-            .plan_with(now, &candidates, &mut self.planner_scratch.borrow_mut());
+        let planner = DpPlanner::new(&dp_cfg, &st.model);
+        let mut scratch = self.planner_scratch.borrow_mut();
+        let plan = match gen {
+            Some(g) => planner.plan_keyed(now, &candidates, &mut scratch, g),
+            None => planner.plan_with(now, &candidates, &mut scratch),
+        };
         plan.admitted.contains(&PROBE_ID)
     }
 

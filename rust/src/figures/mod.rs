@@ -368,6 +368,56 @@ pub fn fig13_scaling(requests: usize, scenarios: &[Scenario])
     out
 }
 
+/// Elastic-pool extension figure (ROADMAP, beyond the paper's fixed
+/// pools of Fig. 13): on the bursty heterogeneous Mixed trace, compare
+/// static pools of 1..4 replicas against an autoscaled 1..4 pool. The
+/// headline: the elastic pool holds static-4-class attainment at
+/// materially fewer replica-seconds, because the pool only pays for
+/// capacity while the burst needs it. Returns
+/// `(label, attainment, replica_seconds)` rows.
+pub fn fig_elastic(requests: usize) -> Vec<(String, f64, f64)> {
+    use crate::config::AutoscalerConfig;
+    println!("# Elastic pool — bursty Mixed trace (middle third at 4x \
+              rate), burst-aware routing");
+    let n = requests.max(120);
+    let mk = || {
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(1.5)
+            .with_requests(n)
+            .with_seed(42);
+        let mut wl = workload::generate(&cfg);
+        workload::compress_middle_third(&mut wl, 4.0);
+        (cfg, wl)
+    };
+    let mut out = Vec::new();
+    for k in 1..=4usize {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(k).with_policy(RoutePolicy::BurstAware);
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("static-{k}     attainment {:5.1}%  replica-seconds {:7.1}",
+                 100.0 * res.metrics.attainment(), res.replica_seconds);
+        out.push((format!("static-{k}"), res.metrics.attainment(),
+                  res.replica_seconds));
+    }
+    let (cfg, wl) = mk();
+    let rcfg = RouterConfig::new(1)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_autoscaler(AutoscalerConfig::new(1, 4));
+    let res = run_multi_replica(wl, &cfg, &rcfg);
+    println!("elastic(1-4)  attainment {:5.1}%  replica-seconds {:7.1}  \
+              peak {}  scale-events {}  drain-requeued {}",
+             100.0 * res.metrics.attainment(), res.replica_seconds,
+             res.peak_replicas, res.scale_timeline.len(),
+             res.drain_requeued);
+    for e in &res.scale_timeline {
+        println!("  t {:7.2}s  {:?} replica {} -> {} active",
+                 e.t, e.kind, e.replica, e.active);
+    }
+    out.push(("elastic".to_string(), res.metrics.attainment(),
+              res.replica_seconds));
+    out
+}
+
 /// Fig. 14 — ablation: remove routing / speculation / burst resilience /
 /// everything (prefill-oriented baseline).
 pub fn fig14_ablation(requests: usize, scenarios: &[Scenario])
@@ -483,6 +533,9 @@ pub fn run_figure(id: &str, requests: usize) -> Result<(), String> {
         }
         "15" => {
             fig15_overhead();
+        }
+        "elastic" => {
+            fig_elastic(requests);
         }
         other => return Err(format!("unknown figure {other}")),
     }

@@ -17,9 +17,10 @@
 //!   schedulers for the paper's comparison studies.
 //! * [`sim`] — discrete-event GPU substrate driven by the same roofline
 //!   model (substitution for the paper's A100/H100 testbed; DESIGN.md §2).
-//! * [`router`] — §4.2 multi-replica routing subsystem: per-replica
-//!   handles, feasibility probes, pluggable dispatch policies, and
-//!   cross-replica migration.
+//! * [`router`] — §4.2 multi-replica routing subsystem: lifecycle-aware
+//!   per-replica handles (`Warming → Active → Draining → Drained`),
+//!   feasibility probes, pluggable dispatch policies, cross-replica
+//!   migration, and the attainment-driven elastic-pool autoscaler.
 //! * `runtime` / `engine` — the *real* path: PJRT CPU client executing
 //!   the JAX/Pallas AOT artifacts (tiny OPT-style model) with paged KV.
 //!   Gated behind the `xla` cargo feature (needs the vendored `xla` and

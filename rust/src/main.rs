@@ -3,9 +3,11 @@
 //! ```text
 //! slos-serve serve    [--scenario S] [--policy P] [--rate R]
 //!                     [--requests N] [--replicas K] [--route-policy RP]
+//!                     [--autoscale] [--min-replicas A] [--max-replicas B]
 //!                     [--seed X]
 //! slos-serve capacity [--scenario S] [--requests N]
-//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15> [--requests N]
+//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic>
+//!                     [--requests N]
 //! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
 //! ```
 //!
@@ -15,7 +17,7 @@
 use std::collections::HashMap;
 
 use slos_serve::baselines;
-use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig};
 use slos_serve::figures::make_policy;
 use slos_serve::metrics::capacity_search;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
@@ -69,12 +71,15 @@ impl Args {
 const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
   serve    --scenario S --policy P --rate R --requests N --replicas K
            --route-policy RP --seed X
+           [--autoscale --min-replicas A --max-replicas B]
   capacity --scenario S --requests N
-  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15> --requests N
+  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic> --requests N
   trace    --scenario S --rate R --requests N [--stats]
 scenarios:      chatbot coder summarizer mixed toolllm reasoning
 policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
-route policies: round-robin least-load slo-feasibility burst-aware";
+route policies: round-robin least-load slo-feasibility burst-aware
+autoscale:      elastic replica pool between --min-replicas and
+                --max-replicas (attainment-driven; see figure elastic)";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -98,16 +103,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .with_requests(args.get("requests", 500))
                 .with_seed(args.get("seed", 0));
             let replicas: usize = args.get("replicas", 1);
+            let autoscale = args.bool("autoscale");
             let wl = workload::generate(&cfg);
-            if replicas > 1 {
+            if replicas > 1 || autoscale {
                 let rp = args.str("route-policy", "slo-feasibility");
                 let rp = RoutePolicy::parse(&rp)
                     .ok_or_else(|| format!("unknown route policy {rp}"))?;
-                let rcfg = RouterConfig::new(replicas).with_policy(rp);
+                let mut rcfg = RouterConfig::new(replicas).with_policy(rp);
+                if autoscale {
+                    let min: usize = args.get("min-replicas", 1);
+                    let max: usize =
+                        args.get("max-replicas", replicas.max(4));
+                    if min < 1 || max < min {
+                        return Err(format!(
+                            "bad autoscale bounds {min}..{max}").into());
+                    }
+                    rcfg = rcfg.with_autoscaler(
+                        AutoscalerConfig::new(min, max));
+                }
                 let res = run_multi_replica(wl, &cfg, &rcfg);
                 print_metrics(&policy, &res.metrics);
                 println!("route policy {} | rerouted {} | migrated {}",
                          rp.name(), res.rerouted, res.migrated);
+                if autoscale {
+                    println!("autoscale: peak {} replicas | \
+                              replica-seconds {:.1} | scale events {} | \
+                              drain-requeued {}",
+                             res.peak_replicas, res.replica_seconds,
+                             res.scale_timeline.len(), res.drain_requeued);
+                }
             } else {
                 let mut p = make_policy(&policy, &cfg);
                 let res = run(p.as_mut(), wl, &cfg);

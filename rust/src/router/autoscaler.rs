@@ -1,0 +1,313 @@
+//! Attainment-driven elastic-pool controller (ROADMAP: replica
+//! autoscaling; PolyServe-style cluster scheduling, AdaServe-style
+//! per-replica capacity under SLO constraints).
+//!
+//! The controller is ticked by the balancer's event loop and reads two
+//! signals the router already produces:
+//!
+//! * **Probe refusals** — at dispatch time the router probes the chosen
+//!   replica's admission DP; a refused arrival means the pool is about
+//!   to defer a feasible-SLO request to best-effort. A sliding-window
+//!   refusal rate above `up_threshold` (with at least `min_samples`
+//!   arrivals in the window) triggers **scale-up**.
+//! * **Backlog** — aggregate `drain_seconds` (outstanding tokens over
+//!   peak throughput) across Active replicas. A refusal-free window with
+//!   mean per-replica backlog below `down_util * window` triggers
+//!   **scale-down** via warm-down (stop routing, drain, then drop).
+//!
+//! Hysteresis: a `cooldown` between actions, the refusal window is
+//! cleared on scale-up (one burst buys one step), scale-down waits for a
+//! *refusal-free* window (not merely a quiet-ish one) and drains one
+//! replica at a time. The decision function is pure over its inputs so
+//! the flap-resistance is unit-testable without a pool.
+
+use std::collections::VecDeque;
+
+use crate::config::AutoscalerConfig;
+
+/// What happened to the pool, when (the `MultiReplicaResult` timeline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// Simulated time of the transition.
+    pub t: f64,
+    pub kind: ScaleKind,
+    /// Replica index the event concerns.
+    pub replica: usize,
+    /// Routable (`Active`) replicas immediately after the event.
+    pub active: usize,
+}
+
+/// Lifecycle transitions the timeline records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// A new replica was spawned `Warming`.
+    SpawnWarming,
+    /// A `Warming` replica became `Active` (routable).
+    Activated,
+    /// Warm-down began (`Active -> Draining`).
+    DrainBegin,
+    /// A warm-down was cancelled (`Draining -> Active`) because load
+    /// returned before the drain finished.
+    DrainCancel,
+    /// A replica finished draining and left the pool.
+    Drained,
+}
+
+/// Scaling decision for one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Add a replica (or cancel an in-flight warm-down).
+    Up,
+    /// Begin warm-down of one replica.
+    Down,
+    Hold,
+}
+
+/// Live pool counts the balancer hands to [`Autoscaler::decide`] each
+/// tick. The backlog signal is passed separately (and lazily): it costs
+/// a scan of every Active replica's request table, and most ticks never
+/// reach the branch that needs it.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolCounts {
+    pub active: usize,
+    pub warming: usize,
+    pub draining: usize,
+}
+
+/// The sliding-window controller state.
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    /// `(arrival time, probe refused)` events inside the window.
+    events: VecDeque<(f64, bool)>,
+    refused_in_window: usize,
+    last_action: f64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Autoscaler {
+            cfg,
+            events: VecDeque::new(),
+            refused_in_window: 0,
+            // Allow an action as soon as the first window fills.
+            last_action: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one routed arrival: `refused` = the destination replica's
+    /// feasibility probe declined it at dispatch time.
+    pub fn record_arrival(&mut self, now: f64, refused: bool) {
+        self.events.push_back((now, refused));
+        self.refused_in_window += refused as usize;
+        self.prune(now);
+    }
+
+    fn prune(&mut self, now: f64) {
+        let cutoff = now - self.cfg.window;
+        while let Some(&(t, refused)) = self.events.front() {
+            if t >= cutoff {
+                break;
+            }
+            self.events.pop_front();
+            self.refused_in_window -= refused as usize;
+        }
+    }
+
+    /// Refusal rate over the current window (0 when empty).
+    pub fn refusal_rate(&self) -> f64 {
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        self.refused_in_window as f64 / self.events.len() as f64
+    }
+
+    /// Is the controller still inside the post-action cooldown?
+    pub fn in_cooldown(&self, now: f64) -> bool {
+        now - self.last_action < self.cfg.cooldown
+    }
+
+    /// One controller tick at simulated time `now`. Pure over
+    /// `(self, counts, backlog)`: no clocks, no randomness — elastic
+    /// runs stay bit-reproducible. `backlog_seconds` (sum of
+    /// `drain_seconds` over Active replicas) is a closure because it
+    /// costs an O(requests) scan and is only consulted on the
+    /// warm-down branch, which most ticks never reach.
+    pub fn decide(&mut self, now: f64, counts: PoolCounts,
+                  backlog_seconds: impl FnOnce() -> f64) -> ScaleDecision {
+        self.prune(now);
+        if self.in_cooldown(now) {
+            return ScaleDecision::Hold;
+        }
+        let pool = counts.active + counts.warming + counts.draining;
+
+        // Scale up: the pool keeps refusing feasible-SLO requests. At
+        // the max bound, Up is still allowed while a replica is
+        // mid-drain — the balancer serves it by cancelling that
+        // warm-down instead of spawning.
+        let refusing = self.events.len() >= self.cfg.min_samples
+            && self.refusal_rate() >= self.cfg.up_threshold;
+        if refusing && (pool < self.cfg.max_replicas || counts.draining > 0)
+        {
+            self.last_action = now;
+            // One burst of refusals buys one step; fresh evidence must
+            // accumulate before the next (hysteresis).
+            self.events.clear();
+            self.refused_in_window = 0;
+            return ScaleDecision::Up;
+        }
+
+        // Scale down: a refusal-free window, nothing already in
+        // transition, and the Active pool is nearly idle.
+        if counts.active > self.cfg.min_replicas
+            && counts.warming == 0
+            && counts.draining == 0
+            && self.refused_in_window == 0
+            && backlog_seconds()
+                <= self.cfg.down_util * self.cfg.window
+                    * counts.active as f64
+        {
+            self.last_action = now;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            window: 4.0,
+            up_threshold: 0.25,
+            min_samples: 4,
+            down_util: 0.1,
+            warmup_seconds: 0.5,
+            cooldown: 3.0,
+            ..AutoscalerConfig::new(1, 4)
+        }
+    }
+
+    fn counts(active: usize) -> PoolCounts {
+        PoolCounts { active, warming: 0, draining: 0 }
+    }
+
+    #[test]
+    fn scales_up_on_sustained_refusals_only() {
+        let mut a = Autoscaler::new(cfg());
+        // Too few samples: hold.
+        a.record_arrival(0.1, true);
+        a.record_arrival(0.2, true);
+        assert_eq!(a.decide(0.3, counts(1), || 10.0), ScaleDecision::Hold);
+        // Enough samples above the threshold: up.
+        a.record_arrival(0.3, true);
+        a.record_arrival(0.4, false);
+        assert_eq!(a.decide(0.5, counts(1), || 10.0), ScaleDecision::Up);
+        // The window was consumed: an immediate retry holds.
+        assert_eq!(a.decide(0.6, counts(1), || 10.0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn respects_max_pool_bound() {
+        let mut a = Autoscaler::new(cfg());
+        for i in 0..8 {
+            a.record_arrival(0.1 * i as f64, true);
+        }
+        assert_eq!(a.decide(1.0, counts(4), || 50.0), ScaleDecision::Hold,
+                   "at max_replicas the pool must not grow");
+    }
+
+    #[test]
+    fn scales_down_only_when_idle_and_refusal_free() {
+        let mut a = Autoscaler::new(cfg());
+        // Busy pool: hold even with no refusals.
+        for i in 0..6 {
+            a.record_arrival(0.5 * i as f64, false);
+        }
+        assert_eq!(a.decide(3.0, counts(3), || 9.0), ScaleDecision::Hold);
+        // Idle + refusal-free: down.
+        assert_eq!(a.decide(3.1, counts(3), || 0.2), ScaleDecision::Down);
+        // At the min bound: hold — and the backlog scan must not even
+        // run (that is the point of the lazy signal).
+        let mut b = Autoscaler::new(cfg());
+        assert_eq!(b.decide(10.0, counts(1),
+                            || unreachable!("backlog scanned at min size")),
+                   ScaleDecision::Hold);
+        // A single refusal in the window vetoes warm-down.
+        let mut c = Autoscaler::new(cfg());
+        c.record_arrival(9.5, true);
+        assert_eq!(c.decide(10.0, counts(3), || 0.0), ScaleDecision::Hold);
+        // ... until it ages out of the window.
+        assert_eq!(c.decide(14.0, counts(3), || 0.0), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn one_transition_at_a_time() {
+        let mut a = Autoscaler::new(cfg());
+        let busy_warming =
+            PoolCounts { active: 3, warming: 1, draining: 0 };
+        assert_eq!(a.decide(20.0, busy_warming, || 0.0),
+                   ScaleDecision::Hold,
+                   "no warm-down while a replica is still warming");
+        let draining = PoolCounts { active: 3, warming: 0, draining: 1 };
+        assert_eq!(a.decide(24.0, draining, || 0.0), ScaleDecision::Hold,
+                   "one drain at a time");
+    }
+
+    #[test]
+    fn hysteresis_no_flapping_on_oscillating_load() {
+        // An adversarial square wave: 2 s of all-refused arrivals, then
+        // 2 s of idle silence, repeated. Without hysteresis this flaps
+        // up/down every phase; with cooldown + window-consumption +
+        // refusal-free-window gating the controller must act at most
+        // once per cooldown period and never Down during the quiet gaps
+        // (each gap still has refusals inside the 4 s window).
+        let mut a = Autoscaler::new(cfg());
+        let mut ups = 0;
+        let mut downs = 0;
+        let mut active = 1usize;
+        let span = 40.0;
+        let mut t = 0.0;
+        while t < span {
+            let phase = (t / 2.0) as u64 % 2;
+            if phase == 0 {
+                // 4 arrivals/s, all refused.
+                a.record_arrival(t, true);
+            }
+            let backlog = if phase == 0 { 8.0 } else { 0.4 };
+            match a.decide(t, counts(active), || backlog) {
+                ScaleDecision::Up => {
+                    ups += 1;
+                    active = (active + 1).min(4);
+                }
+                ScaleDecision::Down => {
+                    downs += 1;
+                    active -= 1;
+                }
+                ScaleDecision::Hold => {}
+            }
+            t += 0.25;
+        }
+        // Cooldown bounds the action rate: at most span/cooldown + 1.
+        assert!(ups + downs <= (span / 3.0) as usize + 1,
+                "flapping: {ups} ups + {downs} downs in {span}s");
+        // Quiet gaps are shorter than the window, so refusals never age
+        // out during one: no warm-down may fire at all.
+        assert_eq!(downs, 0, "oscillation must not trigger warm-down");
+        assert!(ups >= 2, "sustained refusals must still grow the pool");
+        assert!(active <= 4);
+    }
+
+    #[test]
+    fn refusal_window_slides() {
+        let mut a = Autoscaler::new(cfg());
+        for i in 0..4 {
+            a.record_arrival(i as f64 * 0.1, true);
+        }
+        assert!(a.refusal_rate() > 0.99);
+        // 10 s later everything aged out.
+        a.record_arrival(10.0, false);
+        assert_eq!(a.refusal_rate(), 0.0);
+    }
+}

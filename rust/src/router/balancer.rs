@@ -4,19 +4,30 @@
 //! route limit, and (under `BurstAware`) runs the cross-replica
 //! migration pass after every scheduling round.
 //!
-//! The event loop always advances the replica whose clock is furthest
-//! behind, so deliveries and re-routes happen in a deterministic global
-//! order; with one replica the loop degenerates to exactly the
-//! single-replica simulator's schedule (asserted by test).
+//! The event loop always advances the live replica whose clock is
+//! furthest behind, so deliveries and re-routes happen in a
+//! deterministic global order; with one replica the loop degenerates to
+//! exactly the single-replica simulator's schedule (asserted by test).
+//!
+//! With an [`AutoscalerConfig`](crate::config::AutoscalerConfig) in the
+//! [`RouterConfig`] the pool is *elastic*: the loop also ticks the
+//! attainment-driven [`autoscaler`](crate::router::autoscaler), spawns
+//! `Warming` replicas when the pool keeps refusing feasible-SLO
+//! arrivals, and warm-downs (drain, then drop) the least-loaded replica
+//! when the pool idles — `MultiReplicaResult` then carries the scaling
+//! timeline and the replica-seconds actually consumed.
 
 use std::collections::HashSet;
 
 use crate::config::ScenarioConfig;
 use crate::coordinator::request::{Request, RequestId};
 use crate::metrics::{collect, RunMetrics};
+use crate::router::autoscaler::{Autoscaler, PoolCounts, ScaleDecision,
+                                ScaleEvent, ScaleKind};
 use crate::router::migration;
-use crate::router::policy::RoutePolicy;
-use crate::router::replica::ReplicaHandle;
+use crate::router::policy::{self, RoutePolicy};
+use crate::router::replica::{scaled_probe_cache_cap, ReplicaHandle,
+                             ReplicaState};
 use crate::router::RouterConfig;
 
 /// Outcome of a multi-replica run.
@@ -33,34 +44,75 @@ pub struct MultiReplicaResult {
     /// all replicas — the pool's scheduler overhead (Fig. 15-style), the
     /// denominator-side signal the planner perf work tracks.
     pub sched_wall_seconds: f64,
+    /// Pool lifecycle transitions in simulated-time order (empty for a
+    /// fixed pool).
+    pub scale_timeline: Vec<ScaleEvent>,
+    /// Provisioned capacity actually consumed: Σ over replicas of
+    /// (retirement time, or end of run) − spawn time, in simulated
+    /// seconds. A fixed k-replica pool consumes exactly `k * span`; the
+    /// elastic pool's headline is matching its attainment at materially
+    /// fewer replica-seconds.
+    pub replica_seconds: f64,
+    /// Requests the warm-down outflow re-queued off `Draining` replicas.
+    pub drain_requeued: usize,
+    /// Maximum simultaneously live (non-`Drained`) replicas.
+    pub peak_replicas: usize,
 }
 
 /// The central router: replicas + dispatch state.
 pub struct Router {
     pub replicas: Vec<ReplicaHandle>,
+    /// Pool-wide scenario (kept so the autoscaler can spawn replicas).
+    scenario: ScenarioConfig,
     cfg: RouterConfig,
     rr_next: usize,
     /// Event-loop rounds so far (throttles the migration pass).
     rounds: u64,
     rerouted: HashSet<RequestId>,
     migrated: HashSet<RequestId>,
+    autoscaler: Option<Autoscaler>,
+    timeline: Vec<ScaleEvent>,
+    drain_requeued: usize,
+    peak_replicas: usize,
 }
 
 impl Router {
     pub fn new(scenario: &ScenarioConfig, rcfg: &RouterConfig) -> Router {
         assert!(rcfg.replicas >= 1);
-        let replicas = (0..rcfg.replicas)
+        let mut replicas: Vec<ReplicaHandle> = (0..rcfg.replicas)
             .map(|i| ReplicaHandle::new(i, scenario, rcfg.features,
                                         rcfg.overrides.get(i)))
             .collect();
+        let cap = scaled_probe_cache_cap(replicas.len());
+        for h in &mut replicas {
+            h.set_probe_cache_cap(cap);
+        }
+        let autoscaler = rcfg.autoscaler.map(|a| {
+            assert!(a.min_replicas <= rcfg.replicas
+                    && rcfg.replicas <= a.max_replicas,
+                    "initial pool must sit inside the autoscaler bounds");
+            Autoscaler::new(a)
+        });
+        let peak_replicas = replicas.len();
         Router {
             replicas,
+            scenario: scenario.clone(),
             cfg: rcfg.clone(),
             rr_next: 0,
             rounds: 0,
             rerouted: HashSet::new(),
             migrated: HashSet::new(),
+            autoscaler,
+            timeline: Vec::new(),
+            drain_requeued: 0,
+            peak_replicas,
         }
+    }
+
+    fn event(&mut self, t: f64, kind: ScaleKind, replica: usize) {
+        let active =
+            self.replicas.iter().filter(|h| h.is_routable()).count();
+        self.timeline.push(ScaleEvent { t, kind, replica, active });
     }
 
     /// Serve `workload` to completion (or the safety horizon); consumes
@@ -68,25 +120,37 @@ impl Router {
     pub fn run(mut self, mut workload: Vec<Request>) -> MultiReplicaResult {
         workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let total = workload.len();
-        let k = self.replicas.len();
         let mut next_arrival = 0usize;
         let mut finished = 0usize;
         let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
         let horizon = (span_guess + 120.0) * 20.0 + 600.0;
 
         while finished < total {
-            // Advance the replica whose clock is furthest behind.
-            let r = (0..k)
-                .min_by(|&a, &b| {
-                    self.replicas[a]
-                        .clock
-                        .partial_cmp(&self.replicas[b].clock)
-                        .unwrap()
+            // Advance the live replica whose clock is furthest behind
+            // (Drained replicas left the pool; their frozen clocks must
+            // not pin the minimum).
+            let Some(r) = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| h.is_live())
+                .min_by(|(_, a), (_, b)| {
+                    a.clock.partial_cmp(&b.clock).unwrap()
                 })
-                .unwrap();
+                .map(|(i, _)| i)
+            else {
+                break; // unreachable: the pool keeps >= 1 Active replica
+            };
             let now = self.replicas[r].clock;
             if now > horizon {
                 break;
+            }
+
+            // A Warming replica parks its clock at `ready_at`, so being
+            // selected as the pool minimum *is* the warm-up completing.
+            if self.replicas[r].lifecycle == ReplicaState::Warming {
+                self.replicas[r].activate();
+                self.event(now, ScaleKind::Activated, r);
             }
 
             // Route and deliver every arrival due by the lagging clock.
@@ -97,6 +161,16 @@ impl Router {
                 let dest =
                     self.cfg.policy.route(&req, &self.replicas, self.rr_next);
                 self.rr_next += 1;
+                if self.autoscaler.is_some() {
+                    // The scale-up signal: was the pool about to defer
+                    // this feasible-SLO arrival? (Cache-served for the
+                    // probing policies, one extra probe otherwise.)
+                    let refused = !self.replicas[dest].probe(&req).feasible;
+                    self.autoscaler
+                        .as_mut()
+                        .unwrap()
+                        .record_arrival(now, refused);
+                }
                 self.replicas[dest].deliver(req);
                 next_arrival += 1;
             }
@@ -110,7 +184,7 @@ impl Router {
                     next = next.min(workload[next_arrival].arrival);
                 }
                 for (j, h) in self.replicas.iter().enumerate() {
-                    if j != r && h.clock > now {
+                    if j != r && h.is_live() && h.clock > now {
                         next = next.min(h.clock);
                     }
                 }
@@ -122,7 +196,7 @@ impl Router {
                         .replicas
                         .iter()
                         .enumerate()
-                        .any(|(j, h)| j != r && h.has_work());
+                        .any(|(j, h)| j != r && h.is_live() && h.has_work());
                     if any_work {
                         self.replicas[r].clock = now + 0.01;
                         continue;
@@ -135,9 +209,12 @@ impl Router {
             self.reroute_declined(r);
             self.rounds += 1;
             // Migration is an overload valve, not a steady-state path:
-            // run it every few rounds so probing stays amortized.
+            // run it every few rounds so probing stays amortized. Only
+            // Active sources rebalance — a Draining replica's outflow
+            // below moves everything movable anyway.
             if self.cfg.policy.migrates()
                 && self.rounds % 8 == 0
+                && self.replicas[r].is_routable()
                 && !self.replicas[r].state.best_effort.is_empty()
             {
                 for id in migration::rebalance(&mut self.replicas, r,
@@ -147,25 +224,140 @@ impl Router {
                     self.rerouted.insert(id);
                 }
             }
+
+            // Warm-down maintenance: sweep stragglers off a Draining
+            // replica (requests its own admission declined after the
+            // drain began) and retire it the moment it empties.
+            if self.replicas[r].lifecycle == ReplicaState::Draining {
+                self.drain_sweep(r, now);
+            }
+
+            if self.autoscaler.is_some() {
+                self.autoscale(now);
+                let live =
+                    self.replicas.iter().filter(|h| h.is_live()).count();
+                self.peak_replicas = self.peak_replicas.max(live);
+            }
         }
         self.finish()
     }
 
+    /// Re-queue whatever can still leave `Draining` replica `r`, and
+    /// retire it once empty. Retirement is stamped with the *pool* time
+    /// `now` (the loop's monotone min-clock), not the replica's own
+    /// clock — an idle victim may have been idle-jumped ahead of the
+    /// pool, and using its clock would both charge phantom
+    /// replica-seconds and break the timeline's simulated-time order.
+    fn drain_sweep(&mut self, r: usize, now: f64) {
+        for id in migration::drain_outflow(&mut self.replicas, r) {
+            self.rerouted.insert(id);
+            self.drain_requeued += 1;
+        }
+        if !self.replicas[r].has_work() {
+            self.replicas[r].finish_drain(now);
+            self.event(now, ScaleKind::Drained, r);
+        }
+    }
+
+    /// One autoscaler tick at pool time `now`: read the pool signal,
+    /// apply at most one scaling action.
+    fn autoscale(&mut self, now: f64) {
+        let (mut active, mut warming, mut draining) = (0usize, 0, 0);
+        for h in &self.replicas {
+            match h.lifecycle {
+                ReplicaState::Active => active += 1,
+                ReplicaState::Warming => warming += 1,
+                ReplicaState::Draining => draining += 1,
+                ReplicaState::Drained => {}
+            }
+        }
+        let counts = PoolCounts { active, warming, draining };
+        // The backlog scan is O(requests); hand it to the controller
+        // lazily — only the warm-down branch ever pays for it.
+        let replicas = &self.replicas;
+        let backlog = || {
+            replicas
+                .iter()
+                .filter(|h| h.is_routable())
+                .map(|h| h.outstanding_tokens() as f64
+                     / h.state.model.peak_throughput())
+                .sum::<f64>()
+        };
+        let decision = match self.autoscaler.as_mut() {
+            Some(a) => a.decide(now, counts, backlog),
+            None => return,
+        };
+        match decision {
+            ScaleDecision::Up => {
+                // Cheapest capacity first: cancel an in-flight warm-down
+                // before spawning (the draining replica is already warm).
+                if let Some(j) = self
+                    .replicas
+                    .iter()
+                    .position(|h| h.lifecycle == ReplicaState::Draining)
+                {
+                    self.replicas[j].cancel_drain();
+                    self.event(now, ScaleKind::DrainCancel, j);
+                    return;
+                }
+                let warmup =
+                    self.autoscaler.as_ref().unwrap().cfg.warmup_seconds;
+                let id = self.replicas.len();
+                self.replicas.push(ReplicaHandle::warming(
+                    id, &self.scenario, self.cfg.features,
+                    self.cfg.overrides.get(id), now, warmup));
+                // Probe-cache capacity follows the pool size.
+                let live =
+                    self.replicas.iter().filter(|h| h.is_live()).count();
+                let cap = scaled_probe_cache_cap(live);
+                for h in &mut self.replicas {
+                    h.set_probe_cache_cap(cap);
+                }
+                self.event(now, ScaleKind::SpawnWarming, id);
+            }
+            ScaleDecision::Down => {
+                // Victim: least-loaded Active replica, ties to the
+                // highest index (retire the newest; replica 0 is home).
+                let victim = self
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| h.is_routable())
+                    .min_by(|(i, a), (j, b)| {
+                        a.outstanding_tokens()
+                            .cmp(&b.outstanding_tokens())
+                            .then(j.cmp(i))
+                    })
+                    .map(|(i, _)| i);
+                if let Some(v) = victim {
+                    self.replicas[v].begin_drain();
+                    self.event(now, ScaleKind::DrainBegin, v);
+                    self.drain_sweep(v, now);
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+    }
+
     /// §4.2 sequential re-route: requests replica `r` just declined hop
     /// onwards until the route limit, then stay best-effort where they
-    /// are (the backup policy).
+    /// are (the backup policy). Hops land only on `Active` replicas.
     fn reroute_declined(&mut self, r: usize) {
         let declined = self.replicas[r].take_declined();
         if declined.is_empty() {
             return;
         }
-        let k = self.replicas.len();
+        let has_peer = self
+            .replicas
+            .iter()
+            .enumerate()
+            .any(|(j, h)| j != r && h.is_routable());
         for id in declined {
             let hops = match self.replicas[r].state.requests.get(&id) {
                 Some(req) => req.route_hops,
                 None => continue,
             };
-            if hops >= self.cfg.route_limit || k == 1 {
+            if hops >= self.cfg.route_limit || !has_peer {
                 continue;
             }
             let dest = self.hop_target(r, id);
@@ -177,33 +369,48 @@ impl Router {
     }
 
     /// Where a declined request hops: RoundRobin keeps the legacy
-    /// next-in-ring hop; LeastLoad picks the least-loaded other replica;
-    /// the SLO-aware policies probe for a replica that can still admit
-    /// it, preferring feasible-and-least-loaded.
+    /// next-in-ring hop (over routable replicas); LeastLoad picks the
+    /// least-loaded other replica; the SLO-aware policies probe for a
+    /// replica that can still admit it, preferring
+    /// feasible-and-least-loaded.
     fn hop_target(&self, r: usize, id: RequestId) -> usize {
-        let k = self.replicas.len();
         match self.cfg.policy {
-            RoutePolicy::RoundRobin => (r + 1) % k,
+            RoutePolicy::RoundRobin => {
+                policy::next_routable(&self.replicas, r)
+            }
             RoutePolicy::LeastLoad => {
-                crate::router::policy::least_loaded(&self.replicas, Some(r))
+                policy::least_loaded(&self.replicas, Some(r))
             }
             RoutePolicy::SloFeasibility | RoutePolicy::BurstAware => {
                 let probe_req = self.replicas[r].state.requests[&id].clone();
-                crate::router::policy::best_probed(&probe_req,
-                                                   &self.replicas, Some(r))
+                policy::best_probed(&probe_req, &self.replicas, Some(r))
                     .map(|(j, _)| j)
-                    .unwrap_or((r + 1) % k)
+                    .unwrap_or_else(|| {
+                        policy::next_routable(&self.replicas, r)
+                    })
             }
         }
     }
 
     fn finish(self) -> MultiReplicaResult {
-        let Router { replicas, rerouted, migrated, .. } = self;
+        let Router {
+            replicas,
+            rerouted,
+            migrated,
+            timeline,
+            drain_requeued,
+            peak_replicas,
+            ..
+        } = self;
         let per_replica_finished: Vec<usize> =
             replicas.iter().map(|h| h.finished).collect();
         let sched_wall_seconds: f64 =
             replicas.iter().map(|h| h.sched_wall_seconds).sum();
         let span = replicas.iter().fold(0.0f64, |a, h| a.max(h.clock));
+        let replica_seconds: f64 = replicas
+            .iter()
+            .map(|h| (h.retired_at.unwrap_or(span) - h.spawned_at).max(0.0))
+            .sum();
         let mut requests: Vec<Request> = replicas
             .into_iter()
             .flat_map(|h| h.state.requests.into_values())
@@ -217,6 +424,10 @@ impl Router {
             migrated: migrated.len(),
             per_replica_finished,
             sched_wall_seconds,
+            scale_timeline: timeline,
+            replica_seconds,
+            drain_requeued,
+            peak_replicas,
         }
     }
 }
@@ -334,6 +545,54 @@ mod tests {
         assert_eq!(router.replicas[1].state.model.max_batch_tokens, 4096);
         assert_eq!(router.replicas[1].state.kv.total_tokens(),
                    c.kv_tokens / c.page_size * c.page_size);
+    }
+
+    #[test]
+    fn elastic_pool_scales_up_on_burst_and_drains_when_idle() {
+        use crate::config::AutoscalerConfig;
+        use crate::router::autoscaler::ScaleKind;
+
+        // Light trickle, then a hard burst, then silence with two late
+        // stragglers that keep the pool alive long enough to warm down.
+        let mut reqs: Vec<Request> = (0..10)
+            .map(|i| req(i, i as f64, 800, 40))
+            .collect();
+        reqs.extend((0..30).map(|i| {
+            req(100 + i, 10.0 + 0.066 * i as f64, 2500, 30)
+        }));
+        reqs.push(req(900, 30.0, 400, 10));
+        reqs.push(req(901, 40.0, 400, 10));
+        let total = reqs.len();
+        let c = cfg();
+        let rcfg = RouterConfig::new(1)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(AutoscalerConfig::new(1, 3));
+        let res = run_multi_replica(reqs, &c, &rcfg);
+
+        assert_eq!(res.metrics.finished, total,
+                   "elastic pool must conserve and drain all work: {:?}",
+                   res.metrics);
+        assert!(res.peak_replicas >= 2,
+                "burst must grow the pool; timeline {:?}",
+                res.scale_timeline);
+        let kinds: Vec<ScaleKind> =
+            res.scale_timeline.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&ScaleKind::SpawnWarming));
+        assert!(kinds.contains(&ScaleKind::Activated));
+        assert!(kinds.contains(&ScaleKind::Drained),
+                "idle tail must warm the pool back down: {kinds:?}");
+        // The pool must never report fewer Active replicas than the
+        // configured minimum.
+        for e in &res.scale_timeline {
+            assert!(e.active >= 1, "event {e:?} left the pool empty");
+        }
+        // Elasticity is the point: strictly cheaper than max-static.
+        let span = res.metrics.span;
+        assert!(res.replica_seconds < 3.0 * span - 1.0,
+                "replica-seconds {} vs static-3 {}",
+                res.replica_seconds, 3.0 * span);
+        assert!(res.replica_seconds >= span - 1e-9,
+                "at least the home replica runs the whole span");
     }
 
     #[test]

@@ -1,28 +1,37 @@
-//! Cross-replica re-queue of not-yet-prefilled requests (§4.2, the
-//! BurstAware policy's overload valve).
+//! Cross-replica re-queue of not-yet-prefilled requests (§4.2): the
+//! BurstAware policy's overload valve, and the elastic pool's warm-down
+//! outflow.
 //!
-//! When a burst lands on one replica, its DP defers the overflow to the
-//! best-effort tier (§4.1). Requests that have not produced anything
-//! replica-local yet — no KV pages, no prefill progress, no recompute
-//! debt — are free to move: a migration pass probes the other replicas
-//! and re-queues each such request, as standard tier, on a replica whose
-//! admission DP would still accept it. Every hop consumes one unit of
-//! the request's `route_hops` budget (`RouterConfig::route_limit`), which
-//! bounds ping-pong; requests keep their original prefill deadline, so
-//! migration can rescue an SLO but never relax one.
+//! **Overload valve** ([`rebalance`]): when a burst lands on one replica,
+//! its DP defers the overflow to the best-effort tier (§4.1). Requests
+//! that have not produced anything replica-local yet — no KV pages, no
+//! prefill progress, no recompute debt — are free to move: a migration
+//! pass probes the other replicas and re-queues each such request, as
+//! standard tier, on a replica whose admission DP would still accept it.
+//! Every hop consumes one unit of the request's `route_hops` budget
+//! (`RouterConfig::route_limit`), which bounds ping-pong; requests keep
+//! their original prefill deadline, so migration can rescue an SLO but
+//! never relax one.
+//!
+//! **Warm-down outflow** ([`drain_outflow`]): when the autoscaler puts a
+//! replica into `Draining`, its unstarted requests (pending *and*
+//! deferred) re-queue onto the pool immediately instead of waiting out
+//! the drain. Outflow moves are lifecycle evictions, not SLO hops: they
+//! are exempt from the route limit (the source replica is going away and
+//! can never be routed back to, so there is no ping-pong to bound) and
+//! are counted in `Request::drain_requeues` instead of `route_hops`.
+//! Both movers share the [`ServerState::is_unstarted`] predicate and the
+//! [`best_probed`](crate::router::policy::best_probed) destination
+//! order, so they can never disagree about what may move or where.
+//!
+//! [`ServerState::is_unstarted`]: crate::sim::ServerState::is_unstarted
 
-use crate::coordinator::request::{Phase, RequestId};
+use crate::coordinator::request::RequestId;
 use crate::router::replica::ReplicaHandle;
 
 /// A request may migrate while nothing about it is replica-local.
 fn migratable(h: &ReplicaHandle, id: RequestId) -> bool {
-    let Some(r) = h.state.requests.get(&id) else { return false };
-    !r.is_finished()
-        && matches!(r.phase, Phase::Pending | Phase::Prefill)
-        && r.prefill_done == 0
-        && r.decode_done == 0
-        && r.recompute_pending == 0
-        && h.state.kv.tokens_of(id) == 0
+    h.state.is_unstarted(id)
 }
 
 /// Cap on candidates probed per pass: a probe costs one DP dry-run per
@@ -69,6 +78,41 @@ pub fn rebalance(replicas: &mut [ReplicaHandle], src: usize,
         };
         let mut r = replicas[src].extract(id).expect("migratable implies present");
         r.route_hops += 1;
+        replicas[dest].accept_rerouted(r);
+        moved.push(id);
+    }
+    moved
+}
+
+/// Warm-down outflow for the `Draining` replica `src`: every unstarted
+/// request still queued there (pending or best-effort) re-queues, as
+/// standard tier, onto the best routable replica — feasible-and-least-
+/// loaded first, least-loaded spillover when no probe admits it (the
+/// same §4.1 spillover dispatch uses; staying on a dying replica is
+/// strictly worse). Started requests are untouched: finishing their
+/// in-flight work *is* the drain. Returns the moved ids; each request
+/// moves at most once per call because extraction removes it from the
+/// snapshot's source queues.
+pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize)
+                     -> Vec<RequestId> {
+    let mut moved = Vec::new();
+    if !replicas.iter().any(|h| h.is_routable()) {
+        return moved; // nowhere to go; the drain serves them instead
+    }
+    let mut queue: Vec<RequestId> = replicas[src].state.pending.clone();
+    queue.extend_from_slice(&replicas[src].state.best_effort);
+    for id in queue {
+        if !replicas[src].state.is_unstarted(id) {
+            continue;
+        }
+        let probe_req = replicas[src].state.requests[&id].clone();
+        let Some((dest, _)) = crate::router::policy::best_probed(
+            &probe_req, replicas, Some(src))
+        else {
+            break; // no routable peer left
+        };
+        let mut r = replicas[src].extract(id).expect("unstarted implies present");
+        r.drain_requeues += 1;
         replicas[dest].accept_rerouted(r);
         moved.push(id);
     }
@@ -142,5 +186,56 @@ mod tests {
         let mut reps = handles(1);
         deferred_request(&mut reps[0], 7);
         assert!(rebalance(&mut reps, 0, 8).is_empty());
+    }
+
+    #[test]
+    fn drain_outflow_requeues_unstarted_exactly_once() {
+        let mut reps = handles(3);
+        // Replica 0 drains holding: a pending request (1), a deferred
+        // best-effort request (2), and a best-effort request with prefill
+        // progress + KV (3, replica-local).
+        reps[0].deliver(Request::simple(
+            1, 0.0, 500, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)));
+        deferred_request(&mut reps[0], 2);
+        deferred_request(&mut reps[0], 3);
+        assert!(reps[0].state.kv.grow(3, 32));
+        reps[0].state.req_mut(3).advance_prefill(32, 0.01);
+        reps[0].begin_drain();
+
+        let moved = drain_outflow(&mut reps, 0);
+        assert_eq!(moved, vec![1, 2], "pending first, then deferred");
+        // Warm-down conservation: each moved request lives on exactly one
+        // replica, standard tier, counted as a drain re-queue (not an SLO
+        // hop); the started request waits out the drain at the source.
+        for &id in &[1u64, 2] {
+            let holders: Vec<usize> = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| h.state.requests.contains_key(&id))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(holders.len(), 1, "req {id} must exist exactly once");
+            assert_ne!(holders[0], 0, "req {id} must leave the drain");
+            let r = &reps[holders[0]].state.requests[&id];
+            assert_eq!(r.tier, ServiceTier::Standard);
+            assert_eq!(r.drain_requeues, 1);
+            assert_eq!(r.route_hops, 0, "outflow is not an SLO hop");
+        }
+        assert!(reps[0].state.requests.contains_key(&3));
+        // The outflow is idempotent once nothing unstarted remains.
+        assert!(drain_outflow(&mut reps, 0).is_empty());
+    }
+
+    #[test]
+    fn drain_outflow_without_routable_peer_is_a_noop() {
+        let mut reps = handles(2);
+        deferred_request(&mut reps[0], 7);
+        reps[0].begin_drain();
+        reps[1].begin_drain();
+        assert!(drain_outflow(&mut reps, 0).is_empty());
+        assert!(reps[0].state.requests.contains_key(&7),
+                "request waits out the drain when the pool has no Active \
+                 replica to take it");
     }
 }

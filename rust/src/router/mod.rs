@@ -1,5 +1,5 @@
 //! Multi-replica serving with SLO-driven request routing (paper §4.2) —
-//! a subsystem in four parts:
+//! a subsystem in five parts:
 //!
 //! * [`replica`] — [`ReplicaHandle`]: one virtualized replica (its own
 //!   SLOs-Serve scheduler, server state, sim clock, and RNG stream),
@@ -11,45 +11,81 @@
 //!   (static `i mod k`, the paper's one-shot dispatcher), `LeastLoad`
 //!   (fewest outstanding tokens), `SloFeasibility` (feasible-and-least-
 //!   loaded first, least-loaded spillover when no replica can admit),
-//!   and `BurstAware` (`SloFeasibility` + cross-replica migration).
+//!   and `BurstAware` (`SloFeasibility` + cross-replica migration). All
+//!   policies dispatch only to `Active` replicas.
 //! * [`balancer`] — [`Router`]: the central controller. Holds every
-//!   replica's clock, always advances the furthest-behind replica,
+//!   replica's clock, always advances the furthest-behind live replica,
 //!   routes each arrival through the policy, and re-routes requests a
 //!   replica's DP declined — sequentially, up to `route_limit` hops,
 //!   after which the request stays in the best-effort tier where it is
 //!   (the §4.2 backup policy).
-//! * [`migration`] — the BurstAware overload valve: best-effort requests
-//!   that are **not yet prefilled** (no KV pages, no prefill progress,
-//!   no recompute debt — nothing replica-local) are re-queued, standard
-//!   tier, onto a replica whose probe still admits them. Hops consume
-//!   the same `route_limit` budget, bounding ping-pong. Requests keep
-//!   their original prefill deadline across every move: routing can
-//!   rescue an SLO, never relax one. A request extracted with partial
-//!   KV (the declined-hop path) releases its pages at the source and
-//!   carries recompute debt instead (§4.1 preemption semantics).
+//! * [`migration`] — the BurstAware overload valve plus the warm-down
+//!   outflow: requests that are **not yet prefilled** (no KV pages, no
+//!   prefill progress, no recompute debt — nothing replica-local) are
+//!   re-queued, standard tier, onto a replica whose probe still admits
+//!   them. Valve hops consume the `route_limit` budget, bounding
+//!   ping-pong; warm-down evictions are exempt (the source is leaving
+//!   the pool). Requests keep their original prefill deadline across
+//!   every move: routing can rescue an SLO, never relax one. A request
+//!   extracted with partial KV (the declined-hop path) releases its
+//!   pages at the source and carries recompute debt instead (§4.1
+//!   preemption semantics).
+//! * [`autoscaler`] — the elastic-pool controller: scale up when the
+//!   pool's probes keep refusing feasible-SLO arrivals, warm-down when
+//!   the pool idles, hysteresis in between (see
+//!   [`AutoscalerConfig`](crate::config::AutoscalerConfig)).
+//!
+//! # Replica lifecycle
+//!
+//! Every replica carries an explicit [`ReplicaState`]; a fixed pool's
+//! replicas simply stay `Active` for the whole run:
+//!
+//! ```text
+//!                 pool clock           autoscaler Down
+//!                reaches ready_at     (least-loaded victim)
+//!   [Warming] ---------------------> [Active] <----------.
+//!       ^                               |    \            \
+//!       | autoscaler Up                 |     `----------> [Draining]
+//!       | (spawn; or cancel an          |     autoscaler Up |   |
+//!       |  in-flight warm-down)        route / probe        |   | outflow:
+//!       |                              arrivals, hops,  <---'   | unstarted
+//!       |                              migrations (Active       | requests
+//!       |                              replicas only)           | re-queue;
+//!       |                                                       | started
+//!       |                                                       | work drains
+//!       |                                has_work() == false    v
+//!       `------- new ReplicaHandle <-- [Drained]  <-- (retired_at set,
+//!                 (next scale-up)       leaves the event loop)
+//! ```
 //!
 //! Heterogeneous pools: `RouterConfig::overrides` gives replica `i` its
 //! own `ReplicaOverride` (hardware preset, KV budget, chunked-prefill
 //! budget, speculation setup) — see `ScenarioConfig::for_replica`.
+//! Replicas the autoscaler spawns take the override at their index too.
 
+pub mod autoscaler;
 pub mod balancer;
 pub mod migration;
 pub mod policy;
 pub mod replica;
 
+pub use autoscaler::{Autoscaler, ScaleDecision, ScaleEvent, ScaleKind};
 pub use balancer::{run_multi_replica, MultiReplicaResult, Router};
 pub use policy::RoutePolicy;
-pub use replica::{FeasibilityProbe, ReplicaHandle};
+pub use replica::{FeasibilityProbe, ReplicaHandle, ReplicaState};
 
-use crate::config::ReplicaOverride;
+use crate::config::{AutoscalerConfig, ReplicaOverride};
 use crate::coordinator::scheduler::Features;
 
 /// Pool-level router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
+    /// Initial pool size (the autoscaler, when enabled, grows/shrinks
+    /// the pool between its own bounds from here).
     pub replicas: usize,
     /// Max re-routes (declined hops + migrations) per request before the
-    /// backup policy (best-effort where it stands).
+    /// backup policy (best-effort where it stands). Warm-down evictions
+    /// are exempt.
     pub route_limit: u32,
     /// Feature override for every replica's scheduler; `None` keeps the
     /// scenario's own configuration (speculation per Tab. 2 etc.).
@@ -62,6 +98,9 @@ pub struct RouterConfig {
     ///
     /// [`ScenarioConfig`]: crate::config::ScenarioConfig
     pub overrides: Vec<ReplicaOverride>,
+    /// Elastic pool: attach an attainment-driven autoscaler. `None` =
+    /// fixed pool (every replica `Active` for the whole run).
+    pub autoscaler: Option<AutoscalerConfig>,
 }
 
 impl RouterConfig {
@@ -72,6 +111,7 @@ impl RouterConfig {
             features: None,
             policy: RoutePolicy::RoundRobin,
             overrides: Vec::new(),
+            autoscaler: None,
         }
     }
 
@@ -82,6 +122,20 @@ impl RouterConfig {
 
     pub fn with_overrides(mut self, overrides: Vec<ReplicaOverride>) -> Self {
         self.overrides = overrides;
+        self
+    }
+
+    /// Make the pool elastic: the configured `replicas` (clamped into
+    /// the autoscaler's bounds) is the starting size, and the autoscaler
+    /// flexes between the bounds from there — so `--replicas 3` with
+    /// `min=1` still starts warm at 3. The route limit follows the
+    /// largest pool the autoscaler may build, so declined-hop rescue
+    /// keeps working at full scale.
+    pub fn with_autoscaler(mut self, a: AutoscalerConfig) -> Self {
+        self.replicas = self.replicas.clamp(a.min_replicas, a.max_replicas);
+        self.route_limit =
+            self.route_limit.max(a.max_replicas.saturating_sub(1) as u32);
+        self.autoscaler = Some(a);
         self
     }
 }

@@ -59,14 +59,19 @@ impl RoutePolicy {
         matches!(self, RoutePolicy::BurstAware)
     }
 
-    /// Pick the destination replica for `req`. `rr_next` is the router's
-    /// running dispatch counter (used by RoundRobin only). Ties break on
-    /// the lowest replica index, keeping routing fully deterministic.
+    /// Pick the destination replica for `req` among the **routable**
+    /// (lifecycle `Active`) replicas — `Warming`/`Draining`/`Drained`
+    /// replicas never receive new work. `rr_next` is the router's running
+    /// dispatch counter (used by RoundRobin only). Ties break on the
+    /// lowest replica index, keeping routing fully deterministic. The
+    /// balancer maintains the invariant that at least one replica is
+    /// `Active`; the index-0 fallbacks below are defensive only.
     pub fn route(self, req: &Request, replicas: &[ReplicaHandle],
                  rr_next: usize) -> usize {
-        debug_assert!(!replicas.is_empty());
+        debug_assert!(replicas.iter().any(|h| h.is_routable()),
+                      "pool must keep >= 1 Active replica");
         match self {
-            RoutePolicy::RoundRobin => rr_next % replicas.len(),
+            RoutePolicy::RoundRobin => nth_routable(replicas, rr_next),
             RoutePolicy::LeastLoad => least_loaded(replicas, None),
             RoutePolicy::SloFeasibility | RoutePolicy::BurstAware => {
                 best_probed(req, replicas, None)
@@ -77,15 +82,42 @@ impl RoutePolicy {
     }
 }
 
-/// Index of the replica with the fewest outstanding tokens (ties to the
-/// lowest index), optionally skipping one replica. Returns 0 when every
-/// replica is skipped (callers never skip in a 1-replica pool).
+/// `rr_next`-th routable replica in index order (RoundRobin over the
+/// Active sub-pool; a fixed all-Active pool reduces to `rr_next % k`).
+fn nth_routable(replicas: &[ReplicaHandle], rr_next: usize) -> usize {
+    let active = replicas.iter().filter(|h| h.is_routable()).count();
+    if active == 0 {
+        return 0; // defensive; the balancer keeps >= 1 Active
+    }
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.is_routable())
+        .nth(rr_next % active)
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// First routable replica after `r` in ring order (the RoundRobin
+/// declined-hop target; equals `(r + 1) % k` in an all-Active pool).
+pub fn next_routable(replicas: &[ReplicaHandle], r: usize) -> usize {
+    let k = replicas.len();
+    (1..=k)
+        .map(|d| (r + d) % k)
+        .find(|&j| replicas[j].is_routable())
+        .unwrap_or(0)
+}
+
+/// Index of the **routable** replica with the fewest outstanding tokens
+/// (ties to the lowest index), optionally skipping one replica. Returns
+/// 0 when no routable replica remains (callers never skip the last
+/// Active replica).
 pub fn least_loaded(replicas: &[ReplicaHandle], skip: Option<usize>)
                     -> usize {
     let mut best = 0usize;
     let mut best_load = usize::MAX;
     for (i, h) in replicas.iter().enumerate() {
-        if Some(i) == skip {
+        if Some(i) == skip || !h.is_routable() {
             continue;
         }
         let load = h.outstanding_tokens();
@@ -97,17 +129,18 @@ pub fn least_loaded(replicas: &[ReplicaHandle], skip: Option<usize>)
     best
 }
 
-/// Probe every replica (optionally skipping one) and pick the best
-/// destination for `req`: feasible replicas sort strictly before
-/// infeasible ones, then fewest outstanding tokens, then lowest index.
-/// Returns `(index, feasible)`; `None` only when every replica was
-/// skipped. Shared by arrival dispatch, declined-hop targeting, and the
-/// migration pass so the three sites can never disagree on selection.
+/// Probe every **routable** replica (optionally skipping one) and pick
+/// the best destination for `req`: feasible replicas sort strictly
+/// before infeasible ones, then fewest outstanding tokens, then lowest
+/// index. Returns `(index, feasible)`; `None` when every routable
+/// replica was skipped. Shared by arrival dispatch, declined-hop
+/// targeting, the migration pass, and the warm-down outflow so the four
+/// sites can never disagree on selection.
 pub fn best_probed(req: &Request, replicas: &[ReplicaHandle],
                    skip: Option<usize>) -> Option<(usize, bool)> {
     let mut best: Option<((usize, usize, usize), usize)> = None;
     for (i, h) in replicas.iter().enumerate() {
-        if Some(i) == skip {
+        if Some(i) == skip || !h.is_routable() {
             continue;
         }
         let p = h.probe(req);
@@ -186,6 +219,38 @@ mod tests {
         let replicas = vec![a, b];
         assert_eq!(RoutePolicy::SloFeasibility.route(&fresh, &replicas, 0), 1);
         assert_eq!(RoutePolicy::BurstAware.route(&fresh, &replicas, 0), 1);
+    }
+
+    #[test]
+    fn non_active_replicas_never_receive_new_work() {
+        let c = cfg();
+        let mut replicas: Vec<ReplicaHandle> =
+            (0..4).map(|i| ReplicaHandle::new(i, &c, None, None)).collect();
+        // Replica 0 drains, replica 2 warms: only 1 and 3 are routable.
+        replicas[0].begin_drain();
+        replicas[2] = ReplicaHandle::warming(2, &c, None, None, 0.0, 5.0);
+        let r = req(1, 400, 20);
+        for rr in 0..8 {
+            let dest = RoutePolicy::RoundRobin.route(&r, &replicas, rr);
+            assert!(dest == 1 || dest == 3, "rr={rr} dest={dest}");
+        }
+        assert_eq!(RoutePolicy::RoundRobin.route(&r, &replicas, 0), 1);
+        assert_eq!(RoutePolicy::RoundRobin.route(&r, &replicas, 1), 3);
+        assert_eq!(RoutePolicy::LeastLoad.route(&r, &replicas, 0), 1);
+        let dest = RoutePolicy::SloFeasibility.route(&r, &replicas, 0);
+        assert_eq!(dest, 1, "feasible-and-lowest-index among Active");
+        // Ring-hop skips the draining/warming replicas too.
+        assert_eq!(next_routable(&replicas, 0), 1);
+        assert_eq!(next_routable(&replicas, 1), 3);
+        assert_eq!(next_routable(&replicas, 3), 1);
+        // best_probed skipping the only other Active replica finds none.
+        let lone: Vec<ReplicaHandle> = {
+            let mut v: Vec<ReplicaHandle> =
+                (0..2).map(|i| ReplicaHandle::new(i, &c, None, None)).collect();
+            v[1].begin_drain();
+            v
+        };
+        assert!(best_probed(&r, &lone, Some(0)).is_none());
     }
 
     #[test]

@@ -27,6 +27,30 @@ use crate::coordinator::scheduler::{Features, SlosServe};
 use crate::sim::{apply_batch, deliver, Policy, ServerState};
 use crate::workload::Rng;
 
+/// Lifecycle of one replica in an elastic pool (see the state diagram in
+/// the [`router`](crate::router) module docs). A fixed pool's replicas
+/// are `Active` for their whole life; the autoscaler moves replicas
+/// through `Warming` (spun up, not yet routable) and `Draining`
+/// (warm-down: no new routing, existing commitments finish or re-queue)
+/// into `Drained` (empty, dropped from scheduling — only its completed
+/// requests remain for metrics collection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Spinning up; becomes `Active` once the pool clock reaches
+    /// [`ReplicaHandle::ready_at`]. Not routable.
+    Warming,
+    /// Routable: the balancer dispatches arrivals, hops, and migrations
+    /// here.
+    Active,
+    /// Warm-down: receives nothing new; runs batches until its remaining
+    /// commitments finish (unstarted requests are re-queued to the pool
+    /// by the drain outflow instead of waiting the drain out).
+    Draining,
+    /// Empty and retired at [`ReplicaHandle::retired_at`]; excluded from
+    /// the event loop. Terminal.
+    Drained,
+}
+
 /// Snapshot a feasibility probe returns to the routing policy.
 #[derive(Debug, Clone, Copy)]
 pub struct FeasibilityProbe {
@@ -71,8 +95,18 @@ struct ProbeCache {
 
 /// Distinct candidate shapes remembered per epoch; a burst round probes
 /// each arrival against every replica, so a handful of entries already
-/// absorbs the repeat probes (hop targeting, migration).
+/// absorbs the repeat probes (hop targeting, migration). This is the
+/// floor — elastic pools scale it up via [`scaled_probe_cache_cap`].
 const PROBE_CACHE_CAP: usize = 16;
+
+/// Probe-cache capacity for a pool of `pool_size` replicas: a burst
+/// round probes every in-flight arrival against every replica, so the
+/// distinct-candidate working set grows with the pool. `max(16, 4 *
+/// pool_size)` keeps small pools at the original footprint while a
+/// large elastic pool no longer thrashes the cache.
+pub fn scaled_probe_cache_cap(pool_size: usize) -> usize {
+    PROBE_CACHE_CAP.max(4 * pool_size)
+}
 
 /// One simulated replica under the central router.
 pub struct ReplicaHandle {
@@ -90,6 +124,19 @@ pub struct ReplicaHandle {
     /// Wall-clock seconds spent inside `Policy::next_batch` (scheduler
     /// overhead, Fig. 15-style accounting for multi-replica runs).
     pub sched_wall_seconds: f64,
+    /// Elastic-pool lifecycle (fixed pools stay `Active` throughout).
+    pub lifecycle: ReplicaState,
+    /// When a `Warming` replica becomes routable (== `spawned_at` for
+    /// replicas that start `Active`).
+    pub ready_at: f64,
+    /// Simulated time this replica was added to the pool (0 for the
+    /// initial pool) — start of its replica-seconds accounting.
+    pub spawned_at: f64,
+    /// Simulated time the replica finished draining (`Drained`); end of
+    /// its replica-seconds accounting. `None` while the replica lives.
+    pub retired_at: Option<f64>,
+    /// Probe-cache capacity (scaled with pool size by the router).
+    probe_cache_cap: usize,
     /// Probe-cache dirty bit: bumped by every state-mutating entry point.
     epoch: u64,
     probe_cache: RefCell<ProbeCache>,
@@ -120,9 +167,75 @@ impl ReplicaHandle {
             rng,
             finished: 0,
             sched_wall_seconds: 0.0,
+            lifecycle: ReplicaState::Active,
+            ready_at: 0.0,
+            spawned_at: 0.0,
+            retired_at: None,
+            probe_cache_cap: PROBE_CACHE_CAP,
             epoch: 0,
             probe_cache: RefCell::new(ProbeCache::default()),
         }
+    }
+
+    /// Build a replica the autoscaler adds at simulated time `now`: it
+    /// enters `Warming` and becomes routable once the pool clock reaches
+    /// `now + warmup` (its own clock starts there, so the event loop
+    /// naturally selects — and activates — it at that instant).
+    pub fn warming(id: usize, base: &ScenarioConfig,
+                   features: Option<Features>, ov: Option<&ReplicaOverride>,
+                   now: f64, warmup: f64) -> Self {
+        let mut h = ReplicaHandle::new(id, base, features, ov);
+        h.lifecycle = ReplicaState::Warming;
+        h.spawned_at = now;
+        h.ready_at = now + warmup.max(0.0);
+        h.clock = h.ready_at;
+        h
+    }
+
+    /// May the balancer route new work (arrivals, declined hops,
+    /// migrations) here?
+    pub fn is_routable(&self) -> bool {
+        self.lifecycle == ReplicaState::Active
+    }
+
+    /// Still participates in the event loop (everything but `Drained`).
+    pub fn is_live(&self) -> bool {
+        self.lifecycle != ReplicaState::Drained
+    }
+
+    /// `Warming -> Active` (the pool clock reached `ready_at`).
+    pub fn activate(&mut self) {
+        debug_assert_eq!(self.lifecycle, ReplicaState::Warming);
+        self.lifecycle = ReplicaState::Active;
+    }
+
+    /// `Active -> Draining`: warm-down begins — the balancer stops
+    /// routing here and the drain outflow re-queues unstarted requests.
+    pub fn begin_drain(&mut self) {
+        debug_assert_eq!(self.lifecycle, ReplicaState::Active);
+        self.lifecycle = ReplicaState::Draining;
+    }
+
+    /// `Draining -> Active`: cancel a warm-down (load returned before the
+    /// drain finished — cheaper than warming a fresh replica).
+    pub fn cancel_drain(&mut self) {
+        debug_assert_eq!(self.lifecycle, ReplicaState::Draining);
+        self.lifecycle = ReplicaState::Active;
+    }
+
+    /// `Draining -> Drained` once nothing is left to serve; the replica
+    /// leaves the event loop and `retired_at` closes its
+    /// replica-seconds account.
+    pub fn finish_drain(&mut self, now: f64) {
+        debug_assert_eq!(self.lifecycle, ReplicaState::Draining);
+        debug_assert!(!self.has_work());
+        self.lifecycle = ReplicaState::Drained;
+        self.retired_at = Some(now);
+    }
+
+    /// Scale the probe cache with the pool (see [`scaled_probe_cache_cap`]).
+    pub fn set_probe_cache_cap(&mut self, cap: usize) {
+        self.probe_cache_cap = cap.max(1);
     }
 
     /// Deliver a newly routed arrival: enters its stage against this
@@ -170,9 +283,32 @@ impl ReplicaHandle {
         }
     }
 
+    /// Memo generation for this replica's probe state: every probe issued
+    /// while this value is unchanged may share one `PB*` memo (see
+    /// `DpPlanner::plan_keyed`). Mixes the mutation epoch with the clock
+    /// bits (running-decode tier classification reads `now`) and the same
+    /// cheap queue/KV fingerprint the probe key uses, so direct `state`
+    /// edits (tests) change the generation even without an epoch bump.
+    fn probe_generation(&self) -> u64 {
+        const K: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut g = self.epoch;
+        for v in [
+            self.clock.to_bits(),
+            self.state.pending.len() as u64,
+            self.state.running.len() as u64,
+            self.state.best_effort.len() as u64,
+            self.state.kv.free_tokens() as u64,
+        ] {
+            g = (g.rotate_left(7) ^ v).wrapping_mul(K);
+        }
+        g
+    }
+
     /// Dry-run admission for `candidate` plus load snapshot. Memoized:
     /// a repeat probe of the same candidate shape against an unchanged
-    /// replica returns the cached snapshot without re-running the DP.
+    /// replica returns the cached snapshot without re-running the DP,
+    /// and distinct candidates probed against an unchanged replica share
+    /// one generation-keyed `PB*` memo inside the DP itself.
     pub fn probe(&self, candidate: &Request) -> FeasibilityProbe {
         let key = self.probe_key(candidate);
         {
@@ -188,9 +324,9 @@ impl ReplicaHandle {
         }
         let outstanding = self.outstanding_tokens();
         let p = FeasibilityProbe {
-            feasible: self
-                .policy
-                .admission_probe(self.clock, &self.state, candidate),
+            feasible: self.policy.admission_probe_keyed(
+                self.clock, &self.state, candidate,
+                self.probe_generation()),
             outstanding_tokens: outstanding,
             drain_seconds: outstanding as f64
                 / self.state.model.peak_throughput(),
@@ -199,7 +335,7 @@ impl ReplicaHandle {
             best_effort: self.state.best_effort.len(),
         };
         let mut cache = self.probe_cache.borrow_mut();
-        if cache.entries.len() >= PROBE_CACHE_CAP {
+        if cache.entries.len() >= self.probe_cache_cap {
             cache.entries.clear();
         }
         cache.entries.push((key, p));
@@ -346,6 +482,48 @@ mod tests {
                 "pages must return to the pool");
         assert!(h.state.requests.is_empty());
         assert!(!h.has_work());
+    }
+
+    #[test]
+    fn lifecycle_transitions_and_accounting() {
+        let c = cfg();
+        let mut h = ReplicaHandle::warming(3, &c, None, None, 10.0, 2.0);
+        assert_eq!(h.lifecycle, ReplicaState::Warming);
+        assert!(!h.is_routable() && h.is_live());
+        assert_eq!(h.spawned_at, 10.0);
+        assert_eq!(h.ready_at, 12.0);
+        assert_eq!(h.clock, 12.0, "warming clock parks at ready_at");
+        h.activate();
+        assert!(h.is_routable());
+        h.begin_drain();
+        assert!(!h.is_routable() && h.is_live());
+        h.cancel_drain();
+        assert!(h.is_routable());
+        h.begin_drain();
+        h.finish_drain(20.0);
+        assert_eq!(h.lifecycle, ReplicaState::Drained);
+        assert!(!h.is_live());
+        assert_eq!(h.retired_at, Some(20.0));
+        // A plain pool replica is Active from birth with a zero-based
+        // account.
+        let fixed = ReplicaHandle::new(0, &c, None, None);
+        assert!(fixed.is_routable());
+        assert_eq!(fixed.spawned_at, 0.0);
+        assert_eq!(fixed.retired_at, None);
+    }
+
+    #[test]
+    fn probe_cache_cap_scales_with_pool_size() {
+        assert_eq!(scaled_probe_cache_cap(1), 16);
+        assert_eq!(scaled_probe_cache_cap(4), 16);
+        assert_eq!(scaled_probe_cache_cap(5), 20);
+        assert_eq!(scaled_probe_cache_cap(12), 48);
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        h.set_probe_cache_cap(scaled_probe_cache_cap(8));
+        assert_eq!(h.probe_cache_cap, 32);
+        h.set_probe_cache_cap(0); // degenerate: floor of one entry
+        assert_eq!(h.probe_cache_cap, 1);
     }
 
     #[test]

@@ -74,6 +74,21 @@ impl ServerState {
     pub fn pages_for_request(&self, r: &Request) -> usize {
         self.kv.allocator().pages_for(r.total_tokens())
     }
+
+    /// Has request `id` produced *nothing replica-local* yet — no prefill
+    /// progress, no decode progress, no recompute debt, no KV pages? Such
+    /// requests are free to move between replicas (§4.2): cross-replica
+    /// migration and the elastic pool's warm-down outflow both gate on
+    /// this predicate, so the two can never disagree about what may move.
+    pub fn is_unstarted(&self, id: RequestId) -> bool {
+        let Some(r) = self.requests.get(&id) else { return false };
+        !r.is_finished()
+            && matches!(r.phase, Phase::Pending | Phase::Prefill)
+            && r.prefill_done == 0
+            && r.decode_done == 0
+            && r.recompute_pending == 0
+            && self.kv.tokens_of(id) == 0
+    }
 }
 
 /// A scheduling policy: the only interface the simulator knows.
@@ -382,6 +397,23 @@ mod tests {
         let res = run(&mut Lazy, reqs, &config());
         assert_eq!(res.metrics.finished, 0);
         assert_eq!(res.metrics.attainment(), 0.0);
+    }
+
+    #[test]
+    fn is_unstarted_tracks_replica_local_state() {
+        let cfg = config();
+        let mut st = ServerState::new(&cfg);
+        assert!(!st.is_unstarted(1), "absent request is not movable");
+        deliver(&mut st, tiny_request(1, 0.0));
+        assert!(st.is_unstarted(1), "freshly delivered = nothing local");
+        // Holding KV pins it ...
+        assert!(st.kv.grow(1, 16));
+        assert!(!st.is_unstarted(1));
+        st.kv.release(1);
+        assert!(st.is_unstarted(1));
+        // ... and so does prefill progress.
+        st.req_mut(1).advance_prefill(10, 0.1);
+        assert!(!st.is_unstarted(1));
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod traces;
 
 pub use rng::Rng;
 pub use scenarios::{build_stages, generate, stats, WorkloadStats};
-pub use traces::{count_cv, ArrivalProcess};
+pub use traces::{compress_middle_third, count_cv, ArrivalProcess};

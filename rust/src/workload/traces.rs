@@ -74,6 +74,28 @@ impl ArrivalProcess {
     }
 }
 
+/// Compress the middle third of a workload's arrivals by `factor`: the
+/// canonical "bursty X" shaping of the §4.2 router experiments (e.g.
+/// near-Poisson Mixed arrivals turned into a `factor`x-rate spike).
+/// The lull this leaves between the spike's end and the final third is
+/// deliberate — it is the quiet period burst-deferred work drains in
+/// (Fig. 11) and an elastic pool warms down in. Requests keep their
+/// relative order; the slice must already be arrival-sorted (as
+/// `generate` returns it).
+pub fn compress_middle_third(wl: &mut [crate::coordinator::request::Request],
+                             factor: f64) {
+    assert!(factor >= 1.0);
+    let n = wl.len();
+    if n < 3 {
+        return;
+    }
+    let (a, b) = (n / 3, 2 * n / 3);
+    let t0 = wl[a].arrival;
+    for r in wl[a..b].iter_mut() {
+        r.arrival = t0 + (r.arrival - t0) / factor;
+    }
+}
+
 /// Coefficient of variation of per-`window`-second arrival counts — the
 /// burstiness statistic Fig. 8 visualizes.
 pub fn count_cv(arrivals: &[f64], window: f64) -> f64 {
@@ -127,6 +149,24 @@ mod tests {
         let cv_s = count_cv(&stable, 1.0);
         let cv_b = count_cv(&bursty, 1.0);
         assert!(cv_b > 1.5 * cv_s, "stable={cv_s:.2} bursty={cv_b:.2}");
+    }
+
+    #[test]
+    fn compress_middle_third_spikes_only_the_middle() {
+        use crate::config::{SloSpec, SloTier};
+        use crate::coordinator::request::Request;
+        let slo = SloSpec::from_tiers(SloTier::Loose, SloTier::Loose);
+        let mut wl: Vec<Request> = (0..30)
+            .map(|i| Request::simple(i, i as f64, 10, 2, slo))
+            .collect();
+        compress_middle_third(&mut wl, 4.0);
+        assert_eq!(wl[0].arrival, 0.0);
+        assert_eq!(wl[9].arrival, 9.0, "first third untouched");
+        assert!((wl[19].arrival - (10.0 + 9.0 / 4.0)).abs() < 1e-12,
+                "middle third runs at 4x rate");
+        assert_eq!(wl[20].arrival, 20.0, "final third untouched");
+        assert!(wl.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+                "order preserved");
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Elastic-pool integration tests (ISSUE 4 acceptance): on the bursty
+//! heterogeneous (multi-SLO) Mixed trace, the autoscaled pool
+//! (min=1, max=4) holds static-4-class SLO attainment while consuming
+//! strictly — and materially — fewer replica-seconds; warm-down
+//! conserves every request; and elastic runs are bit-reproducible under
+//! the existing determinism harness.
+
+use std::collections::HashSet;
+
+use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig};
+use slos_serve::coordinator::request::Request;
+use slos_serve::router::{run_multi_replica, MultiReplicaResult, RoutePolicy,
+                         RouterConfig, ScaleKind};
+use slos_serve::workload;
+
+/// Bursty heterogeneous Mixed trace: multi-SLO Mixed traffic whose
+/// middle third arrives at 4x rate. The base rate fits a single
+/// replica, the spike does not — the shape the elastic pool exists for.
+fn bursty_workload() -> (ScenarioConfig, Vec<Request>) {
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(1.5)
+        .with_requests(330)
+        .with_seed(42);
+    let mut wl = workload::generate(&cfg);
+    workload::compress_middle_third(&mut wl, 4.0);
+    (cfg, wl)
+}
+
+fn run_static(k: usize) -> MultiReplicaResult {
+    let (cfg, wl) = bursty_workload();
+    let rcfg = RouterConfig::new(k).with_policy(RoutePolicy::BurstAware);
+    run_multi_replica(wl, &cfg, &rcfg)
+}
+
+fn run_elastic() -> MultiReplicaResult {
+    let (cfg, wl) = bursty_workload();
+    let rcfg = RouterConfig::new(1)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_autoscaler(AutoscalerConfig::new(1, 4));
+    run_multi_replica(wl, &cfg, &rcfg)
+}
+
+#[test]
+fn elastic_matches_static4_attainment_at_fewer_replica_seconds() {
+    let elastic = run_elastic();
+    let static4 = run_static(4);
+
+    // Static pools never scale: sanity-pin the cost baseline.
+    assert!(static4.scale_timeline.is_empty());
+    assert_eq!(static4.peak_replicas, 4);
+    assert!((static4.replica_seconds - 4.0 * static4.metrics.span).abs()
+            < 1e-6, "static-4 pays 4 replicas for the whole span");
+
+    // The elastic pool actually flexed: grew for the burst ...
+    assert!(elastic.peak_replicas >= 2,
+            "the 4x spike must trigger scale-up; timeline {:?}",
+            elastic.scale_timeline);
+    let kinds: Vec<ScaleKind> =
+        elastic.scale_timeline.iter().map(|e| e.kind).collect();
+    assert!(kinds.contains(&ScaleKind::SpawnWarming));
+    assert!(kinds.contains(&ScaleKind::Activated));
+    // ... and warm-downed in the lull / tail.
+    assert!(kinds.contains(&ScaleKind::Drained),
+            "the post-burst lull must drain the pool back down: {kinds:?}");
+
+    // Headline, cost side: strictly fewer replica-seconds than static-4,
+    // and materially so (the pool runs small for two thirds of the
+    // trace).
+    assert!(elastic.replica_seconds < static4.replica_seconds,
+            "elastic {:.1} vs static-4 {:.1} replica-seconds",
+            elastic.replica_seconds, static4.replica_seconds);
+    assert!(elastic.replica_seconds < 0.8 * static4.replica_seconds,
+            "savings must be material: elastic {:.1} vs static-4 {:.1}",
+            elastic.replica_seconds, static4.replica_seconds);
+
+    // Headline, SLO side: attainment matches static-4 (small tolerance
+    // for the scale-up reaction window — the arrivals routed while the
+    // second replica warms).
+    assert!(elastic.metrics.attainment() + 0.04
+            >= static4.metrics.attainment(),
+            "elastic attainment {:.3} must match static-4 {:.3} \
+             (peak {}, timeline {:?})",
+            elastic.metrics.attainment(), static4.metrics.attainment(),
+            elastic.peak_replicas, elastic.scale_timeline);
+
+    // And the elastic pool must clearly beat what it started as: the
+    // burst overwhelms a permanently-static single replica.
+    let static1 = run_static(1);
+    assert!(elastic.metrics.attainment()
+            > static1.metrics.attainment() + 0.02,
+            "elastic {:.3} must beat static-1 {:.3}",
+            elastic.metrics.attainment(), static1.metrics.attainment());
+}
+
+#[test]
+fn warm_down_conserves_every_request() {
+    let res = run_elastic();
+    let n = 330;
+    // None lost, none duplicated — across routing, migration, warming,
+    // draining, and retirement.
+    assert_eq!(res.requests.len(), n, "request lost or duplicated");
+    let ids: HashSet<u64> = res.requests.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), n, "duplicate ids in result");
+    assert_eq!(res.metrics.finished, n,
+               "the pool must drain everything: {:?}", res.metrics);
+    // Every request admitted to a Draining replica either finished there
+    // or was re-queued — and the per-request counters reconcile exactly
+    // with the router's outflow count.
+    let requeues: usize =
+        res.requests.iter().map(|r| r.drain_requeues as usize).sum();
+    assert_eq!(requeues, res.drain_requeued,
+               "outflow bookkeeping must reconcile");
+    for r in &res.requests {
+        assert!(r.is_finished(), "req {} left unfinished", r.id);
+    }
+    // Per-replica completions cover the whole workload even though some
+    // replicas retired mid-run.
+    let sum: usize = res.per_replica_finished.iter().sum();
+    assert_eq!(sum, n);
+}
+
+#[test]
+fn elastic_runs_are_bit_deterministic() {
+    let a = run_elastic();
+    let b = run_elastic();
+    assert_eq!(a.metrics.finished, b.metrics.finished);
+    assert_eq!(a.metrics.attained, b.metrics.attained);
+    assert_eq!(a.metrics.span.to_bits(), b.metrics.span.to_bits(),
+               "span must match bit-exactly");
+    assert_eq!(a.rerouted, b.rerouted);
+    assert_eq!(a.migrated, b.migrated);
+    assert_eq!(a.drain_requeued, b.drain_requeued);
+    assert_eq!(a.peak_replicas, b.peak_replicas);
+    assert_eq!(a.per_replica_finished, b.per_replica_finished);
+    assert_eq!(a.scale_timeline.len(), b.scale_timeline.len());
+    for (x, y) in a.scale_timeline.iter().zip(&b.scale_timeline) {
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.active, y.active);
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+    }
+    assert_eq!(a.replica_seconds.to_bits(), b.replica_seconds.to_bits());
+}
+
+#[test]
+fn autoscaler_respects_pool_bounds_throughout() {
+    let res = run_elastic();
+    for e in &res.scale_timeline {
+        assert!(e.active >= 1, "event {e:?} dropped below min_replicas");
+        assert!(e.active <= 4, "event {e:?} exceeded max_replicas");
+    }
+    assert!(res.peak_replicas <= 4);
+}

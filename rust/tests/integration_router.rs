@@ -25,12 +25,7 @@ fn pool_cfg() -> ScenarioConfig {
 /// 4x-rate spike to get the bursty Mixed workload of the §4.2 claim.
 fn bursty_mixed(cfg: &ScenarioConfig) -> Vec<Request> {
     let mut wl = workload::generate(cfg);
-    let n = wl.len();
-    let (a, b) = (n / 3, 2 * n / 3);
-    let t0 = wl[a].arrival;
-    for r in wl[a..b].iter_mut() {
-        r.arrival = t0 + (r.arrival - t0) / 4.0;
-    }
+    workload::compress_middle_third(&mut wl, 4.0);
     wl
 }
 

@@ -1,0 +1,165 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` 1.x API
+//! subset that `slos_serve`'s `xla`-gated `runtime`/`engine` modules
+//! use: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros, and the [`Context`] extension trait. Semantics match real
+//! anyhow for that subset (context wraps outside-in; `?` converts any
+//! `std::error::Error`); there is no backtrace capture and no downcast.
+//!
+//! Offline images that vendor the real crate can swap it in via the
+//! path in `rust/Cargo.toml` or a workspace `[patch]` — nothing in this
+//! repo depends on more than the subset implemented here.
+
+use std::fmt::{self, Debug, Display};
+
+/// An error: a message plus the contexts wrapped around it, innermost
+/// first.
+pub struct Error {
+    msg: String,
+    contexts: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl Display) -> Error {
+        Error { msg: m.to_string(), contexts: Vec::new() }
+    }
+
+    fn wrap(mut self, ctx: impl Display) -> Error {
+        self.contexts.push(ctx.to_string());
+        self
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like anyhow: Display shows the outermost context (or the root
+        // message when uncontextualized).
+        match self.contexts.last() {
+            Some(c) => write!(f, "{c}"),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Like anyhow: Debug shows the whole chain, outermost first.
+        match self.contexts.last() {
+            Some(c) => write!(f, "{c}")?,
+            None => return write!(f, "{}", self.msg),
+        }
+        writeln!(f, "\n\nCaused by:")?;
+        for c in self.contexts.iter().rev().skip(1) {
+            writeln!(f, "    {c}")?;
+        }
+        write!(f, "    {}", self.msg)
+    }
+}
+
+// The blanket conversion `?` relies on. `Error` itself deliberately
+// does NOT implement `std::error::Error`, exactly like real anyhow —
+// otherwise this impl would collide with core's identity `From`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, anyhow-style.
+pub trait Context<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(ctx))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt", args...)` — construct an [`Error`] from a format
+/// string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::msg(format!($($t)*))
+    };
+}
+
+/// `bail!("fmt", args...)` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `ensure!(cond, "fmt", args...)` — early-return an error unless
+/// `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::{Context, Result};
+
+    #[test]
+    fn macros_match_anyhow_semantics() {
+        fn guarded(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            Ok(7)
+        }
+        assert_eq!(guarded(true).unwrap(), 7);
+        assert_eq!(format!("{}", guarded(false).unwrap_err()),
+                   "flag was false");
+        fn bails() -> Result<()> {
+            bail!("bye {}", 1)
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "bye 1");
+    }
+
+    #[test]
+    fn context_wraps_outside_in() {
+        let e: Result<()> = Err(anyhow!("root"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("root"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+        let with: Result<i32> =
+            "3".parse::<i32>().with_context(|| "bad int");
+        assert_eq!(with.unwrap(), 3);
+        let missing: Option<i32> = None;
+        assert_eq!(format!("{}", missing.context("absent").unwrap_err()),
+                   "absent");
+    }
+}

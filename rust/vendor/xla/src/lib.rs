@@ -1,0 +1,132 @@
+//! Stub of the xla-rs PJRT binding surface `slos_serve::runtime` /
+//! `slos_serve::engine` compile against. It exists so that
+//! `cargo build --features xla` type-checks in images that do **not**
+//! carry the real vendored crate; every entry point that would touch
+//! PJRT returns [`Error`] at runtime instead. Images with the real
+//! crate replace this package (same name/major API) at
+//! `rust/vendor/xla` or via a workspace `[patch]`, and the e2e path
+//! comes alive without further code changes.
+
+use std::fmt;
+
+/// The error every stubbed PJRT call returns.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable — this build uses the stub `xla` crate; \
+         vendor the real bindings at rust/vendor/xla (or [patch] them in) \
+         to run the real-model path"))
+}
+
+/// Host-side literal (stub carries no data).
+#[derive(Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L])
+                                      -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<std::path::Path>)
+                          -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surface_fails_loudly_not_silently() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e:?}").contains("stub"));
+        assert!(Literal::vec1(&[1i32]).reshape(&[1]).is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

@@ -1,15 +1,21 @@
 //! Elastic replica pool (ROADMAP follow-on to §4.2): the same bursty
 //! Mixed trace served by static pools of 1..4 replicas and by an
-//! autoscaled 1..4 pool. The autoscaler scales up when the pool's
-//! feasibility probes keep refusing arrivals (the burst), and warm-downs
-//! — stop routing, drain, drop — once the pool idles again. The point:
-//! static-max attainment at a fraction of the replica-seconds.
+//! autoscaled 1..4 pool — reactive and predictive controllers side by
+//! side. The autoscaler scales up when the pool's feasibility probes
+//! keep refusing arrivals (the burst) — or, predictively, when the
+//! arrival-rate trend projects that crossing within the warm-up lag —
+//! and warm-downs (stop routing, drain, drop) once the pool idles,
+//! shipping the drain's started best-effort work off as recompute debt
+//! (KV handoff). The point: static-max attainment at a fraction of the
+//! replica-seconds, with the predictive trigger recovering the
+//! burst-window attainment the warm-up lag costs.
 //!
 //! ```bash
 //! cargo run --release --example autoscale
 //! ```
 
 use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig};
+use slos_serve::metrics::window_attainment;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::workload;
 
@@ -26,41 +32,49 @@ fn main() {
         workload::compress_middle_third(&mut wl, 4.0);
         (cfg, wl)
     };
+    let (burst_t0, burst_t1) = workload::burst_window(&mk().1);
 
     println!("== static pools, burst-aware routing ==");
-    println!("{:>14} {:>10} {:>9} {:>16}",
-             "pool", "attained%", "finished", "replica-seconds");
+    println!("{:>20} {:>10} {:>8} {:>9} {:>16}",
+             "pool", "attained%", "burst%", "finished", "replica-seconds");
     let mut static4_rs = 0.0f64;
     for k in 1..=4usize {
         let (cfg, wl) = mk();
         let rcfg = RouterConfig::new(k).with_policy(RoutePolicy::BurstAware);
         let res = run_multi_replica(wl, &cfg, &rcfg);
-        println!("{:>14} {:>9.1}% {:>9} {:>16.1}",
+        println!("{:>20} {:>9.1}% {:>7.1}% {:>9} {:>16.1}",
                  format!("static-{k}"), 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
                  res.metrics.finished, res.replica_seconds);
         if k == 4 {
             static4_rs = res.replica_seconds;
         }
     }
 
-    println!("\n== elastic pool, min=1 max=4 ==");
-    let (cfg, wl) = mk();
-    let rcfg = RouterConfig::new(1)
-        .with_policy(RoutePolicy::BurstAware)
-        .with_autoscaler(AutoscalerConfig::new(1, 4));
-    let res = run_multi_replica(wl, &cfg, &rcfg);
-    println!("attainment {:.1}%  finished {}  replica-seconds {:.1}  \
-              (static-4: {:.1})  peak {}  drain-requeued {}",
-             100.0 * res.metrics.attainment(), res.metrics.finished,
-             res.replica_seconds, static4_rs, res.peak_replicas,
-             res.drain_requeued);
-    println!("\nscaling timeline:");
-    for e in &res.scale_timeline {
-        println!("  t {:7.2}s  {:<14} replica {:>2}  -> {} active",
-                 e.t, format!("{:?}", e.kind), e.replica, e.active);
-    }
-    if static4_rs > 0.0 {
-        println!("\nreplica-seconds saved vs static-4: {:.0}%",
-                 100.0 * (1.0 - res.replica_seconds / static4_rs));
+    println!("\n== elastic pools, min=1 max=4 ==");
+    for (label, predictive) in
+        [("elastic-reactive", false), ("elastic-predictive", true)]
+    {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(1)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(
+                AutoscalerConfig::new(1, 4).with_predictive(predictive));
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("{:>20} {:>9.1}% {:>7.1}% {:>9} {:>16.1}   peak {}  \
+                  drain-requeued {}  kv-handoffs {}",
+                 label, 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.metrics.finished, res.replica_seconds,
+                 res.peak_replicas, res.drain_requeued, res.drain_handoffs);
+        println!("  scaling timeline:");
+        for e in &res.scale_timeline {
+            println!("    t {:7.2}s  {:<14} replica {:>2}  -> {} active",
+                     e.t, format!("{:?}", e.kind), e.replica, e.active);
+        }
+        if static4_rs > 0.0 {
+            println!("  replica-seconds saved vs static-4: {:.0}%",
+                     100.0 * (1.0 - res.replica_seconds / static4_rs));
+        }
     }
 }

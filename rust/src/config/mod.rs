@@ -288,11 +288,16 @@ impl ScenarioConfig {
 /// Scale **up** when the pool keeps refusing feasible-SLO requests: the
 /// probe-refusal rate over a sliding `window` exceeds `up_threshold`
 /// (with at least `min_samples` routed arrivals in the window, so a
-/// single unlucky probe can't trigger growth). Scale **down** via
-/// warm-down when the window saw no refusals and the mean per-replica
-/// backlog (`drain_seconds`) sits below `down_util * window`.
-/// `cooldown` plus the up/down asymmetry is the hysteresis that keeps an
-/// oscillating load signal from flapping the pool.
+/// single unlucky probe can't trigger growth). With `predictive` on,
+/// the controller also leads the signal: an EWMA trend of the arrival
+/// rate projects the refusal rate `warmup_seconds` ahead, and a spawn
+/// fires as soon as the *projection* crosses `up_threshold` — so the
+/// new replica finishes warming around the moment the reactive rule
+/// would only have started it. Scale **down** via warm-down when the
+/// window saw no refusals and the mean per-replica backlog
+/// (`drain_seconds`) sits below `down_util * window`. `cooldown` plus
+/// the up/down asymmetry is the hysteresis that keeps an oscillating
+/// load signal from flapping the pool.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AutoscalerConfig {
     /// Pool never shrinks below this many replicas (>= 1).
@@ -315,6 +320,17 @@ pub struct AutoscalerConfig {
     pub warmup_seconds: f64,
     /// Minimum seconds between scaling actions (hysteresis).
     pub cooldown: f64,
+    /// Predictive scale-up: lead the refusal signal with the
+    /// arrival-rate trend so the warm-up lag stops costing the first
+    /// burst seconds. Off = the reactive PR-4 controller (the baseline
+    /// row of `figure elastic`).
+    pub predictive: bool,
+    /// Warm-down KV handoff: a `Draining` replica ships its *started*
+    /// best-effort requests to the pool as recompute debt (§4.1
+    /// preemption semantics) instead of serving out their decodes, so
+    /// drains finish in bounded time. Off = started work waits out the
+    /// drain at the source (the PR-4 behaviour).
+    pub kv_handoff: bool,
 }
 
 impl AutoscalerConfig {
@@ -329,7 +345,19 @@ impl AutoscalerConfig {
             down_util: 0.1,
             warmup_seconds: 0.5,
             cooldown: 2.0,
+            predictive: true,
+            kv_handoff: true,
         }
+    }
+
+    pub fn with_predictive(mut self, on: bool) -> Self {
+        self.predictive = on;
+        self
+    }
+
+    pub fn with_kv_handoff(mut self, on: bool) -> Self {
+        self.kv_handoff = on;
+        self
     }
 }
 
@@ -414,6 +442,10 @@ mod tests {
         assert!(a.up_threshold > 0.0 && a.up_threshold < 1.0);
         assert!(a.down_util > 0.0 && a.down_util < a.up_threshold + 1.0);
         assert!(a.warmup_seconds >= 0.0);
+        assert!(a.predictive && a.kv_handoff,
+                "the upgraded controller is the default");
+        let reactive = a.with_predictive(false).with_kv_handoff(false);
+        assert!(!reactive.predictive && !reactive.kv_handoff);
     }
 
     #[test]

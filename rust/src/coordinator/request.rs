@@ -91,6 +91,11 @@ pub struct Request {
     /// are counted separately from SLO-driven `route_hops` and do not
     /// consume the route-limit budget).
     pub drain_requeues: u32,
+    /// Drain evictions that moved this request *after* it had started
+    /// (warm-down KV handoff): the source replica's pages were released
+    /// and the already-processed tokens shipped as recompute debt, the
+    /// §4.1 preemption semantics. A subset of `drain_requeues`.
+    pub kv_handoffs: u32,
     /// Preemption count (best-effort tier, §4.1).
     pub preemptions: u32,
     /// KV tokens to re-prefill before progress can resume after a
@@ -143,6 +148,7 @@ impl Request {
             stage_records: Vec::new(),
             route_hops: 0,
             drain_requeues: 0,
+            kv_handoffs: 0,
             preemptions: 0,
             recompute_pending: 0,
         }

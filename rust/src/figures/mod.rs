@@ -370,13 +370,15 @@ pub fn fig13_scaling(requests: usize, scenarios: &[Scenario])
 
 /// Elastic-pool extension figure (ROADMAP, beyond the paper's fixed
 /// pools of Fig. 13): on the bursty heterogeneous Mixed trace, compare
-/// static pools of 1..4 replicas against an autoscaled 1..4 pool. The
+/// static pools of 1..4 replicas against an autoscaled 1..4 pool — the
+/// reactive (PR-4) controller and the predictive one side by side. The
 /// headline: the elastic pool holds static-4-class attainment at
-/// materially fewer replica-seconds, because the pool only pays for
-/// capacity while the burst needs it. Returns
-/// `(label, attainment, replica_seconds)` rows.
+/// materially fewer replica-seconds, and the predictive row recovers
+/// the burst-window attainment the reactive row loses to warm-up lag.
+/// Returns `(label, attainment, replica_seconds)` rows.
 pub fn fig_elastic(requests: usize) -> Vec<(String, f64, f64)> {
     use crate::config::AutoscalerConfig;
+    use crate::metrics::window_attainment;
     println!("# Elastic pool — bursty Mixed trace (middle third at 4x \
               rate), burst-aware routing");
     let n = requests.max(120);
@@ -389,32 +391,45 @@ pub fn fig_elastic(requests: usize) -> Vec<(String, f64, f64)> {
         workload::compress_middle_third(&mut wl, 4.0);
         (cfg, wl)
     };
+    // Burst-window bounds (the compressed middle third by arrival time).
+    let (burst_t0, burst_t1) = workload::burst_window(&mk().1);
     let mut out = Vec::new();
     for k in 1..=4usize {
         let (cfg, wl) = mk();
         let rcfg = RouterConfig::new(k).with_policy(RoutePolicy::BurstAware);
         let res = run_multi_replica(wl, &cfg, &rcfg);
-        println!("static-{k}     attainment {:5.1}%  replica-seconds {:7.1}",
-                 100.0 * res.metrics.attainment(), res.replica_seconds);
+        println!("static-{k}           attainment {:5.1}%  (burst {:5.1}%)  \
+                  replica-seconds {:7.1}",
+                 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.replica_seconds);
         out.push((format!("static-{k}"), res.metrics.attainment(),
                   res.replica_seconds));
     }
-    let (cfg, wl) = mk();
-    let rcfg = RouterConfig::new(1)
-        .with_policy(RoutePolicy::BurstAware)
-        .with_autoscaler(AutoscalerConfig::new(1, 4));
-    let res = run_multi_replica(wl, &cfg, &rcfg);
-    println!("elastic(1-4)  attainment {:5.1}%  replica-seconds {:7.1}  \
-              peak {}  scale-events {}  drain-requeued {}",
-             100.0 * res.metrics.attainment(), res.replica_seconds,
-             res.peak_replicas, res.scale_timeline.len(),
-             res.drain_requeued);
-    for e in &res.scale_timeline {
-        println!("  t {:7.2}s  {:?} replica {} -> {} active",
-                 e.t, e.kind, e.replica, e.active);
+    for (label, predictive) in
+        [("elastic-reactive", false), ("elastic-predictive", true)]
+    {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(1)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(
+                AutoscalerConfig::new(1, 4).with_predictive(predictive));
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("{label:18}  attainment {:5.1}%  (burst {:5.1}%)  \
+                  replica-seconds {:7.1}  peak {}  scale-events {}  \
+                  drain-requeued {}  kv-handoffs {}",
+                 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.replica_seconds, res.peak_replicas,
+                 res.scale_timeline.len(), res.drain_requeued,
+                 res.drain_handoffs);
+        for e in &res.scale_timeline {
+            println!("  t {:7.2}s  {:?} replica {} -> {} active",
+                     e.t, e.kind, e.replica, e.active);
+        }
+        out.push((label.to_string(), res.metrics.attainment(),
+                  res.replica_seconds));
     }
-    out.push(("elastic".to_string(), res.metrics.attainment(),
-              res.replica_seconds));
     out
 }
 

@@ -4,7 +4,7 @@
 //! slos-serve serve    [--scenario S] [--policy P] [--rate R]
 //!                     [--requests N] [--replicas K] [--route-policy RP]
 //!                     [--autoscale] [--min-replicas A] [--max-replicas B]
-//!                     [--seed X]
+//!                     [--reactive] [--no-handoff] [--seed X]
 //! slos-serve capacity [--scenario S] [--requests N]
 //! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic>
 //!                     [--requests N]
@@ -72,6 +72,7 @@ const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
   serve    --scenario S --policy P --rate R --requests N --replicas K
            --route-policy RP --seed X
            [--autoscale --min-replicas A --max-replicas B]
+           [--reactive] [--no-handoff]
   capacity --scenario S --requests N
   figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic> --requests N
   trace    --scenario S --rate R --requests N [--stats]
@@ -79,7 +80,9 @@ scenarios:      chatbot coder summarizer mixed toolllm reasoning
 policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
 route policies: round-robin least-load slo-feasibility burst-aware
 autoscale:      elastic replica pool between --min-replicas and
-                --max-replicas (attainment-driven; see figure elastic)";
+                --max-replicas (attainment-driven; see figure elastic).
+                --reactive disables the predictive scale-up trigger,
+                --no-handoff disables the draining-replica KV handoff";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -119,7 +122,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                             "bad autoscale bounds {min}..{max}").into());
                     }
                     rcfg = rcfg.with_autoscaler(
-                        AutoscalerConfig::new(min, max));
+                        AutoscalerConfig::new(min, max)
+                            .with_predictive(!args.bool("reactive"))
+                            .with_kv_handoff(!args.bool("no-handoff")));
                 }
                 let res = run_multi_replica(wl, &cfg, &rcfg);
                 print_metrics(&policy, &res.metrics);
@@ -128,9 +133,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 if autoscale {
                     println!("autoscale: peak {} replicas | \
                               replica-seconds {:.1} | scale events {} | \
-                              drain-requeued {}",
+                              drain-requeued {} | kv-handoffs {}",
                              res.peak_replicas, res.replica_seconds,
-                             res.scale_timeline.len(), res.drain_requeued);
+                             res.scale_timeline.len(), res.drain_requeued,
+                             res.drain_handoffs);
                 }
             } else {
                 let mut p = make_policy(&policy, &cfg);

@@ -94,6 +94,31 @@ pub fn collect(requests: &[Request], span: f64) -> RunMetrics {
     }
 }
 
+/// SLO attainment restricted to requests *arriving* in `[t0, t1)` — the
+/// burst-window view the elastic-pool comparison reports. A controller
+/// that reacts late loses exactly these arrivals (deferred to
+/// best-effort while the spare replica warms), and pool-wide attainment
+/// dilutes that loss with the calm thirds of the trace. Attainment
+/// criteria match [`collect`]: finished, standard tier, every stage met.
+pub fn window_attainment(requests: &[Request], t0: f64, t1: f64) -> f64 {
+    let mut total = 0usize;
+    let mut attained = 0usize;
+    for r in requests.iter().filter(|r| r.arrival >= t0 && r.arrival < t1) {
+        total += 1;
+        if r.is_finished()
+            && r.tier == ServiceTier::Standard
+            && r.slo_attained()
+        {
+            attained += 1;
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        attained as f64 / total as f64
+    }
+}
+
 /// Binary-search the max rate with attainment >= target. `eval(rate)` runs
 /// a full serving experiment and returns the attainment.
 pub fn capacity_search(

@@ -20,6 +20,24 @@
 //! *refusal-free* window (not merely a quiet-ish one) and drains one
 //! replica at a time. The decision function is pure over its inputs so
 //! the flap-resistance is unit-testable without a pool.
+//!
+//! **Predictive scale-up** (`AutoscalerConfig::predictive`): the
+//! reactive rule above pays the warm-up lag on every burst — by the
+//! time the refusal rate crosses `up_threshold`, the spawned replica
+//! still needs `warmup_seconds` before it can route, and the arrivals
+//! in between are lost to best-effort. The controller therefore also
+//! keeps two exponentially-decayed event-count rate estimators over the
+//! same arrival stream (time constants `window/4` and `window`); for a
+//! rate moving linearly at slope `b`, each estimator lags the true rate
+//! by exactly its time constant, so their gap recovers `b` and their
+//! extrapolation recovers the current rate. Once the window holds
+//! refusal evidence (at least one refusal — that is what identifies the
+//! pool's admitted rate `c ~= r * (1 - f)`), the projected refusal
+//! fraction at `now + warmup_seconds`, `(r_proj - c) / r_proj`, is
+//! compared against the same `up_threshold`: a crossing spawns *now*,
+//! so the replica turns Active right around the time the reactive rule
+//! would only have started warming it. All the hysteresis (cooldown,
+//! window consumption, pool bounds) is shared with the reactive rule.
 
 use std::collections::VecDeque;
 
@@ -81,6 +99,14 @@ pub struct Autoscaler {
     events: VecDeque<(f64, bool)>,
     refused_in_window: usize,
     last_action: f64,
+    /// Most recent arrival (anchor for the decayed-count updates).
+    last_arrival: Option<f64>,
+    /// Exponentially-decayed arrival counts at two time constants
+    /// (`tau_fast` = window/4, `tau_slow` = window): `count / tau` is a
+    /// rate estimate that lags a linearly-moving rate by exactly `tau`,
+    /// so the pair yields both the current rate and its slope.
+    count_fast: f64,
+    count_slow: f64,
 }
 
 impl Autoscaler {
@@ -91,15 +117,69 @@ impl Autoscaler {
             refused_in_window: 0,
             // Allow an action as soon as the first window fills.
             last_action: f64::NEG_INFINITY,
+            last_arrival: None,
+            count_fast: 0.0,
+            count_slow: 0.0,
         }
     }
 
-    /// Record one routed arrival: `refused` = the destination replica's
-    /// feasibility probe declined it at dispatch time.
+    fn tau_fast(&self) -> f64 {
+        self.cfg.window / 4.0
+    }
+
+    fn tau_slow(&self) -> f64 {
+        self.cfg.window
+    }
+
+    /// Record one routed arrival: `refused` = no Active replica's
+    /// feasibility probe would admit it at dispatch time (the pool was
+    /// about to defer a feasible-SLO request to best-effort).
     pub fn record_arrival(&mut self, now: f64, refused: bool) {
+        if let Some(prev) = self.last_arrival {
+            let dt = (now - prev).max(0.0);
+            self.count_fast *= (-dt / self.tau_fast()).exp();
+            self.count_slow *= (-dt / self.tau_slow()).exp();
+        }
+        self.count_fast += 1.0;
+        self.count_slow += 1.0;
+        self.last_arrival = Some(now);
         self.events.push_back((now, refused));
         self.refused_in_window += refused as usize;
         self.prune(now);
+    }
+
+    /// Both rate estimators decayed to `now` (they are only updated at
+    /// arrivals, so a read between arrivals must pay the elapsed decay).
+    fn rates_at(&self, now: f64) -> (f64, f64) {
+        let dt = self.last_arrival.map_or(0.0, |t| (now - t).max(0.0));
+        let fast =
+            self.count_fast * (-dt / self.tau_fast()).exp() / self.tau_fast();
+        let slow =
+            self.count_slow * (-dt / self.tau_slow()).exp() / self.tau_slow();
+        (fast, slow)
+    }
+
+    /// `(rate, slope)` at `now` from a single decay evaluation of the
+    /// estimator pair: the slope is the fast/slow gap divided by the gap
+    /// of their lags (each lags a linearly-moving rate by its own time
+    /// constant), and the rate extrapolates the fast estimator past its
+    /// own lag.
+    fn rate_and_slope(&self, now: f64) -> (f64, f64) {
+        let (fast, slow) = self.rates_at(now);
+        let slope = (fast - slow) / (self.tau_slow() - self.tau_fast());
+        ((fast + slope * self.tau_fast()).max(0.0), slope)
+    }
+
+    /// EWMA estimate of the arrival rate (req/s) at `now`, extrapolated
+    /// past the fast estimator's own lag. 0 before any arrival.
+    pub fn arrival_rate(&self, now: f64) -> f64 {
+        self.rate_and_slope(now).0
+    }
+
+    /// Estimated arrival-rate slope (req/s per s) at `now`. Positive
+    /// while a burst ramps up.
+    pub fn rate_slope(&self, now: f64) -> f64 {
+        self.rate_and_slope(now).1
     }
 
     fn prune(&mut self, now: f64) {
@@ -144,16 +224,50 @@ impl Autoscaler {
         // the max bound, Up is still allowed while a replica is
         // mid-drain — the balancer serves it by cancelling that
         // warm-down instead of spawning.
-        let refusing = self.events.len() >= self.cfg.min_samples
+        let may_grow = pool < self.cfg.max_replicas || counts.draining > 0;
+        let sampled = self.events.len() >= self.cfg.min_samples;
+        let refusing = sampled
             && self.refusal_rate() >= self.cfg.up_threshold;
-        if refusing && (pool < self.cfg.max_replicas || counts.draining > 0)
-        {
+        if refusing && may_grow {
             self.last_action = now;
             // One burst of refusals buys one step; fresh evidence must
             // accumulate before the next (hysteresis).
             self.events.clear();
             self.refused_in_window = 0;
             return ScaleDecision::Up;
+        }
+
+        // Predictive scale-up: the reactive rule above fires only once
+        // the refusal rate itself crosses the threshold, which costs
+        // `warmup_seconds` of every burst. With refusal evidence in the
+        // window (that is what identifies the pool's admitted rate) and
+        // the arrival rate trending up, project the refusal fraction
+        // `warmup_seconds` ahead and spawn on the *projected* crossing,
+        // so the replica turns Active around the time the reactive rule
+        // would only have begun warming it. Shares every piece of the
+        // reactive hysteresis (cooldown, window consumption, bounds).
+        if self.cfg.predictive
+            && may_grow
+            && sampled
+            && self.refused_in_window > 0
+        {
+            let (r_now, slope) = self.rate_and_slope(now);
+            if slope > 0.0 {
+                // Refusals are the arrivals beyond what the pool
+                // admits: f = (r - c) / r identifies the admitted rate
+                // c from the current window, and extrapolating r by
+                // `slope * warmup` yields the projected fraction.
+                let admitted = r_now * (1.0 - self.refusal_rate());
+                let r_proj = r_now + slope * self.cfg.warmup_seconds;
+                if r_proj > 0.0
+                    && (r_proj - admitted) / r_proj >= self.cfg.up_threshold
+                {
+                    self.last_action = now;
+                    self.events.clear();
+                    self.refused_in_window = 0;
+                    return ScaleDecision::Up;
+                }
+            }
         }
 
         // Scale down: a refusal-free window, nothing already in
@@ -297,6 +411,109 @@ mod tests {
         assert_eq!(downs, 0, "oscillation must not trigger warm-down");
         assert!(ups >= 2, "sustained refusals must still grow the pool");
         assert!(active <= 4);
+    }
+
+    /// Deterministic ramp trace: arrival rate r(t) = 1 + t against a
+    /// pool that admits `cap` req/s; the refused flag carries the
+    /// excess fraction (r - cap)/r via an error accumulator, so the
+    /// trace is reproducible and smooth.
+    fn ramp_trace(cap: f64, t_end: f64) -> Vec<(f64, bool)> {
+        let mut t = 0.0f64;
+        let mut acc = 0.0f64;
+        let mut out = Vec::new();
+        while t < t_end {
+            let r = 1.0 + t;
+            acc += ((r - cap) / r).max(0.0);
+            let refused = acc >= 1.0;
+            if refused {
+                acc -= 1.0;
+            }
+            out.push((t, refused));
+            t += 1.0 / r;
+        }
+        out
+    }
+
+    /// Feed `trace` to a fresh controller and return the time of its
+    /// first Up decision (pool of 1, far from the bounds).
+    fn first_up(cfg: AutoscalerConfig, trace: &[(f64, bool)]) -> Option<f64> {
+        let mut a = Autoscaler::new(cfg);
+        for &(t, refused) in trace {
+            a.record_arrival(t, refused);
+            if a.decide(t, counts(1), || 50.0) == ScaleDecision::Up {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn predictive_leads_reactive_by_at_most_warmup_on_ramp() {
+        // The tentpole pin: on a rate ramp the predictive trigger fires
+        // *before* the reactive one, by at most `warmup_seconds` (plus
+        // one inter-arrival gap of discretization — decisions are only
+        // taken at arrivals). A bigger lead would mean the controller
+        // speculates beyond its projection horizon; no lead would mean
+        // the trend estimator buys nothing.
+        let trace = ramp_trace(4.0, 12.0);
+        let warmup = cfg().warmup_seconds;
+        let t_pred = first_up(cfg(), &trace)
+            .expect("predictive controller must fire on the ramp");
+        let t_react = first_up(cfg().with_predictive(false), &trace)
+            .expect("reactive controller must fire on the ramp");
+        let lead = t_react - t_pred;
+        assert!(lead > 0.0,
+                "predictive ({t_pred:.3}) must fire before reactive \
+                 ({t_react:.3})");
+        assert!(lead <= warmup + 0.25,
+                "lead {lead:.3} must stay within warmup {warmup} \
+                 (+ one inter-arrival gap)");
+    }
+
+    #[test]
+    fn predictive_needs_refusal_evidence() {
+        // A steep rate ramp with zero refusals must never trigger a
+        // predictive spawn: without a refusal in the window the
+        // admitted-rate estimate is unidentified, and growth on pure
+        // traffic increase would scale up pools with plenty of headroom.
+        let mut a = Autoscaler::new(cfg());
+        let mut t = 0.0f64;
+        while t < 10.0 {
+            a.record_arrival(t, false);
+            assert_eq!(a.decide(t, counts(1), || 50.0), ScaleDecision::Hold,
+                       "refusal-free ramp must hold at t={t:.2}");
+            t += 1.0 / (1.0 + t);
+        }
+        assert!(a.rate_slope(t) > 0.0, "the ramp itself must be visible");
+    }
+
+    #[test]
+    fn trend_estimator_tracks_rate_and_slope() {
+        // Constant 4/s arrivals: slope ~ 0, rate ~ 4 once burned in.
+        let mut a = Autoscaler::new(cfg());
+        let mut t = 0.0;
+        for _ in 0..120 {
+            a.record_arrival(t, false);
+            t += 0.25;
+        }
+        let t = t - 0.25;
+        // The decayed-count estimator carries a small positive bias
+        // (~0.5/tau: the just-recorded arrival is still undecayed);
+        // at 4/s with tau_fast = 1 s that is ~+0.6.
+        assert!((a.arrival_rate(t) - 4.0).abs() < 1.0,
+                "rate {} != 4/s", a.arrival_rate(t));
+        assert!(a.rate_slope(t).abs() < 0.3,
+                "slope {} != 0", a.rate_slope(t));
+        // A rate step up turns the slope positive.
+        let mut now = t;
+        for _ in 0..40 {
+            now += 1.0 / 16.0;
+            a.record_arrival(now, false);
+        }
+        assert!(a.rate_slope(now) > 1.0,
+                "step must show as positive slope, got {}",
+                a.rate_slope(now));
+        assert!(a.arrival_rate(now) > 6.0);
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //! With an [`AutoscalerConfig`](crate::config::AutoscalerConfig) in the
 //! [`RouterConfig`] the pool is *elastic*: the loop also ticks the
 //! attainment-driven [`autoscaler`](crate::router::autoscaler), spawns
-//! `Warming` replicas when the pool keeps refusing feasible-SLO
-//! arrivals, and warm-downs (drain, then drop) the least-loaded replica
-//! when the pool idles — `MultiReplicaResult` then carries the scaling
-//! timeline and the replica-seconds actually consumed.
+//! `Warming` replicas when the pool refuses feasible-SLO arrivals — or,
+//! predictively, when the arrival-rate trend projects a refusal
+//! crossing within the warm-up lag — and warm-downs (drain, then drop)
+//! the weakest-then-least-loaded replica when the pool idles, shipping
+//! the drain's started best-effort work off as recompute debt (KV
+//! handoff) so retirement never waits out a long decode.
+//! `MultiReplicaResult` then carries the scaling timeline and the
+//! replica-seconds actually consumed.
 
 use std::collections::HashSet;
 
@@ -55,6 +59,10 @@ pub struct MultiReplicaResult {
     pub replica_seconds: f64,
     /// Requests the warm-down outflow re-queued off `Draining` replicas.
     pub drain_requeued: usize,
+    /// The subset of `drain_requeued` that moved *started* best-effort
+    /// requests by shipping recompute debt (warm-down KV handoff) —
+    /// reconciles with the per-request `Request::kv_handoffs` counters.
+    pub drain_handoffs: usize,
     /// Maximum simultaneously live (non-`Drained`) replicas.
     pub peak_replicas: usize,
 }
@@ -73,7 +81,12 @@ pub struct Router {
     autoscaler: Option<Autoscaler>,
     timeline: Vec<ScaleEvent>,
     drain_requeued: usize,
+    drain_handoffs: usize,
     peak_replicas: usize,
+    /// Test hook: replaces the derived safety horizon so the
+    /// horizon-tripped exit path (deliver-or-report conservation) is
+    /// exercisable without hour-long workloads.
+    horizon_override: Option<f64>,
 }
 
 impl Router {
@@ -105,7 +118,9 @@ impl Router {
             autoscaler,
             timeline: Vec::new(),
             drain_requeued: 0,
+            drain_handoffs: 0,
             peak_replicas,
+            horizon_override: None,
         }
     }
 
@@ -123,7 +138,9 @@ impl Router {
         let mut next_arrival = 0usize;
         let mut finished = 0usize;
         let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
-        let horizon = (span_guess + 120.0) * 20.0 + 600.0;
+        let horizon = self
+            .horizon_override
+            .unwrap_or((span_guess + 120.0) * 20.0 + 600.0);
 
         while finished < total {
             // Advance the live replica whose clock is furthest behind
@@ -162,10 +179,16 @@ impl Router {
                     self.cfg.policy.route(&req, &self.replicas, self.rr_next);
                 self.rr_next += 1;
                 if self.autoscaler.is_some() {
-                    // The scale-up signal: was the pool about to defer
-                    // this feasible-SLO arrival? (Cache-served for the
-                    // probing policies, one extra probe otherwise.)
-                    let refused = !self.replicas[dest].probe(&req).feasible;
+                    // The scale-up signal: was the *pool* about to defer
+                    // this feasible-SLO arrival — i.e. would no Active
+                    // replica admit it? The chosen destination's verdict
+                    // alone is not a capacity signal: under RoundRobin /
+                    // LeastLoad the pick is probe-blind, and scaling up
+                    // because the ring landed on a busy replica while an
+                    // Active peer had headroom grows the pool for free.
+                    // (Cache-served for the probing policies — route()
+                    // just issued these exact probes.)
+                    let refused = self.pool_refuses(&req);
                     self.autoscaler
                         .as_mut()
                         .unwrap()
@@ -239,7 +262,23 @@ impl Router {
                 self.peak_replicas = self.peak_replicas.max(live);
             }
         }
-        self.finish()
+        // Deliver-or-report: any exit path that leaves arrivals
+        // undelivered (the safety horizon, a dead pool) must still hand
+        // them to the result as unfinished requests — silently dropping
+        // them would shrink the attainment denominator, inflating every
+        // metric collected from a truncated run.
+        let undelivered = workload.split_off(next_arrival);
+        self.finish(undelivered)
+    }
+
+    /// Would every Active replica's feasibility probe refuse `req` right
+    /// now? This — not the chosen destination's single verdict — is the
+    /// pool-level capacity signal the autoscaler consumes.
+    fn pool_refuses(&self, req: &Request) -> bool {
+        match policy::best_probed(req, &self.replicas, None) {
+            Some((_, feasible)) => !feasible,
+            None => true, // no routable replica at all
+        }
     }
 
     /// Re-queue whatever can still leave `Draining` replica `r`, and
@@ -249,13 +288,27 @@ impl Router {
     /// pool, and using its clock would both charge phantom
     /// replica-seconds and break the timeline's simulated-time order.
     fn drain_sweep(&mut self, r: usize, now: f64) {
-        for id in migration::drain_outflow(&mut self.replicas, r) {
-            self.rerouted.insert(id);
+        let kv_handoff = self
+            .autoscaler
+            .as_ref()
+            .map_or(true, |a| a.cfg.kv_handoff);
+        for m in migration::drain_outflow(&mut self.replicas, r, kv_handoff) {
+            self.rerouted.insert(m.id);
             self.drain_requeued += 1;
+            self.drain_handoffs += m.handoff as usize;
         }
         if !self.replicas[r].has_work() {
             self.replicas[r].finish_drain(now);
             self.event(now, ScaleKind::Drained, r);
+            // Probe-cache capacity follows the pool in *both*
+            // directions: without the re-scale here, every survivor of
+            // a warm-down would keep the burst-sized cap forever.
+            let live =
+                self.replicas.iter().filter(|h| h.is_live()).count();
+            let cap = scaled_probe_cache_cap(live);
+            for h in &mut self.replicas {
+                h.set_probe_cache_cap(cap);
+            }
         }
     }
 
@@ -316,16 +369,22 @@ impl Router {
                 self.event(now, ScaleKind::SpawnWarming, id);
             }
             ScaleDecision::Down => {
-                // Victim: least-loaded Active replica, ties to the
-                // highest index (retire the newest; replica 0 is home).
+                // Victim: weakest effective capacity first (chunk
+                // budget, then KV — heterogeneous pools should keep
+                // their strongest replicas through a warm-down), then
+                // least-loaded, ties to the highest index (retire the
+                // newest; replica 0 is home). Homogeneous pools tie on
+                // capacity, so the PR-4 least-loaded order is unchanged.
                 let victim = self
                     .replicas
                     .iter()
                     .enumerate()
                     .filter(|(_, h)| h.is_routable())
                     .min_by(|(i, a), (j, b)| {
-                        a.outstanding_tokens()
-                            .cmp(&b.outstanding_tokens())
+                        a.effective_capacity()
+                            .cmp(&b.effective_capacity())
+                            .then(a.outstanding_tokens()
+                                  .cmp(&b.outstanding_tokens()))
                             .then(j.cmp(i))
                     })
                     .map(|(i, _)| i);
@@ -392,13 +451,14 @@ impl Router {
         }
     }
 
-    fn finish(self) -> MultiReplicaResult {
+    fn finish(self, undelivered: Vec<Request>) -> MultiReplicaResult {
         let Router {
             replicas,
             rerouted,
             migrated,
             timeline,
             drain_requeued,
+            drain_handoffs,
             peak_replicas,
             ..
         } = self;
@@ -406,7 +466,17 @@ impl Router {
             replicas.iter().map(|h| h.finished).collect();
         let sched_wall_seconds: f64 =
             replicas.iter().map(|h| h.sched_wall_seconds).sum();
-        let span = replicas.iter().fold(0.0f64, |a, h| a.max(h.clock));
+        // Span = the last instant a replica that actually served reached.
+        // A never-activated `Warming` spawn parks its clock at `ready_at`,
+        // which may lie far beyond the final batch; folding it in would
+        // inflate the metrics span *and* bill phantom replica-seconds to
+        // every un-retired replica through `retired_at.unwrap_or(span)`.
+        let span = replicas
+            .iter()
+            .filter(|h| h.lifecycle != ReplicaState::Warming)
+            .fold(0.0f64, |a, h| a.max(h.clock));
+        // A still-`Warming` replica bills only up to the pool's last real
+        // event (`span`), not to its own parked `ready_at`.
         let replica_seconds: f64 = replicas
             .iter()
             .map(|h| (h.retired_at.unwrap_or(span) - h.spawned_at).max(0.0))
@@ -414,6 +484,7 @@ impl Router {
         let mut requests: Vec<Request> = replicas
             .into_iter()
             .flat_map(|h| h.state.requests.into_values())
+            .chain(undelivered)
             .collect();
         requests.sort_by_key(|r| r.id);
         let metrics = collect(&requests, span);
@@ -427,6 +498,7 @@ impl Router {
             scale_timeline: timeline,
             replica_seconds,
             drain_requeued,
+            drain_handoffs,
             peak_replicas,
         }
     }
@@ -609,6 +681,149 @@ mod tests {
             assert_eq!(res.requests.len(), 40, "{policy:?} lost requests");
             assert_eq!(res.metrics.finished, 40,
                        "{policy:?} left work undone: {:?}", res.metrics);
+            // Conservation must also hold on the truncated exit path: a
+            // tripped safety horizon reports undelivered arrivals as
+            // unfinished requests instead of silently dropping them.
+            let mut router = Router::new(&c, &rcfg);
+            router.horizon_override = Some(1.0);
+            let cut = router.run(reqs.clone());
+            assert_eq!(cut.requests.len(), 40,
+                       "{policy:?} lost requests on horizon break");
+            assert_eq!(cut.metrics.total, 40);
+            assert!(cut.metrics.finished < 40,
+                    "a 1 s horizon cannot finish the load");
         }
+    }
+
+    #[test]
+    fn pool_refusal_is_pool_level_not_destination_level() {
+        // Saturate replica 0's decode capacity while replica 1 idles:
+        // the chosen RoundRobin destination (0) refuses the arrival, but
+        // the *pool* does not — an Active peer has headroom, so the
+        // autoscaler must not see a refusal (the PR-4 signal scaled the
+        // pool up for free under probe-blind policies).
+        let c = cfg();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::RoundRobin)
+            .with_autoscaler(crate::config::AutoscalerConfig::new(1, 4));
+        let mut router = Router::new(&c, &rcfg);
+        for i in 0..200u64 {
+            let mut r = req(100 + i, 0.0, 16, 500);
+            r.stages[0].slo =
+                SloSpec::from_tiers(SloTier::Tight, SloTier::Tight);
+            r.begin_stage(0.0, 0.01);
+            r.advance_prefill(16, 0.01);
+            router.replicas[0].state.running.push(r.id);
+            router.replicas[0].state.requests.insert(r.id, r);
+        }
+        let fresh = req(1, 0.0, 400, 20);
+        assert!(!router.replicas[0].probe(&fresh).feasible,
+                "saturated destination must refuse");
+        assert!(!router.pool_refuses(&fresh),
+                "an Active peer with headroom means the pool admits");
+        // Saturate the peer the same way: now the pool really refuses.
+        for i in 0..200u64 {
+            let mut r = req(400 + i, 0.0, 16, 500);
+            r.stages[0].slo =
+                SloSpec::from_tiers(SloTier::Tight, SloTier::Tight);
+            r.begin_stage(0.0, 0.01);
+            r.advance_prefill(16, 0.01);
+            router.replicas[1].state.running.push(r.id);
+            router.replicas[1].state.requests.insert(r.id, r);
+        }
+        assert!(router.pool_refuses(&fresh),
+                "no Active replica left with headroom");
+    }
+
+    #[test]
+    fn span_and_billing_ignore_parked_warming_replica() {
+        // A spawn that never activates parks its clock at `ready_at`; the
+        // run's span (and therefore everyone's replica-seconds bill) must
+        // come from replicas that actually served.
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| req(i, i as f64 * 0.5, 600, 20))
+            .collect();
+        let c = cfg();
+        let solo = run_multi_replica(reqs.clone(), &c, &RouterConfig::new(1));
+
+        let mut router = Router::new(&c, &RouterConfig::new(1));
+        router.replicas.push(ReplicaHandle::warming(
+            1, &c, None, None, 0.0, 1_000.0));
+        let res = router.run(reqs);
+        assert_eq!(res.metrics.finished, 6);
+        assert!(res.metrics.span < 100.0,
+                "span {} inflated by the parked Warming clock",
+                res.metrics.span);
+        assert_eq!(res.metrics.span.to_bits(), solo.metrics.span.to_bits(),
+                   "span must equal the last served event");
+        // Both replicas bill to the serving span: the active one served
+        // it, the warming one existed through it — and no further.
+        assert!((res.replica_seconds - 2.0 * res.metrics.span).abs() < 1e-9,
+                "replica-seconds {} vs 2x span {}",
+                res.replica_seconds, 2.0 * res.metrics.span);
+    }
+
+    #[test]
+    fn probe_cache_cap_follows_pool_through_spawn_and_drain() {
+        use crate::config::AutoscalerConfig;
+        let c = cfg();
+        let rcfg = RouterConfig::new(5)
+            .with_autoscaler(AutoscalerConfig::new(1, 6));
+        let mut router = Router::new(&c, &rcfg);
+        for h in &router.replicas {
+            assert_eq!(h.probe_cache_cap(), scaled_probe_cache_cap(5));
+        }
+        // Warm-down one replica: the survivors' caps must shrink back —
+        // before the fix they kept the burst-sized cap forever.
+        router.replicas[4].begin_drain();
+        router.drain_sweep(4, 1.0);
+        assert_eq!(router.replicas[4].lifecycle, ReplicaState::Drained);
+        for h in router.replicas.iter().filter(|h| h.is_live()) {
+            assert_eq!(h.probe_cache_cap(), scaled_probe_cache_cap(4),
+                       "cap must follow the pool down");
+        }
+        // Scale back up: the caps grow with the pool again.
+        let a = router.autoscaler.as_mut().unwrap();
+        for i in 0..4 {
+            a.record_arrival(3.9 + 0.01 * i as f64, true);
+        }
+        router.autoscale(4.0);
+        let live = router.replicas.iter().filter(|h| h.is_live()).count();
+        assert_eq!(live, 5, "refusal burst must spawn a replacement");
+        for h in router.replicas.iter().filter(|h| h.is_live()) {
+            assert_eq!(h.probe_cache_cap(), scaled_probe_cache_cap(5));
+        }
+    }
+
+    #[test]
+    fn warm_down_victim_is_weakest_replica_in_hetero_pool() {
+        use crate::config::AutoscalerConfig;
+        let c = cfg();
+        let rcfg = RouterConfig::new(3)
+            .with_autoscaler(AutoscalerConfig::new(1, 4))
+            .with_overrides(vec![
+                ReplicaOverride::default(),
+                ReplicaOverride { chunk_budget: Some(256),
+                                  ..Default::default() },
+                ReplicaOverride::default(),
+            ]);
+        let mut router = Router::new(&c, &rcfg);
+        // Load the weak replica: under the PR-4 least-loaded-first rule
+        // the victim would be an idle strong replica (index 2); the
+        // capacity-aware picker must still drain the weak one.
+        router.replicas[1].deliver(req(7, 0.0, 600, 10));
+        router.autoscale(5.0);
+        assert_eq!(router.replicas[1].lifecycle, ReplicaState::Drained,
+                   "the weakest replica drains first");
+        assert!(router.replicas[0].is_routable());
+        assert!(router.replicas[2].is_routable());
+        // Its queued request left with it (outflow), conserving work.
+        let holders = router
+            .replicas
+            .iter()
+            .filter(|h| h.state.requests.contains_key(&7))
+            .count();
+        assert_eq!(holders, 1);
+        assert!(!router.replicas[1].state.requests.contains_key(&7));
     }
 }

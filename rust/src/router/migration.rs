@@ -24,10 +24,32 @@
 //! [`best_probed`](crate::router::policy::best_probed) destination
 //! order, so they can never disagree about what may move or where.
 //!
+//! **KV handoff** (second outflow pass, `AutoscalerConfig::kv_handoff`):
+//! *started* best-effort requests also leave the drain — by the same
+//! mechanism declined-hop extraction already uses: the source releases
+//! their KV pages and the already-processed tokens ship as recompute
+//! debt (§4.1 preemption semantics), paid on the destination by the
+//! best-effort fill's prefill passes. Without the handoff a single
+//! long best-effort decode pins the `Draining` replica (and its
+//! replica-seconds bill) until it serves out; with it, drains finish as
+//! soon as the *standard-tier* commitments do — the only work whose
+//! admission guarantee is tied to this replica. Handoff moves keep the
+//! best-effort tier ([`ReplicaHandle::accept_handoff`]) and are counted
+//! in `Request::kv_handoffs` on top of `drain_requeues`.
+//!
 //! [`ServerState::is_unstarted`]: crate::sim::ServerState::is_unstarted
 
 use crate::coordinator::request::RequestId;
 use crate::router::replica::ReplicaHandle;
+
+/// One request the warm-down outflow moved off a `Draining` replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainMove {
+    pub id: RequestId,
+    /// Did the move ship recompute debt (a started request, KV handoff)
+    /// rather than re-queue an untouched one?
+    pub handoff: bool,
+}
 
 /// A request may migrate while nothing about it is replica-local.
 fn migratable(h: &ReplicaHandle, id: RequestId) -> bool {
@@ -84,17 +106,25 @@ pub fn rebalance(replicas: &mut [ReplicaHandle], src: usize,
     moved
 }
 
-/// Warm-down outflow for the `Draining` replica `src`: every unstarted
-/// request still queued there (pending or best-effort) re-queues, as
-/// standard tier, onto the best routable replica — feasible-and-least-
-/// loaded first, least-loaded spillover when no probe admits it (the
-/// same §4.1 spillover dispatch uses; staying on a dying replica is
-/// strictly worse). Started requests are untouched: finishing their
-/// in-flight work *is* the drain. Returns the moved ids; each request
-/// moves at most once per call because extraction removes it from the
-/// snapshot's source queues.
-pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize)
-                     -> Vec<RequestId> {
+/// Warm-down outflow for the `Draining` replica `src`, two passes.
+///
+/// **Pass 1 (unstarted):** every unstarted request still queued there
+/// (pending or best-effort) re-queues, as standard tier, onto the best
+/// routable replica — feasible-and-least-loaded first, least-loaded
+/// spillover when no probe admits it (the same §4.1 spillover dispatch
+/// uses; staying on a dying replica is strictly worse).
+///
+/// **Pass 2 (KV handoff, when `kv_handoff`):** started *best-effort*
+/// requests move too, shipping their already-processed tokens as
+/// recompute debt (the mechanism declined-hop extraction already uses)
+/// onto the least-loaded routable replica — no feasibility probe: such
+/// a request keeps its best-effort tier on arrival, so the destination
+/// DP's verdict is already known and a dry run per replica would buy
+/// nothing. Standard-tier started work stays: serving it out *is* the
+/// drain. Returns the moves; each request moves at most once per call
+/// because extraction removes it from the snapshot's source queues.
+pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize,
+                     kv_handoff: bool) -> Vec<DrainMove> {
     let mut moved = Vec::new();
     if !replicas.iter().any(|h| h.is_routable()) {
         return moved; // nowhere to go; the drain serves them instead
@@ -114,7 +144,24 @@ pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize)
         let mut r = replicas[src].extract(id).expect("unstarted implies present");
         r.drain_requeues += 1;
         replicas[dest].accept_rerouted(r);
-        moved.push(id);
+        moved.push(DrainMove { id, handoff: false });
+    }
+    if !kv_handoff {
+        return moved;
+    }
+    // Fresh snapshot: pass 1's extractions rewrote the source queues,
+    // and what remains in best-effort is exactly the started set.
+    let queue: Vec<RequestId> = replicas[src].state.best_effort.clone();
+    for id in queue {
+        if !replicas[src].state.is_handoff_movable(id) {
+            continue;
+        }
+        let dest = crate::router::policy::least_loaded(replicas, Some(src));
+        let mut r = replicas[src].extract(id).expect("movable implies present");
+        r.drain_requeues += 1;
+        r.kv_handoffs += 1;
+        replicas[dest].accept_handoff(r);
+        moved.push(DrainMove { id, handoff: true });
     }
     moved
 }
@@ -203,8 +250,12 @@ mod tests {
         reps[0].state.req_mut(3).advance_prefill(32, 0.01);
         reps[0].begin_drain();
 
-        let moved = drain_outflow(&mut reps, 0);
-        assert_eq!(moved, vec![1, 2], "pending first, then deferred");
+        // Handoff disabled: the PR-4 contract — only unstarted work moves.
+        let moved = drain_outflow(&mut reps, 0, false);
+        assert_eq!(moved,
+                   vec![DrainMove { id: 1, handoff: false },
+                        DrainMove { id: 2, handoff: false }],
+                   "pending first, then deferred");
         // Warm-down conservation: each moved request lives on exactly one
         // replica, standard tier, counted as a drain re-queue (not an SLO
         // hop); the started request waits out the drain at the source.
@@ -223,8 +274,47 @@ mod tests {
             assert_eq!(r.route_hops, 0, "outflow is not an SLO hop");
         }
         assert!(reps[0].state.requests.contains_key(&3));
-        // The outflow is idempotent once nothing unstarted remains.
-        assert!(drain_outflow(&mut reps, 0).is_empty());
+        // The outflow is idempotent once nothing movable remains.
+        assert!(drain_outflow(&mut reps, 0, false).is_empty());
+
+        // Handoff enabled: the started best-effort request now leaves
+        // too — KV released at the source, debt shipped, tier kept.
+        let moved = drain_outflow(&mut reps, 0, true);
+        assert_eq!(moved, vec![DrainMove { id: 3, handoff: true }]);
+        assert!(!reps[0].state.requests.contains_key(&3));
+        assert!(!reps[0].has_work(), "handoff empties the drain");
+        let holder = reps
+            .iter()
+            .position(|h| h.state.requests.contains_key(&3))
+            .expect("req 3 must survive the move");
+        let r = &reps[holder].state.requests[&3];
+        assert_eq!(r.tier, ServiceTier::BestEffort,
+                   "handoff keeps the best-effort tier");
+        assert_eq!(r.recompute_pending, 32, "processed tokens became debt");
+        assert_eq!((r.drain_requeues, r.kv_handoffs), (1, 1));
+        assert_eq!(r.route_hops, 0);
+        assert!(reps[holder].state.best_effort.contains(&3));
+        assert!(drain_outflow(&mut reps, 0, true).is_empty());
+    }
+
+    #[test]
+    fn drain_handoff_skips_standard_started_work() {
+        let mut reps = handles(2);
+        // A standard-tier request mid-prefill: its admission guarantee is
+        // tied to this replica — it must serve out the drain even with
+        // the handoff enabled.
+        reps[0].deliver(Request::simple(
+            5, 0.0, 400, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)));
+        let id = 5;
+        reps[0].state.pending.retain(|&x| x != id);
+        reps[0].state.running.push(id);
+        assert!(reps[0].state.kv.grow(id, 64));
+        reps[0].state.req_mut(id).advance_prefill(64, 0.01);
+        reps[0].begin_drain();
+        assert!(drain_outflow(&mut reps, 0, true).is_empty());
+        assert!(reps[0].state.requests.contains_key(&5));
+        assert!(reps[0].has_work());
     }
 
     #[test]
@@ -233,7 +323,7 @@ mod tests {
         deferred_request(&mut reps[0], 7);
         reps[0].begin_drain();
         reps[1].begin_drain();
-        assert!(drain_outflow(&mut reps, 0).is_empty());
+        assert!(drain_outflow(&mut reps, 0, true).is_empty());
         assert!(reps[0].state.requests.contains_key(&7),
                 "request waits out the drain when the pool has no Active \
                  replica to take it");

@@ -29,10 +29,14 @@
 //!   every move: routing can rescue an SLO, never relax one. A request
 //!   extracted with partial KV (the declined-hop path) releases its
 //!   pages at the source and carries recompute debt instead (§4.1
-//!   preemption semantics).
+//!   preemption semantics) — and the warm-down **KV handoff** applies
+//!   that same mechanism to a `Draining` replica's *started*
+//!   best-effort requests, so a drain never waits out a long decode.
 //! * [`autoscaler`] — the elastic-pool controller: scale up when the
-//!   pool's probes keep refusing feasible-SLO arrivals, warm-down when
-//!   the pool idles, hysteresis in between (see
+//!   pool's probes keep refusing feasible-SLO arrivals — or, with the
+//!   predictive trigger, as soon as the arrival-rate trend projects
+//!   that crossing within the warm-up lag — warm-down when the pool
+//!   idles, hysteresis in between (see
 //!   [`AutoscalerConfig`](crate::config::AutoscalerConfig)).
 //!
 //! # Replica lifecycle
@@ -42,16 +46,20 @@
 //!
 //! ```text
 //!                 pool clock           autoscaler Down
-//!                reaches ready_at     (least-loaded victim)
-//!   [Warming] ---------------------> [Active] <----------.
-//!       ^                               |    \            \
+//!                reaches ready_at    (weakest victim first,
+//!   [Warming] ---------------------> [Active]  then least-loaded)
+//!       ^                               |    \ <----------.
 //!       | autoscaler Up                 |     `----------> [Draining]
-//!       | (spawn; or cancel an          |     autoscaler Up |   |
-//!       |  in-flight warm-down)        route / probe        |   | outflow:
-//!       |                              arrivals, hops,  <---'   | unstarted
-//!       |                              migrations (Active       | requests
-//!       |                              replicas only)           | re-queue;
-//!       |                                                       | started
+//!       | (reactive: refusal rate;      |     autoscaler Up |   |
+//!       |  predictive: projected        |                   |   | outflow:
+//!       |  crossing in warmup_seconds;  |                   |   | unstarted
+//!       |  spawn, or cancel an         route / probe    <---'   | re-queue +
+//!       |  in-flight warm-down)        arrivals, hops,          | started
+//!       |                              migrations (Active       | best-effort
+//!       |                              replicas only)           | KV handoff
+//!       |                                                       | (recompute
+//!       |                                                       | debt);
+//!       |                                                       | standard
 //!       |                                                       | work drains
 //!       |                                has_work() == false    v
 //!       `------- new ReplicaHandle <-- [Drained]  <-- (retired_at set,

@@ -238,6 +238,22 @@ impl ReplicaHandle {
         self.probe_cache_cap = cap.max(1);
     }
 
+    /// Current probe-cache capacity (the router keeps it at
+    /// [`scaled_probe_cache_cap`] of the live pool, in both directions).
+    pub fn probe_cache_cap(&self) -> usize {
+        self.probe_cache_cap
+    }
+
+    /// Static serving capacity of this replica, for ranking
+    /// heterogeneous pools: (chunked-prefill token budget per batch, KV
+    /// tokens). Lexicographic order — a replica with a smaller chunk
+    /// budget is strictly weaker regardless of KV, and KV breaks ties.
+    /// The warm-down victim picker drains the weakest replica first so
+    /// the surviving pool keeps the most capacity per replica-second.
+    pub fn effective_capacity(&self) -> (usize, usize) {
+        (self.state.model.max_batch_tokens, self.state.kv.total_tokens())
+    }
+
     /// Deliver a newly routed arrival: enters its stage against this
     /// replica's perf model (prefill deadline set here) and queues it.
     pub fn deliver(&mut self, r: Request) {
@@ -406,6 +422,24 @@ impl ReplicaHandle {
         self.state.pending.push(id);
         self.state.requests.insert(id, r);
     }
+
+    /// Accept a *started* best-effort request evicted from a `Draining`
+    /// replica (warm-down KV handoff). Unlike
+    /// [`accept_rerouted`](Self::accept_rerouted) it keeps the
+    /// best-effort tier and joins the best-effort queue directly: the
+    /// request was already declined once, moving does not improve its
+    /// (typically blown) prefill deadline, and re-running admission for
+    /// it would burn a DP pass to learn what we know. Its shipped
+    /// recompute debt is paid by the §4.1 preemption-resume machinery —
+    /// the best-effort fill rebuilds the KV with prefill passes, then
+    /// decoding continues where it left off.
+    pub fn accept_handoff(&mut self, r: Request) {
+        debug_assert_eq!(r.tier, ServiceTier::BestEffort);
+        self.epoch += 1;
+        let id = r.id;
+        self.state.best_effort.push(id);
+        self.state.requests.insert(id, r);
+    }
 }
 
 #[cfg(test)]
@@ -524,6 +558,48 @@ mod tests {
         assert_eq!(h.probe_cache_cap, 32);
         h.set_probe_cache_cap(0); // degenerate: floor of one entry
         assert_eq!(h.probe_cache_cap, 1);
+    }
+
+    #[test]
+    fn accept_handoff_keeps_best_effort_tier_and_debt() {
+        use crate::coordinator::request::ServiceTier;
+        use crate::sim::decline_to_best_effort;
+        let c = cfg();
+        let mut src = ReplicaHandle::new(0, &c, None, None);
+        let mut dst = ReplicaHandle::new(1, &c, None, None);
+        src.deliver(req(7, 100, 10));
+        decline_to_best_effort(&mut src.state, 7);
+        // Partial best-effort prefill with KV held: a started request.
+        assert!(src.state.kv.grow(7, 48));
+        src.state.req_mut(7).advance_prefill(48, 0.1);
+        let r = src.extract(7).expect("present");
+        assert_eq!(r.recompute_pending, 48, "debt shipped with the move");
+        dst.accept_handoff(r);
+        let r = &dst.state.requests[&7];
+        assert_eq!(r.tier, ServiceTier::BestEffort,
+                   "handoff must not re-enter admission");
+        assert!(dst.state.best_effort.contains(&7));
+        assert!(dst.state.pending.is_empty());
+        assert!(dst.state.is_handoff_movable(7));
+    }
+
+    #[test]
+    fn effective_capacity_orders_hetero_replicas() {
+        use crate::config::ReplicaOverride;
+        let c = cfg();
+        let strong = ReplicaHandle::new(0, &c, None, None);
+        let weak_chunk = ReplicaHandle::new(1, &c, None, Some(&ReplicaOverride {
+            chunk_budget: Some(256),
+            ..Default::default()
+        }));
+        let weak_kv = ReplicaHandle::new(2, &c, None, Some(&ReplicaOverride {
+            kv_tokens: Some(8_192),
+            ..Default::default()
+        }));
+        assert!(weak_chunk.effective_capacity() < strong.effective_capacity());
+        assert!(weak_kv.effective_capacity() < strong.effective_capacity());
+        // Chunk budget dominates the lexicographic order.
+        assert!(weak_chunk.effective_capacity() < weak_kv.effective_capacity());
     }
 
     #[test]

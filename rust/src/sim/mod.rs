@@ -89,6 +89,20 @@ impl ServerState {
             && r.recompute_pending == 0
             && self.kv.tokens_of(id) == 0
     }
+
+    /// May request `id` leave this replica by shipping recompute debt
+    /// (the elastic pool's warm-down KV handoff)? Any unfinished
+    /// best-effort request qualifies: its KV is droppable by
+    /// construction — §4.1 preemption already drops it under memory
+    /// pressure, keeping generated tokens and recomputing the cache —
+    /// so a move costs exactly one preemption. Standard-tier requests
+    /// never qualify: their admission priced a deadline against *this*
+    /// replica's reserved KV and token budget, and converting that
+    /// guarantee into recompute debt elsewhere would break it.
+    pub fn is_handoff_movable(&self, id: RequestId) -> bool {
+        let Some(r) = self.requests.get(&id) else { return false };
+        r.tier == ServiceTier::BestEffort && !r.is_finished()
+    }
 }
 
 /// A scheduling policy: the only interface the simulator knows.
@@ -413,6 +427,25 @@ mod tests {
         assert!(st.is_unstarted(1));
         // ... and so does prefill progress.
         st.req_mut(1).advance_prefill(10, 0.1);
+        assert!(!st.is_unstarted(1));
+    }
+
+    #[test]
+    fn is_handoff_movable_is_tier_gated() {
+        let cfg = config();
+        let mut st = ServerState::new(&cfg);
+        assert!(!st.is_handoff_movable(1), "absent request is not movable");
+        deliver(&mut st, tiny_request(1, 0.0));
+        assert!(!st.is_handoff_movable(1),
+                "standard tier never hands off — its admission guarantee \
+                 is replica-local");
+        decline_to_best_effort(&mut st, 1);
+        assert!(st.is_handoff_movable(1), "unstarted best-effort moves");
+        // Progress does not pin it (unlike `is_unstarted`): started
+        // best-effort work is exactly what the KV handoff exists for.
+        assert!(st.kv.grow(1, 16));
+        st.req_mut(1).advance_prefill(16, 0.1);
+        assert!(st.is_handoff_movable(1));
         assert!(!st.is_unstarted(1));
     }
 

@@ -7,4 +7,5 @@ pub mod traces;
 
 pub use rng::Rng;
 pub use scenarios::{build_stages, generate, stats, WorkloadStats};
-pub use traces::{compress_middle_third, count_cv, ArrivalProcess};
+pub use traces::{burst_window, compress_middle_third, count_cv,
+                 ArrivalProcess};

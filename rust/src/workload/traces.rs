@@ -96,6 +96,21 @@ pub fn compress_middle_third(wl: &mut [crate::coordinator::request::Request],
     }
 }
 
+/// `[t0, t1)` arrival-time bounds of the middle third that
+/// [`compress_middle_third`] spiked — the burst window the elastic-pool
+/// comparisons measure attainment over. Shares the `(n/3, 2n/3)` index
+/// split with the shaper so the two can never drift; `t1` is the first
+/// *untouched* final-third arrival, which over-covers only the
+/// deliberate post-spike lull (no arrivals in between).
+pub fn burst_window(wl: &[crate::coordinator::request::Request])
+                    -> (f64, f64) {
+    let n = wl.len();
+    if n < 3 {
+        return (0.0, f64::INFINITY);
+    }
+    (wl[n / 3].arrival, wl[2 * n / 3].arrival)
+}
+
 /// Coefficient of variation of per-`window`-second arrival counts — the
 /// burstiness statistic Fig. 8 visualizes.
 pub fn count_cv(arrivals: &[f64], window: f64) -> f64 {

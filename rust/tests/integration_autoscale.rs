@@ -1,16 +1,24 @@
-//! Elastic-pool integration tests (ISSUE 4 acceptance): on the bursty
-//! heterogeneous (multi-SLO) Mixed trace, the autoscaled pool
-//! (min=1, max=4) holds static-4-class SLO attainment while consuming
-//! strictly — and materially — fewer replica-seconds; warm-down
-//! conserves every request; and elastic runs are bit-reproducible under
-//! the existing determinism harness.
+//! Elastic-pool integration tests (ISSUE 4 + ISSUE 5 acceptance): on
+//! the bursty heterogeneous (multi-SLO) Mixed trace, the autoscaled
+//! pool (min=1, max=4) holds static-4-class SLO attainment while
+//! consuming strictly — and materially — fewer replica-seconds;
+//! warm-down conserves every request (including started best-effort
+//! work moved by the KV handoff); the predictive controller improves
+//! burst-window attainment over the reactive PR-4 controller; and
+//! elastic runs are bit-reproducible under the existing determinism
+//! harness.
 
 use std::collections::HashSet;
 
-use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig};
-use slos_serve::coordinator::request::Request;
-use slos_serve::router::{run_multi_replica, MultiReplicaResult, RoutePolicy,
-                         RouterConfig, ScaleKind};
+use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig,
+                         SloSpec, SloTier};
+use slos_serve::coordinator::request::{Request, ServiceTier};
+use slos_serve::metrics::window_attainment;
+use slos_serve::router::migration::{drain_outflow, DrainMove};
+use slos_serve::router::{run_multi_replica, MultiReplicaResult,
+                         ReplicaHandle, RoutePolicy, RouterConfig,
+                         ScaleKind};
+use slos_serve::sim::decline_to_best_effort;
 use slos_serve::workload;
 
 /// Bursty heterogeneous Mixed trace: multi-SLO Mixed traffic whose
@@ -26,18 +34,28 @@ fn bursty_workload() -> (ScenarioConfig, Vec<Request>) {
     (cfg, wl)
 }
 
+/// `[t0, t1)` bounds of the compressed middle third — the burst window.
+fn burst_window() -> (f64, f64) {
+    let (_, wl) = bursty_workload();
+    workload::burst_window(&wl)
+}
+
 fn run_static(k: usize) -> MultiReplicaResult {
     let (cfg, wl) = bursty_workload();
     let rcfg = RouterConfig::new(k).with_policy(RoutePolicy::BurstAware);
     run_multi_replica(wl, &cfg, &rcfg)
 }
 
-fn run_elastic() -> MultiReplicaResult {
+fn run_elastic_with(a: AutoscalerConfig) -> MultiReplicaResult {
     let (cfg, wl) = bursty_workload();
     let rcfg = RouterConfig::new(1)
         .with_policy(RoutePolicy::BurstAware)
-        .with_autoscaler(AutoscalerConfig::new(1, 4));
+        .with_autoscaler(a);
     run_multi_replica(wl, &cfg, &rcfg)
+}
+
+fn run_elastic() -> MultiReplicaResult {
+    run_elastic_with(AutoscalerConfig::new(1, 4))
 }
 
 #[test]
@@ -97,7 +115,7 @@ fn warm_down_conserves_every_request() {
     let res = run_elastic();
     let n = 330;
     // None lost, none duplicated — across routing, migration, warming,
-    // draining, and retirement.
+    // draining, retirement, and KV handoff.
     assert_eq!(res.requests.len(), n, "request lost or duplicated");
     let ids: HashSet<u64> = res.requests.iter().map(|r| r.id).collect();
     assert_eq!(ids.len(), n, "duplicate ids in result");
@@ -105,11 +123,17 @@ fn warm_down_conserves_every_request() {
                "the pool must drain everything: {:?}", res.metrics);
     // Every request admitted to a Draining replica either finished there
     // or was re-queued — and the per-request counters reconcile exactly
-    // with the router's outflow count.
+    // with the router's outflow counts.
     let requeues: usize =
         res.requests.iter().map(|r| r.drain_requeues as usize).sum();
     assert_eq!(requeues, res.drain_requeued,
                "outflow bookkeeping must reconcile");
+    let handoffs: usize =
+        res.requests.iter().map(|r| r.kv_handoffs as usize).sum();
+    assert_eq!(handoffs, res.drain_handoffs,
+               "handoff bookkeeping must reconcile");
+    assert!(res.drain_handoffs <= res.drain_requeued,
+            "handoffs are a subset of drain re-queues");
     for r in &res.requests {
         assert!(r.is_finished(), "req {} left unfinished", r.id);
     }
@@ -117,6 +141,127 @@ fn warm_down_conserves_every_request() {
     // replicas retired mid-run.
     let sum: usize = res.per_replica_finished.iter().sum();
     assert_eq!(sum, n);
+}
+
+#[test]
+fn predictive_improves_burst_window_attainment_over_reactive() {
+    // ISSUE 5 acceptance: the predictive controller strictly improves
+    // burst-window attainment over the reactive PR-4 controller on the
+    // bursty Mixed trace at no more replica-seconds. The burst window
+    // is where the two differ: the reactive rule spawns only after the
+    // refusal rate has crossed the threshold, so `warmup_seconds` of
+    // the spike routes into a pool one replica short.
+    let reactive = run_elastic_with(
+        AutoscalerConfig::new(1, 4).with_predictive(false));
+    let predictive = run_elastic_with(AutoscalerConfig::new(1, 4));
+    let (t0, t1) = burst_window();
+
+    let att_r = window_attainment(&reactive.requests, t0, t1);
+    let att_p = window_attainment(&predictive.requests, t0, t1);
+    assert!(att_p > att_r,
+            "predictive burst-window attainment {att_p:.3} must strictly \
+             beat reactive {att_r:.3} (timelines: predictive {:?} vs \
+             reactive {:?})",
+            predictive.scale_timeline, reactive.scale_timeline);
+
+    // Cost side: the predictive lead is bounded by the projection
+    // horizon (`warmup_seconds` per spawn), so the elastic pool pays at
+    // most that much extra warm time — and typically none, because the
+    // earlier capacity clears the backlog sooner and the warm-down
+    // cooldown (anchored at the *later* reactive spawn) releases the
+    // spare replica no earlier on the reactive side.
+    let a = AutoscalerConfig::new(1, 4);
+    let max_lead =
+        (a.max_replicas - a.min_replicas) as f64 * a.warmup_seconds;
+    assert!(predictive.replica_seconds
+            <= reactive.replica_seconds + max_lead + 1e-6,
+            "predictive {:.2} replica-seconds vs reactive {:.2} \
+             (allowed lead {max_lead:.2})",
+            predictive.replica_seconds, reactive.replica_seconds);
+
+    // Both controllers still conserve the workload.
+    assert_eq!(predictive.metrics.finished, 330);
+    assert_eq!(reactive.metrics.finished, 330);
+    // And whole-trace attainment must not regress either.
+    assert!(predictive.metrics.attainment() + 1e-9
+            >= reactive.metrics.attainment(),
+            "predictive whole-trace {:.3} < reactive {:.3}",
+            predictive.metrics.attainment(),
+            reactive.metrics.attainment());
+}
+
+/// A draining replica whose only remaining work is one *started*
+/// best-effort decode: with the KV handoff the drain retires
+/// immediately (the request ships as recompute debt and finishes on the
+/// destination); without it, the source must serve out the whole
+/// decode first. This is the mechanism-level half of the ISSUE 5 drain
+/// acceptance; the pool-level reconciliation is asserted in
+/// `warm_down_conserves_every_request`.
+#[test]
+fn kv_handoff_retires_drains_measurably_earlier() {
+    let mk = || -> Vec<ReplicaHandle> {
+        let cfg = {
+            let mut c = ScenarioConfig::new(Scenario::ChatBot);
+            c.speculative = false;
+            c
+        };
+        let mut reps: Vec<ReplicaHandle> =
+            (0..2).map(|i| ReplicaHandle::new(i, &cfg, None, None)).collect();
+        // A best-effort request on replica 1, mid-decode: prefill done
+        // (64 tokens of KV), 50 of 400 decode tokens generated.
+        let slo = SloSpec::from_tiers(SloTier::Loose, SloTier::Loose);
+        reps[1].deliver(Request::simple(9, 0.0, 64, 400, slo));
+        decline_to_best_effort(&mut reps[1].state, 9);
+        assert!(reps[1].state.kv.grow(9, 114));
+        reps[1].state.req_mut(9).advance_prefill(64, 0.05);
+        reps[1].state.req_mut(9).advance_decode(50, 0.1);
+        reps[1].clock = 0.1;
+        reps[1].begin_drain();
+        reps
+    };
+
+    // Without the handoff: nothing may move, and the drain must serve
+    // out the remaining 350 decode tokens before it can retire.
+    let mut slow = mk();
+    assert!(drain_outflow(&mut slow, 1, false).is_empty());
+    let mut rounds = 0;
+    while slow[1].has_work() && rounds < 100_000 {
+        if !slow[1].step() {
+            break;
+        }
+        rounds += 1;
+    }
+    assert!(!slow[1].has_work(), "drain must eventually serve out");
+    let t_without = slow[1].clock;
+    assert!(t_without > 1.0,
+            "a 350-token decode is a measurable drain delay, got \
+             {t_without:.3}s");
+
+    // With the handoff: the drain empties at once, and the moved
+    // request finishes on the destination with its generated tokens
+    // intact (only the KV is recomputed — §4.1 preemption semantics).
+    let mut fast = mk();
+    let moved = drain_outflow(&mut fast, 1, true);
+    assert_eq!(moved, vec![DrainMove { id: 9, handoff: true }]);
+    assert!(!fast[1].has_work(),
+            "with the handoff the drain retires immediately (at 0.1s, \
+             vs {t_without:.3}s without)");
+    let r = &fast[0].state.requests[&9];
+    assert_eq!(r.tier, ServiceTier::BestEffort);
+    assert_eq!(r.kv_handoffs, 1);
+    assert_eq!(r.recompute_pending, 114,
+               "64 prefill + 50 generated tokens become recompute debt");
+    assert_eq!(r.decode_done, 50, "generated tokens are kept");
+    let mut rounds = 0;
+    while fast[0].has_work() && rounds < 100_000 {
+        if !fast[0].step() {
+            break;
+        }
+        rounds += 1;
+    }
+    let r = &fast[0].state.requests[&9];
+    assert!(r.is_finished(), "handed-off request must finish");
+    assert_eq!(r.decode_done, 400);
 }
 
 #[test]
@@ -130,6 +275,7 @@ fn elastic_runs_are_bit_deterministic() {
     assert_eq!(a.rerouted, b.rerouted);
     assert_eq!(a.migrated, b.migrated);
     assert_eq!(a.drain_requeued, b.drain_requeued);
+    assert_eq!(a.drain_handoffs, b.drain_handoffs);
     assert_eq!(a.peak_replicas, b.peak_replicas);
     assert_eq!(a.per_replica_finished, b.per_replica_finished);
     assert_eq!(a.scale_timeline.len(), b.scale_timeline.len());

@@ -1,0 +1,95 @@
+//! Fault injection and the self-healing elastic pool (ROADMAP follow-on
+//! to the §4.2 elastic extension): the bursty Mixed trace with replica 0
+//! scripted to crash in the middle of the burst. A static pool eats the
+//! capacity loss for the rest of the run — its KV dies with the replica,
+//! started work restarts from token zero as best-effort recompute debt
+//! on the survivors. The elastic pool's crash path respawns a
+//! replacement at the crash instant (no cooldown, no refusal evidence —
+//! the capacity is already gone), and one warm-up later the pool is
+//! whole again. A second block lets a seeded Poisson fault process
+//! crash and slow replicas at random: same fault seed, bit-identical
+//! timeline.
+//!
+//! ```bash
+//! cargo run --release --example chaos
+//! ```
+
+use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
+                         ScenarioConfig};
+use slos_serve::metrics::window_attainment;
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+fn main() {
+    let n = 300;
+    let mk = || {
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(1.5)
+            .with_requests(n)
+            .with_seed(42);
+        let mut wl = workload::generate(&cfg);
+        workload::compress_middle_third(&mut wl, 4.0);
+        (cfg, wl)
+    };
+    let (burst_t0, burst_t1) = workload::burst_window(&mk().1);
+    let t_crash = 0.5 * (burst_t0 + burst_t1);
+    println!("burst window [{burst_t0:.1}s, {burst_t1:.1}s]; replica 0 \
+              crashes at t = {t_crash:.1}s\n");
+
+    println!("== one mid-burst crash: eat the loss vs self-heal ==");
+    println!("{:>20} {:>10} {:>8} {:>9} {:>16}",
+             "pool", "attained%", "burst%", "finished", "replica-seconds");
+    let variants: [(&str, bool, Option<FaultConfig>); 3] = [
+        ("static-2-clean", false, None),
+        ("static-2-crash", false,
+         Some(FaultConfig::default().crash_at(0, t_crash))),
+        ("elastic-crash", true,
+         Some(FaultConfig::default().crash_at(0, t_crash))),
+    ];
+    for (label, elastic, faults) in variants {
+        let (cfg, wl) = mk();
+        let mut rcfg =
+            RouterConfig::new(2).with_policy(RoutePolicy::BurstAware);
+        if elastic {
+            rcfg = rcfg.with_autoscaler(AutoscalerConfig::new(1, 4));
+        }
+        if let Some(f) = faults {
+            rcfg = rcfg.with_faults(f);
+        }
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("{:>20} {:>9.1}% {:>7.1}% {:>9} {:>16.1}   crashes {}  \
+                  requeued {}  handoffs {}",
+                 label, 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.metrics.finished, res.replica_seconds, res.crashes,
+                 res.crash_requeued, res.crash_handoffs);
+        if !res.scale_timeline.is_empty() {
+            println!("  timeline:");
+            for e in &res.scale_timeline {
+                println!("    t {:7.2}s  {:<14} replica {:>2}  -> {} active",
+                         e.t, format!("{:?}", e.kind), e.replica, e.active);
+            }
+        }
+    }
+
+    println!("\n== seeded Poisson chaos (crash 0.005/s, slowdown 0.02/s \
+              per replica), elastic 1..4 ==");
+    for seed in [7u64, 8] {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(AutoscalerConfig::new(1, 4))
+            .with_faults(FaultConfig::default()
+                         .with_seed(seed)
+                         .with_crash_rate(0.005)
+                         .with_slowdown_rate(0.02));
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("fault-seed {seed}: attainment {:5.1}%  crashes {}  \
+                  requeued {}  handoffs {}  peak {}  events {}",
+                 100.0 * res.metrics.attainment(), res.crashes,
+                 res.crash_requeued, res.crash_handoffs,
+                 res.peak_replicas, res.scale_timeline.len());
+    }
+    println!("(re-run with the same fault seed: identical output — the \
+              fault timeline is a pure function of the seed)");
+}

@@ -1,0 +1,64 @@
+//! Chaos bench (PR-6): end-to-end cost of fault injection and recovery.
+//! Tracks (a) the overhead of carrying a fault plan through an
+//! otherwise-clean run, (b) a mid-burst crash on a static pool (the
+//! evacuation cost), and (c) the same crash on an elastic pool (the
+//! evacuation + emergency-respawn + re-drain cost).
+
+use slos_serve::bench_harness::{Bench, JsonReport};
+use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
+                         ScenarioConfig};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+fn main() {
+    slos_serve::figures::fig_chaos(120);
+
+    let mk = || {
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(1.5)
+            .with_requests(150)
+            .with_seed(42);
+        let mut wl = workload::generate(&cfg);
+        workload::compress_middle_third(&mut wl, 4.0);
+        (cfg, wl)
+    };
+    let (t0, t1) = workload::burst_window(&mk().1);
+    let t_crash = 0.5 * (t0 + t1);
+
+    let mut b = Bench::new("chaos_run").with_target_time(1.5);
+    b.bench("static2_no_faults", || {
+        let (cfg, wl) = mk();
+        let rcfg =
+            RouterConfig::new(2).with_policy(RoutePolicy::BurstAware);
+        run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
+    });
+    b.bench("static2_fault_plan_no_crash", || {
+        // An armed fault plan whose schedules never fire: the price of
+        // the per-round injection check alone.
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_faults(FaultConfig::default().crash_at(0, 1e9));
+        run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
+    });
+    b.bench("static2_mid_burst_crash", || {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_faults(FaultConfig::default().crash_at(0, t_crash));
+        run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
+    });
+    b.bench("elastic_mid_burst_crash", || {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(AutoscalerConfig::new(1, 4))
+            .with_faults(FaultConfig::default().crash_at(0, t_crash));
+        run_multi_replica(wl, &cfg, &rcfg).metrics.attainment()
+    });
+
+    let mut report = JsonReport::new("chaos");
+    report.add_group("chaos_run", b.finish());
+    let path = report.write().expect("write BENCH_chaos.json");
+    println!("wrote {}", path.display());
+}

@@ -331,6 +331,15 @@ pub struct AutoscalerConfig {
     /// drains finish in bounded time. Off = started work waits out the
     /// drain at the source (the PR-4 behaviour).
     pub kv_handoff: bool,
+    /// Flap circuit breaker: this many crashes of the same slot
+    /// within `flap_window` quarantines the slot instead of
+    /// respawning it in place.
+    pub flap_crashes: usize,
+    /// Sliding window (seconds) the flap breaker counts crashes over.
+    pub flap_window: f64,
+    /// Seconds a tripped slot stays quarantined (emergency respawns go
+    /// to a fresh slot, with a fresh fault schedule, meanwhile).
+    pub quarantine_secs: f64,
 }
 
 impl AutoscalerConfig {
@@ -347,6 +356,9 @@ impl AutoscalerConfig {
             cooldown: 2.0,
             predictive: true,
             kv_handoff: true,
+            flap_crashes: 3,
+            flap_window: 10.0,
+            quarantine_secs: 30.0,
         }
     }
 
@@ -358,6 +370,159 @@ impl AutoscalerConfig {
     pub fn with_kv_handoff(mut self, on: bool) -> Self {
         self.kv_handoff = on;
         self
+    }
+}
+
+/// What an injected fault does to a replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The replica dies instantly: KV gone, started work becomes
+    /// recompute debt, lifecycle goes `Failed` (terminal).
+    Crash,
+    /// Transient slowdown: batch execution times are multiplied by
+    /// [`FaultConfig::slowdown_factor`] for
+    /// [`FaultConfig::slowdown_secs`] (straggler / noisy-neighbour
+    /// episode). The replica stays live and routable.
+    Slowdown,
+}
+
+/// One hand-scripted fault: `kind` hits slot `slot` at pool time `t`.
+/// Scripted faults merge with the seeded Poisson streams, so tests and
+/// figures can pin a crash mid-burst while background noise continues.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedFault {
+    /// Replica *slot* the fault targets. Slots are stable across
+    /// respawn-in-place (the replacement inherits the slot and the
+    /// remainder of its schedule); a quarantined slot's replacement
+    /// gets a fresh slot instead.
+    pub slot: usize,
+    /// Pool time (seconds) the fault fires.
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// Deterministic fault-injection configuration for the router's chaos
+/// subsystem ([`router::chaos`](crate::router::chaos)). Per-slot
+/// crash/slowdown schedules are derived purely from `(seed, slot)`, so
+/// two runs with the same `FaultConfig` see bit-identical fault
+/// timelines regardless of pool history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean crashes per replica-second (Poisson). 0 = scripted only.
+    pub crash_rate: f64,
+    /// Mean slowdown episodes per replica-second (Poisson).
+    pub slowdown_rate: f64,
+    /// Execution-time multiplier during a slowdown episode.
+    pub slowdown_factor: f64,
+    /// Length (seconds) of one slowdown episode.
+    pub slowdown_secs: f64,
+    /// Schedules are generated out to this pool time.
+    pub horizon: f64,
+    /// Seed for the per-slot fault streams (independent of the
+    /// workload / replica exec-noise seeds).
+    pub seed: u64,
+    /// Hand-scripted faults, merged into the seeded schedules.
+    pub scripted: Vec<ScriptedFault>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            crash_rate: 0.0,
+            slowdown_rate: 0.0,
+            slowdown_factor: 3.0,
+            slowdown_secs: 2.0,
+            horizon: 600.0,
+            seed: 7,
+            scripted: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_crash_rate(mut self, rate: f64) -> Self {
+        assert!(rate >= 0.0);
+        self.crash_rate = rate;
+        self
+    }
+
+    pub fn with_slowdown_rate(mut self, rate: f64) -> Self {
+        assert!(rate >= 0.0);
+        self.slowdown_rate = rate;
+        self
+    }
+
+    /// Script a crash of `slot` at pool time `t`.
+    pub fn crash_at(mut self, slot: usize, t: f64) -> Self {
+        self.scripted.push(ScriptedFault { slot, t, kind: FaultKind::Crash });
+        self
+    }
+
+    /// Script a slowdown episode on `slot` starting at pool time `t`.
+    pub fn slow_at(mut self, slot: usize, t: f64) -> Self {
+        self.scripted
+            .push(ScriptedFault { slot, t, kind: FaultKind::Slowdown });
+        self
+    }
+
+    /// Script a flap: `n` crashes of `slot`, the first at `t0`, spaced
+    /// `gap` seconds apart — the circuit-breaker test pattern.
+    pub fn with_flap(mut self, slot: usize, t0: f64, n: usize, gap: f64)
+                     -> Self {
+        for i in 0..n {
+            self.scripted.push(ScriptedFault {
+                slot,
+                t: t0 + i as f64 * gap,
+                kind: FaultKind::Crash,
+            });
+        }
+        self
+    }
+
+    /// Parse the CLI `--faults` spec: comma-separated atoms
+    /// `rate=R` (crash rate), `slowrate=R`, `slowfactor=F`,
+    /// `slowsecs=S`, `horizon=T`, `crash:SLOT@T`, `slow:SLOT@T`.
+    /// E.g. `--faults rate=0.02,crash:0@12.5`.
+    pub fn parse(spec: &str) -> Result<FaultConfig, String> {
+        let mut cfg = FaultConfig::default();
+        for atom in spec.split(',').filter(|a| !a.is_empty()) {
+            if let Some((key, val)) = atom.split_once('=') {
+                let v: f64 = val
+                    .parse()
+                    .map_err(|_| format!("bad number in `{atom}`"))?;
+                match key {
+                    "rate" => cfg.crash_rate = v,
+                    "slowrate" => cfg.slowdown_rate = v,
+                    "slowfactor" => cfg.slowdown_factor = v,
+                    "slowsecs" => cfg.slowdown_secs = v,
+                    "horizon" => cfg.horizon = v,
+                    _ => return Err(format!("unknown fault key `{key}`")),
+                }
+            } else if let Some((kind, rest)) = atom.split_once(':') {
+                let (slot, t) = rest
+                    .split_once('@')
+                    .ok_or(format!("expected SLOT@T in `{atom}`"))?;
+                let slot: usize = slot
+                    .parse()
+                    .map_err(|_| format!("bad slot in `{atom}`"))?;
+                let t: f64 =
+                    t.parse().map_err(|_| format!("bad time in `{atom}`"))?;
+                let kind = match kind {
+                    "crash" => FaultKind::Crash,
+                    "slow" => FaultKind::Slowdown,
+                    _ => return Err(format!("unknown fault kind `{kind}`")),
+                };
+                cfg.scripted.push(ScriptedFault { slot, t, kind });
+            } else {
+                return Err(format!("unparseable fault atom `{atom}`"));
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -446,6 +611,44 @@ mod tests {
                 "the upgraded controller is the default");
         let reactive = a.with_predictive(false).with_kv_handoff(false);
         assert!(!reactive.predictive && !reactive.kv_handoff);
+        assert!(a.flap_crashes >= 2, "one crash must not quarantine");
+        assert!(a.flap_window > 0.0 && a.quarantine_secs > 0.0);
+    }
+
+    #[test]
+    fn fault_config_parse_round_trips_the_cli_spec() {
+        let c = FaultConfig::parse("rate=0.02,slowrate=0.1,crash:0@12.5,slow:2@3")
+            .unwrap();
+        assert_eq!(c.crash_rate, 0.02);
+        assert_eq!(c.slowdown_rate, 0.1);
+        assert_eq!(c.scripted.len(), 2);
+        assert_eq!(
+            c.scripted[0],
+            ScriptedFault { slot: 0, t: 12.5, kind: FaultKind::Crash }
+        );
+        assert_eq!(
+            c.scripted[1],
+            ScriptedFault { slot: 2, t: 3.0, kind: FaultKind::Slowdown }
+        );
+        // Defaults survive for unmentioned knobs.
+        assert_eq!(c.slowdown_factor, FaultConfig::default().slowdown_factor);
+        assert!(FaultConfig::parse("bogus").is_err());
+        assert!(FaultConfig::parse("crash:0").is_err());
+        assert!(FaultConfig::parse("warp=9").is_err());
+    }
+
+    #[test]
+    fn fault_config_builders_script_faults() {
+        let c = FaultConfig::default().with_flap(1, 5.0, 3, 0.5);
+        assert_eq!(c.scripted.len(), 3);
+        assert!(c.scripted.iter().all(|f| f.slot == 1
+            && f.kind == FaultKind::Crash));
+        assert_eq!(c.scripted[2].t, 6.0);
+        let c = FaultConfig::default().crash_at(0, 1.0).slow_at(1, 2.0);
+        assert_eq!(
+            (c.scripted[0].kind, c.scripted[1].kind),
+            (FaultKind::Crash, FaultKind::Slowdown)
+        );
     }
 
     #[test]

@@ -118,8 +118,19 @@ impl SlosServe {
     /// Free pages from the admission planner's viewpoint: total minus
     /// reservations (best-effort pages are reclaimable via preemption).
     fn mem_free_pages(&self, st: &ServerState) -> usize {
-        let reserved: usize = self.reserved.values().sum();
-        st.kv.allocator().total_pages().saturating_sub(reserved)
+        st.kv.allocator().total_pages()
+            .saturating_sub(self.reserved_pages())
+    }
+
+    /// Pages currently reserved for admitted standard requests — the
+    /// admission side of the memory ledger. Exposed for the router's
+    /// probe-cache fingerprint ([`AdmissionDemand`]): together with the
+    /// queue contents, this pins everything [`admission_inputs`] reads.
+    ///
+    /// [`AdmissionDemand`]: crate::router::replica
+    /// [`admission_inputs`]: Self::admission_inputs
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved.values().sum()
     }
 
     /// Effective TPOT of a decoding request (nominal, tightened when it

@@ -433,6 +433,135 @@ pub fn fig_elastic(requests: usize) -> Vec<(String, f64, f64)> {
     out
 }
 
+/// Chaos figure (PR-6, beyond the paper): attainment and recovery under
+/// injected replica failures on the bursty Mixed trace. The headline: a
+/// scripted crash of replica 0 at the middle of the burst window, run
+/// over a static 2-replica pool (capacity stays lost) and an elastic
+/// 1..4 pool (reactive and predictive) whose emergency respawn restores
+/// it after one warm-up. A second block sweeps a seeded Poisson crash
+/// rate. Every fault timeline is a pure function of the fault seed, so
+/// two invocations print bit-identical output.
+/// Returns `(label, attainment, replica_seconds)` rows.
+pub fn fig_chaos(requests: usize) -> Vec<(String, f64, f64)> {
+    use crate::config::{AutoscalerConfig, FaultConfig};
+    use crate::metrics::window_attainment;
+    use crate::router::ScaleKind;
+    println!("# Chaos — bursty Mixed trace (middle third at 4x rate), \
+              replica 0 crashed mid-burst, burst-aware routing");
+    let n = requests.max(120);
+    let mk = || {
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(1.5)
+            .with_requests(n)
+            .with_seed(42);
+        let mut wl = workload::generate(&cfg);
+        workload::compress_middle_third(&mut wl, 4.0);
+        (cfg, wl)
+    };
+    let (burst_t0, burst_t1) = workload::burst_window(&mk().1);
+    let t_crash = 0.5 * (burst_t0 + burst_t1);
+    println!("burst window [{burst_t0:.2}s, {burst_t1:.2}s], crash at \
+              {t_crash:.2}s");
+    // Recovery time: the crash kills capacity at t_f; it is back the
+    // first time a replica activates after t_f (the emergency respawn
+    // finishing its warm-up). Static pools never recover.
+    let recovery = |res: &crate::router::MultiReplicaResult| -> Option<f64> {
+        let t_f = res
+            .scale_timeline
+            .iter()
+            .find(|e| e.kind == ScaleKind::Failed)
+            .map(|e| e.t)?;
+        res.scale_timeline
+            .iter()
+            .find(|e| e.kind == ScaleKind::Activated && e.t > t_f)
+            .map(|e| e.t - t_f)
+    };
+    let mut out = Vec::new();
+    let faults = || FaultConfig::default().crash_at(0, t_crash);
+    // Reference: the same static pool with nothing injected.
+    {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2).with_policy(RoutePolicy::BurstAware);
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("static-2 (no fault)  attainment {:5.1}%  (burst {:5.1}%)  \
+                  replica-seconds {:7.1}",
+                 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.replica_seconds);
+        out.push(("static-2-clean".to_string(), res.metrics.attainment(),
+                  res.replica_seconds));
+    }
+    {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_faults(faults());
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        println!("static-2 + crash     attainment {:5.1}%  (burst {:5.1}%)  \
+                  replica-seconds {:7.1}  crashes {}  requeued {}  \
+                  handoffs {}  recovery n/a",
+                 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.replica_seconds, res.crashes, res.crash_requeued,
+                 res.crash_handoffs);
+        out.push(("static-2-crash".to_string(), res.metrics.attainment(),
+                  res.replica_seconds));
+    }
+    for (label, predictive) in
+        [("elastic-reactive", false), ("elastic-predictive", true)]
+    {
+        let (cfg, wl) = mk();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(
+                AutoscalerConfig::new(1, 4).with_predictive(predictive))
+            .with_faults(faults());
+        let res = run_multi_replica(wl, &cfg, &rcfg);
+        let rec = recovery(&res)
+            .map(|s| format!("{s:.2}s"))
+            .unwrap_or_else(|| "n/a".to_string());
+        println!("{label:18}  attainment {:5.1}%  (burst {:5.1}%)  \
+                  replica-seconds {:7.1}  crashes {}  requeued {}  \
+                  handoffs {}  peak {}  recovery {}",
+                 100.0 * res.metrics.attainment(),
+                 100.0 * window_attainment(&res.requests, burst_t0, burst_t1),
+                 res.replica_seconds, res.crashes, res.crash_requeued,
+                 res.crash_handoffs, res.peak_replicas, rec);
+        for e in &res.scale_timeline {
+            println!("  t {:7.2}s  {:?} replica {} -> {} active",
+                     e.t, e.kind, e.replica, e.active);
+        }
+        out.push((label.to_string(), res.metrics.attainment(),
+                  res.replica_seconds));
+    }
+    // Poisson sweep: seeded random crashes at increasing rates, static
+    // vs elastic-predictive. Attainment degrades gracefully for the
+    // elastic pool; the static pool bleeds capacity with every crash.
+    println!("# crash-rate sweep (seeded Poisson, per-replica rate/s)");
+    for &rate in &[0.002f64, 0.005, 0.01] {
+        for (label, elastic) in [("static-2", false), ("elastic", true)] {
+            let (cfg, wl) = mk();
+            let mut rcfg = RouterConfig::new(2)
+                .with_policy(RoutePolicy::BurstAware)
+                .with_faults(FaultConfig::default()
+                             .with_seed(7)
+                             .with_crash_rate(rate));
+            if elastic {
+                rcfg = rcfg.with_autoscaler(
+                    AutoscalerConfig::new(1, 4).with_predictive(true));
+            }
+            let res = run_multi_replica(wl, &cfg, &rcfg);
+            println!("rate {rate:5.3}  {label:9}  attainment {:5.1}%  \
+                      crashes {}  replica-seconds {:7.1}",
+                     100.0 * res.metrics.attainment(), res.crashes,
+                     res.replica_seconds);
+            out.push((format!("{label}-rate{rate}"),
+                      res.metrics.attainment(), res.replica_seconds));
+        }
+    }
+    out
+}
+
 /// Fig. 14 — ablation: remove routing / speculation / burst resilience /
 /// everything (prefill-oriented baseline).
 pub fn fig14_ablation(requests: usize, scenarios: &[Scenario])
@@ -551,6 +680,9 @@ pub fn run_figure(id: &str, requests: usize) -> Result<(), String> {
         }
         "elastic" => {
             fig_elastic(requests);
+        }
+        "chaos" => {
+            fig_chaos(requests);
         }
         other => return Err(format!("unknown figure {other}")),
     }

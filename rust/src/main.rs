@@ -5,8 +5,9 @@
 //!                     [--requests N] [--replicas K] [--route-policy RP]
 //!                     [--autoscale] [--min-replicas A] [--max-replicas B]
 //!                     [--reactive] [--no-handoff] [--seed X]
+//!                     [--faults SPEC] [--fault-seed Y]
 //! slos-serve capacity [--scenario S] [--requests N]
-//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic>
+//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos>
 //!                     [--requests N]
 //! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
 //! ```
@@ -17,7 +18,8 @@
 use std::collections::HashMap;
 
 use slos_serve::baselines;
-use slos_serve::config::{AutoscalerConfig, Scenario, ScenarioConfig};
+use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
+                         ScenarioConfig};
 use slos_serve::figures::make_policy;
 use slos_serve::metrics::capacity_search;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
@@ -73,8 +75,9 @@ const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
            --route-policy RP --seed X
            [--autoscale --min-replicas A --max-replicas B]
            [--reactive] [--no-handoff]
+           [--faults SPEC] [--fault-seed Y]
   capacity --scenario S --requests N
-  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic> --requests N
+  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos> --requests N
   trace    --scenario S --rate R --requests N [--stats]
 scenarios:      chatbot coder summarizer mixed toolllm reasoning
 policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
@@ -82,7 +85,13 @@ route policies: round-robin least-load slo-feasibility burst-aware
 autoscale:      elastic replica pool between --min-replicas and
                 --max-replicas (attainment-driven; see figure elastic).
                 --reactive disables the predictive scale-up trigger,
-                --no-handoff disables the draining-replica KV handoff";
+                --no-handoff disables the draining-replica KV handoff
+faults:         seed-deterministic fault injection (see figure chaos);
+                SPEC is comma-separated: rate=R (Poisson crashes/s per
+                replica), slowrate=R, slowfactor=F, slowsecs=S,
+                horizon=T, crash:SLOT@T, slow:SLOT@T. --fault-seed
+                reseeds the schedules. Runs route through the
+                multi-replica path even with --replicas 1";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -107,12 +116,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 .with_seed(args.get("seed", 0));
             let replicas: usize = args.get("replicas", 1);
             let autoscale = args.bool("autoscale");
+            let faults = match args.flags.get("faults") {
+                Some(spec) => {
+                    let mut f = FaultConfig::parse(spec)?;
+                    if let Some(seed) = args.flags.get("fault-seed") {
+                        f = f.with_seed(
+                            seed.parse().map_err(|_| {
+                                format!("bad --fault-seed {seed}")
+                            })?);
+                    }
+                    Some(f)
+                }
+                None => None,
+            };
             let wl = workload::generate(&cfg);
-            if replicas > 1 || autoscale {
+            if replicas > 1 || autoscale || faults.is_some() {
                 let rp = args.str("route-policy", "slo-feasibility");
                 let rp = RoutePolicy::parse(&rp)
                     .ok_or_else(|| format!("unknown route policy {rp}"))?;
                 let mut rcfg = RouterConfig::new(replicas).with_policy(rp);
+                if let Some(f) = faults.clone() {
+                    rcfg = rcfg.with_faults(f);
+                }
                 if autoscale {
                     let min: usize = args.get("min-replicas", 1);
                     let max: usize =
@@ -137,6 +162,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                              res.peak_replicas, res.replica_seconds,
                              res.scale_timeline.len(), res.drain_requeued,
                              res.drain_handoffs);
+                }
+                if faults.is_some() {
+                    println!("faults: crashes {} | crash-requeued {} | \
+                              crash-handoffs {}",
+                             res.crashes, res.crash_requeued,
+                             res.crash_handoffs);
+                    for e in &res.scale_timeline {
+                        println!("  t {:7.2}s  {:?} replica {} -> {} active",
+                                 e.t, e.kind, e.replica, e.active);
+                    }
                 }
             } else {
                 let mut p = make_policy(&policy, &cfg);

@@ -38,8 +38,20 @@
 //! so the replica turns Active right around the time the reactive rule
 //! would only have started warming it. All the hysteresis (cooldown,
 //! window consumption, pool bounds) is shared with the reactive rule.
+//!
+//! **Crash handling** (PR-6): a replica loss is *instant spawn demand*
+//! — [`Autoscaler::record_crash`] + [`Autoscaler::may_emergency_spawn`]
+//! let the balancer respawn a replacement immediately, bypassing the
+//! refusal window and the cooldown (only the `max_replicas` bound
+//! holds), without touching the load-driven controller's own cadence.
+//! The **flap circuit breaker** tempers that: `flap_crashes` crashes of
+//! the same fault-schedule slot within `flap_window` quarantine the
+//! slot for `quarantine_secs` — replacements then spawn into a fresh
+//! slot (fresh fault schedule) instead of back onto the flapping one,
+//! so a persistently bad "machine" stops eating respawns while the
+//! pool still recovers toward `min_replicas`.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::AutoscalerConfig;
 
@@ -69,6 +81,21 @@ pub enum ScaleKind {
     DrainCancel,
     /// A replica finished draining and left the pool.
     Drained,
+    /// A replica crashed (fault injection, PR-6): KV gone, queues
+    /// evacuated by the crash outflow, terminal.
+    Failed,
+    /// An emergency replacement spawned `Warming` for a crashed
+    /// replica — cooldown-free, no refusal evidence needed. The event's
+    /// `replica` is the *new* index; it inherits the dead replica's
+    /// fault-schedule slot unless that slot is quarantined.
+    Respawned,
+    /// The flap circuit breaker tripped: the crashed replica's slot is
+    /// quarantined for `quarantine_secs` — replacements spawn into a
+    /// fresh slot instead of back onto the flapping one.
+    Quarantined,
+    /// A transient-slowdown fault began on a live replica (it stays
+    /// routable; only realized batch times stretch).
+    Slowdown,
 }
 
 /// Scaling decision for one tick.
@@ -107,6 +134,12 @@ pub struct Autoscaler {
     /// so the pair yields both the current rate and its slope.
     count_fast: f64,
     count_slow: f64,
+    /// Crash instants per fault-schedule *slot* (flap circuit breaker).
+    /// `BTreeMap` for deterministic iteration — chaos runs must stay
+    /// bit-reproducible.
+    crash_times: BTreeMap<usize, Vec<f64>>,
+    /// Slots the circuit breaker quarantined, with release times.
+    quarantined_until: BTreeMap<usize, f64>,
 }
 
 impl Autoscaler {
@@ -120,6 +153,8 @@ impl Autoscaler {
             last_arrival: None,
             count_fast: 0.0,
             count_slow: 0.0,
+            crash_times: BTreeMap::new(),
+            quarantined_until: BTreeMap::new(),
         }
     }
 
@@ -204,6 +239,39 @@ impl Autoscaler {
     /// Is the controller still inside the post-action cooldown?
     pub fn in_cooldown(&self, now: f64) -> bool {
         now - self.last_action < self.cfg.cooldown
+    }
+
+    /// Record a crash of fault-schedule `slot` at `now` and run the
+    /// flap circuit breaker: returns `true` (and quarantines the slot)
+    /// when this is the `flap_crashes`-th crash inside `flap_window`.
+    /// A crash is *instant spawn demand* — it does not consume refusal
+    /// evidence and deliberately does not touch `last_action`: the
+    /// emergency-respawn path bypasses the hysteresis (a burst of
+    /// simultaneous crashes must respawn every victim), while regular
+    /// load-driven scaling keeps its own cadence undisturbed.
+    pub fn record_crash(&mut self, slot: usize, now: f64) -> bool {
+        let times = self.crash_times.entry(slot).or_default();
+        times.retain(|&t| t > now - self.cfg.flap_window);
+        times.push(now);
+        if times.len() >= self.cfg.flap_crashes {
+            self.quarantined_until
+                .insert(slot, now + self.cfg.quarantine_secs);
+            times.clear();
+            return true;
+        }
+        false
+    }
+
+    /// Is `slot` still inside a quarantine backoff at `now`?
+    pub fn is_quarantined(&self, slot: usize, now: f64) -> bool {
+        self.quarantined_until.get(&slot).map_or(false, |&u| now < u)
+    }
+
+    /// May an emergency replacement spawn right now? Crashes bypass the
+    /// refusal window and the cooldown, but never the hard pool bound.
+    pub fn may_emergency_spawn(&self, counts: PoolCounts) -> bool {
+        counts.active + counts.warming + counts.draining
+            < self.cfg.max_replicas
     }
 
     /// One controller tick at simulated time `now`. Pure over
@@ -526,5 +594,55 @@ mod tests {
         // 10 s later everything aged out.
         a.record_arrival(10.0, false);
         assert_eq!(a.refusal_rate(), 0.0);
+    }
+
+    #[test]
+    fn flap_breaker_trips_at_threshold_within_window_only() {
+        let c = AutoscalerConfig {
+            flap_crashes: 3,
+            flap_window: 10.0,
+            quarantine_secs: 30.0,
+            ..cfg()
+        };
+        // Crashes spread wider than the window never trip.
+        let mut a = Autoscaler::new(c);
+        assert!(!a.record_crash(0, 0.0));
+        assert!(!a.record_crash(0, 11.0));
+        assert!(!a.record_crash(0, 22.0));
+        assert!(!a.is_quarantined(0, 22.0));
+        // Three inside one window trip the breaker...
+        let mut b = Autoscaler::new(c);
+        assert!(!b.record_crash(5, 100.0));
+        assert!(!b.record_crash(5, 103.0));
+        assert!(b.record_crash(5, 106.0), "third crash in 6 s must trip");
+        assert!(b.is_quarantined(5, 106.0));
+        assert!(b.is_quarantined(5, 135.9));
+        // ...and the quarantine expires.
+        assert!(!b.is_quarantined(5, 136.0));
+        // Other slots are unaffected.
+        assert!(!b.is_quarantined(0, 110.0));
+    }
+
+    #[test]
+    fn emergency_spawn_bypasses_hysteresis_but_not_the_bound() {
+        let mut a = Autoscaler::new(cfg());
+        // Deep inside a cooldown...
+        for i in 0..6 {
+            a.record_arrival(0.1 * i as f64, true);
+        }
+        assert_eq!(a.decide(1.0, counts(1), || 50.0), ScaleDecision::Up);
+        assert!(a.in_cooldown(1.5));
+        // ...a crash may still respawn (no refusal evidence either).
+        assert!(a.may_emergency_spawn(counts(2)));
+        assert!(!a.record_crash(1, 1.5));
+        assert!(a.may_emergency_spawn(counts(1)));
+        // The hard bound always holds (warming + draining count).
+        assert!(!a.may_emergency_spawn(counts(4)));
+        assert!(!a.may_emergency_spawn(
+            PoolCounts { active: 2, warming: 1, draining: 1 }));
+        // record_crash leaves the load-driven cadence untouched.
+        let last_action_preserved = a.in_cooldown(1.5);
+        assert!(last_action_preserved,
+                "crash recording must not reset the cooldown clock");
     }
 }

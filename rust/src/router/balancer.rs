@@ -20,14 +20,28 @@
 //! handoff) so retirement never waits out a long decode.
 //! `MultiReplicaResult` then carries the scaling timeline and the
 //! replica-seconds actually consumed.
+//!
+//! With a [`FaultConfig`](crate::config::FaultConfig) in the
+//! [`RouterConfig`] the loop also **injects faults** at pool time (the
+//! monotone min-clock, so two same-seed runs fire bit-identical
+//! timelines): a crash flips the victim to `Failed`, evacuates its
+//! queues through [`migration::crash_outflow`], and — in an elastic
+//! pool — emergency-respawns a replacement immediately (cooldown-free;
+//! see the autoscaler's flap circuit breaker for the quarantine path).
+//! The loop routes *around* dead replicas: arrivals wait (their SLO
+//! deadlines stay anchored at their true arrival times) while no
+//! replica is routable, and every exit — horizon, dead pool — flows
+//! through the deliver-or-report `finish` path, so crashed work is
+//! reported unfinished, never silently dropped.
 
 use std::collections::HashSet;
 
-use crate::config::ScenarioConfig;
+use crate::config::{FaultKind, ScenarioConfig};
 use crate::coordinator::request::{Request, RequestId};
 use crate::metrics::{collect, RunMetrics};
 use crate::router::autoscaler::{Autoscaler, PoolCounts, ScaleDecision,
                                 ScaleEvent, ScaleKind};
+use crate::router::chaos::FaultPlan;
 use crate::router::migration;
 use crate::router::policy::{self, RoutePolicy};
 use crate::router::replica::{scaled_probe_cache_cap, ReplicaHandle,
@@ -65,6 +79,19 @@ pub struct MultiReplicaResult {
     pub drain_handoffs: usize,
     /// Maximum simultaneously live (non-`Drained`) replicas.
     pub peak_replicas: usize,
+    /// Replica crashes injected over the run (fault injection, PR-6).
+    pub crashes: usize,
+    /// Unstarted requests the crash outflow re-queued off `Failed`
+    /// replicas (standard tier, like a drain re-queue).
+    pub crash_requeued: usize,
+    /// Started requests the crash outflow demoted to best-effort and
+    /// shipped as full recompute debt (their KV died with the replica).
+    /// Reconciliation invariant (asserted by the chaos tests): summing
+    /// the per-request counters over `requests`,
+    /// Σ `drain_requeues` == `drain_requeued` + `crash_requeued` +
+    /// `crash_handoffs`, and Σ `kv_handoffs` == `drain_handoffs` +
+    /// `crash_handoffs`.
+    pub crash_handoffs: usize,
 }
 
 /// The central router: replicas + dispatch state.
@@ -83,6 +110,11 @@ pub struct Router {
     drain_requeued: usize,
     drain_handoffs: usize,
     peak_replicas: usize,
+    /// Seed-deterministic fault schedule, consumed at pool time.
+    faults: Option<FaultPlan>,
+    crashes: usize,
+    crash_requeued: usize,
+    crash_handoffs: usize,
     /// Test hook: replaces the derived safety horizon so the
     /// horizon-tripped exit path (deliver-or-report conservation) is
     /// exercisable without hour-long workloads.
@@ -120,6 +152,10 @@ impl Router {
             drain_requeued: 0,
             drain_handoffs: 0,
             peak_replicas,
+            faults: rcfg.faults.clone().map(FaultPlan::new),
+            crashes: 0,
+            crash_requeued: 0,
+            crash_handoffs: 0,
             horizon_override: None,
         }
     }
@@ -156,7 +192,12 @@ impl Router {
                 })
                 .map(|(i, _)| i)
             else {
-                break; // unreachable: the pool keeps >= 1 Active replica
+                // Reachable since PR-6: fault injection can kill every
+                // replica (`Failed` is live:false, like `Drained`), and a
+                // fixed pool has no autoscaler to respawn one. Fall
+                // through to the deliver-or-report `finish` below so the
+                // stranded work is counted, not dropped.
+                break;
             };
             let now = self.replicas[r].clock;
             if now > horizon {
@@ -170,8 +211,23 @@ impl Router {
                 self.event(now, ScaleKind::Activated, r);
             }
 
-            // Route and deliver every arrival due by the lagging clock.
-            while next_arrival < total
+            // Fire every scheduled fault due by pool time. The selected
+            // replica itself may crash here — re-select rather than step
+            // a corpse.
+            self.inject_faults(now);
+            if !self.replicas[r].is_live() {
+                continue;
+            }
+
+            // Route and deliver every arrival due by the lagging clock —
+            // but only while somewhere routable exists. With zero
+            // routable replicas (e.g. the whole pool just crashed and a
+            // respawn is still warming) arrivals wait in the workload;
+            // their SLO deadlines stay anchored at their true arrival
+            // times, so the wait is paid honestly in the metrics.
+            let routable = self.replicas.iter().any(|h| h.is_routable());
+            while routable
+                && next_arrival < total
                 && workload[next_arrival].arrival <= now
             {
                 let req = workload[next_arrival].clone();
@@ -201,9 +257,13 @@ impl Router {
             if self.replicas[r].step() {
                 finished = self.replicas.iter().map(|h| h.finished).sum();
             } else {
-                // Idle: jump to the next interesting instant.
+                // Idle: jump to the next interesting instant. An
+                // arrival is only an event if someone could route it —
+                // with zero routable replicas, jumping to it would crawl
+                // the clock forward 1e-6 at a time; instead jump to the
+                // next live clock (e.g. a respawn's `ready_at`).
                 let mut next = f64::INFINITY;
-                if next_arrival < total {
+                if routable && next_arrival < total {
                     next = next.min(workload[next_arrival].arrival);
                 }
                 for (j, h) in self.replicas.iter().enumerate() {
@@ -312,6 +372,119 @@ impl Router {
         }
     }
 
+    /// Fire every scheduled fault due by pool time `now`. Faults are
+    /// keyed by *slot* (not index), so a respawn-in-place inherits the
+    /// remainder of its predecessor's schedule and the timeline stays a
+    /// pure function of the fault seed. Pool time is the loop's
+    /// monotone min-clock, so two same-seed runs fire bit-identical
+    /// fault sequences.
+    fn inject_faults(&mut self, now: f64) {
+        if self.faults.is_none() {
+            return;
+        }
+        // Collect first: applying a crash mutates the pool (respawn
+        // pushes a replica) and needs `&mut self` whole.
+        let mut due: Vec<(usize, FaultKind)> = Vec::new();
+        for j in 0..self.replicas.len() {
+            if !self.replicas[j].is_live() {
+                continue;
+            }
+            let slot = self.replicas[j].slot;
+            let plan = self.faults.as_mut().unwrap();
+            for f in plan.due(slot, now) {
+                due.push((j, f.kind));
+            }
+        }
+        for (j, kind) in due {
+            if !self.replicas[j].is_live() {
+                continue; // already killed earlier in this batch
+            }
+            match kind {
+                FaultKind::Crash => self.crash(j, now),
+                FaultKind::Slowdown => {
+                    let cfg = &self.faults.as_ref().unwrap().cfg;
+                    let (until, factor) =
+                        (now + cfg.slowdown_secs, cfg.slowdown_factor);
+                    self.replicas[j].apply_slowdown(until, factor);
+                    self.event(now, ScaleKind::Slowdown, j);
+                }
+            }
+        }
+    }
+
+    /// Kill replica `j` at pool time `now`: flip it to `Failed` (its KV
+    /// dies with it), emergency-respawn a replacement if the autoscaler
+    /// allows, then evacuate the corpse's queues. The respawn happens
+    /// *before* the evacuation so `crash_outflow` can park work on the
+    /// fresh Warming replica when no Active peer survives.
+    fn crash(&mut self, j: usize, now: f64) {
+        self.replicas[j].fail(now);
+        self.crashes += 1;
+        self.event(now, ScaleKind::Failed, j);
+        if self.autoscaler.is_some() {
+            let slot = self.replicas[j].slot;
+            // Flap circuit breaker: repeated crashes of one slot within
+            // the window quarantine it — its replacement gets a fresh
+            // slot (fresh fault schedule, default hardware override)
+            // instead of inheriting the flapping one.
+            let tripped =
+                self.autoscaler.as_mut().unwrap().record_crash(slot, now);
+            if tripped {
+                self.event(now, ScaleKind::Quarantined, j);
+            }
+            let (mut active, mut warming, mut draining) = (0usize, 0, 0);
+            for h in &self.replicas {
+                match h.lifecycle {
+                    ReplicaState::Active => active += 1,
+                    ReplicaState::Warming => warming += 1,
+                    ReplicaState::Draining => draining += 1,
+                    ReplicaState::Drained | ReplicaState::Failed => {}
+                }
+            }
+            let counts = PoolCounts { active, warming, draining };
+            let a = self.autoscaler.as_ref().unwrap();
+            // A crash is not a load signal to deliberate over — the
+            // capacity is already gone. Spawn immediately, bypassing the
+            // refusal-evidence window and the cooldown (neither is
+            // consumed: `record_crash` leaves `last_action` untouched).
+            // Only the hard pool bound still applies.
+            if a.may_emergency_spawn(counts) {
+                let warmup = a.cfg.warmup_seconds;
+                let id = self.replicas.len();
+                let respawn_slot = if a.is_quarantined(slot, now) {
+                    id // fresh slot: fresh schedule, no inherited faults
+                } else {
+                    slot // respawn-in-place continues the slot's schedule
+                };
+                if let Some(plan) = self.faults.as_mut() {
+                    plan.discard_before(respawn_slot, now);
+                }
+                let mut h = ReplicaHandle::warming(
+                    id, &self.scenario, self.cfg.features,
+                    self.cfg.overrides.get(respawn_slot), now, warmup);
+                h.slot = respawn_slot;
+                self.replicas.push(h);
+                self.event(now, ScaleKind::Respawned, id);
+            }
+        }
+        // Evacuate: unstarted work re-queues at its own tier; started
+        // work lost its KV and moves as best-effort recompute debt.
+        for m in migration::crash_outflow(&mut self.replicas, j) {
+            self.rerouted.insert(m.id);
+            if m.handoff {
+                self.crash_handoffs += 1;
+            } else {
+                self.crash_requeued += 1;
+            }
+        }
+        // Probe-cache capacity follows the live pool in both directions.
+        let live = self.replicas.iter().filter(|h| h.is_live()).count();
+        let cap = scaled_probe_cache_cap(live.max(1));
+        for h in &mut self.replicas {
+            h.set_probe_cache_cap(cap);
+        }
+    }
+
     /// One autoscaler tick at pool time `now`: read the pool signal,
     /// apply at most one scaling action.
     fn autoscale(&mut self, now: f64) {
@@ -321,7 +494,7 @@ impl Router {
                 ReplicaState::Active => active += 1,
                 ReplicaState::Warming => warming += 1,
                 ReplicaState::Draining => draining += 1,
-                ReplicaState::Drained => {}
+                ReplicaState::Drained | ReplicaState::Failed => {}
             }
         }
         let counts = PoolCounts { active, warming, draining };
@@ -356,6 +529,13 @@ impl Router {
                 let warmup =
                     self.autoscaler.as_ref().unwrap().cfg.warmup_seconds;
                 let id = self.replicas.len();
+                // A fresh id is a fresh fault slot whose schedule starts
+                // at t = 0 — drop the pre-spawn prefix or the new
+                // replica would absorb a backlog of stale faults the
+                // instant it activates.
+                if let Some(plan) = self.faults.as_mut() {
+                    plan.discard_before(id, now);
+                }
                 self.replicas.push(ReplicaHandle::warming(
                     id, &self.scenario, self.cfg.features,
                     self.cfg.overrides.get(id), now, warmup));
@@ -460,6 +640,9 @@ impl Router {
             drain_requeued,
             drain_handoffs,
             peak_replicas,
+            crashes,
+            crash_requeued,
+            crash_handoffs,
             ..
         } = self;
         let per_replica_finished: Vec<usize> =
@@ -500,6 +683,9 @@ impl Router {
             drain_requeued,
             drain_handoffs,
             peak_replicas,
+            crashes,
+            crash_requeued,
+            crash_handoffs,
         }
     }
 }
@@ -825,5 +1011,78 @@ mod tests {
             .count();
         assert_eq!(holders, 1);
         assert!(!router.replicas[1].state.requests.contains_key(&7));
+    }
+
+    #[test]
+    fn dead_pool_mid_burst_reports_every_request() {
+        use crate::config::FaultConfig;
+        // Kill the ENTIRE fixed pool mid-burst (no autoscaler, so no
+        // respawn). Before PR-6 the `break` on an empty live set was
+        // annotated unreachable; now it is the main exit for this run,
+        // and it must flow through deliver-or-report: every request —
+        // delivered, in flight on a corpse, or never delivered — shows
+        // up in the result exactly once, as finished or unfinished.
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| req(i, 0.1 * i as f64, 1200, 40))
+            .collect();
+        let c = cfg();
+        let faults = FaultConfig::default().crash_at(0, 1.7).crash_at(1, 1.9);
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_faults(faults);
+        let res = run_multi_replica(reqs, &c, &rcfg);
+
+        assert_eq!(res.crashes, 2);
+        assert_eq!(res.requests.len(), 40, "requests lost on dead-pool exit");
+        let mut ids: Vec<u64> = res.requests.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "duplicate ids in the report");
+        assert_eq!(res.metrics.total, 40);
+        assert!(res.metrics.finished < 40,
+                "a pool dead at 1.9 s cannot finish a 4 s burst");
+        let failed = res
+            .scale_timeline
+            .iter()
+            .filter(|e| e.kind == ScaleKind::Failed)
+            .count();
+        assert_eq!(failed, 2, "timeline {:?}", res.scale_timeline);
+        // The final crash leaves zero routable replicas on record.
+        assert_eq!(res.scale_timeline.last().unwrap().active, 0);
+    }
+
+    #[test]
+    fn crash_counters_reconcile_with_per_request_counters() {
+        use crate::config::{AutoscalerConfig, FaultConfig};
+        // One mid-burst crash in an elastic pool: the pool-level crash
+        // counters must reconcile exactly with the per-request
+        // drain_requeues / kv_handoffs sums (crash moves and graceful
+        // drain moves share the per-request counters).
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, 0.15 * i as f64, 1500, 30))
+            .collect();
+        let c = cfg();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(AutoscalerConfig::new(1, 3))
+            .with_faults(FaultConfig::default().crash_at(0, 1.3));
+        let res = run_multi_replica(reqs, &c, &rcfg);
+
+        assert_eq!(res.crashes, 1);
+        assert_eq!(res.metrics.finished, 30,
+                   "a 2-replica pool with a respawn finishes the load: {:?}",
+                   res.metrics);
+        let req_requeues: usize =
+            res.requests.iter().map(|r| r.drain_requeues).sum();
+        let req_handoffs: usize =
+            res.requests.iter().map(|r| r.kv_handoffs).sum();
+        assert_eq!(req_requeues,
+                   res.drain_requeued + res.crash_requeued
+                       + res.crash_handoffs,
+                   "requeue ledger out of balance");
+        assert_eq!(req_handoffs, res.drain_handoffs + res.crash_handoffs,
+                   "handoff ledger out of balance");
+        assert!(res.scale_timeline.iter().any(|e| {
+            e.kind == ScaleKind::Failed
+        }));
     }
 }

@@ -1,0 +1,202 @@
+//! Seeded fault injection for the elastic pool (PR-6): deterministic
+//! per-slot crash / transient-slowdown schedules the balancer applies
+//! from its event loop at pool time.
+//!
+//! Determinism is the design constraint. Every schedule is a pure
+//! function of `(FaultConfig::seed, slot)` — generated lazily on first
+//! touch and memoized, so *when* a slot is first asked about cannot
+//! change what happens to it, and two runs with the same `FaultConfig`
+//! see bit-identical fault timelines no matter how the pool flexes.
+//!
+//! Schedules are keyed by **slot**, not replica id. A crash-respawn in
+//! place inherits the dead replica's slot, and therefore the unplayed
+//! remainder of its schedule — that is what makes a scripted flap keep
+//! flapping through respawns until the autoscaler's circuit breaker
+//! quarantines the slot. A quarantined slot's replacement gets a fresh
+//! slot (= its replica id) and hence a fresh, independent schedule;
+//! [`FaultPlan::discard_before`] drops the fresh schedule's pre-spawn
+//! prefix so a late-spawned replica is not hit by a barrage of faults
+//! scheduled before it existed.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::{FaultConfig, FaultKind};
+use crate::workload::rng::Rng;
+
+/// One pending fault on a slot's schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// Pool time (seconds) the fault fires.
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// Lazily materialized per-slot fault schedules. The balancer owns one
+/// and drains it via [`due`](FaultPlan::due) each event-loop round.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub cfg: FaultConfig,
+    schedules: BTreeMap<usize, VecDeque<Fault>>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> Self {
+        FaultPlan { cfg, schedules: BTreeMap::new() }
+    }
+
+    /// Pure schedule generation for `slot`: two independent Poisson
+    /// streams (crashes, then slowdowns) out to `cfg.horizon` from a
+    /// slot-keyed RNG, merged with the scripted faults for the slot,
+    /// sorted by time (crashes before slowdowns on exact ties — a dead
+    /// replica cannot also slow down).
+    fn generate(cfg: &FaultConfig, slot: usize) -> VecDeque<Fault> {
+        let mut rng = Rng::new(
+            cfg.seed
+                ^ (0xFA17_0000_u64 + slot as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut out: Vec<Fault> = Vec::new();
+        for (rate, kind) in [
+            (cfg.crash_rate, FaultKind::Crash),
+            (cfg.slowdown_rate, FaultKind::Slowdown),
+        ] {
+            if rate <= 0.0 {
+                continue;
+            }
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(rate);
+                if t > cfg.horizon {
+                    break;
+                }
+                out.push(Fault { t, kind });
+            }
+        }
+        out.extend(
+            cfg.scripted
+                .iter()
+                .filter(|f| f.slot == slot)
+                .map(|f| Fault { t: f.t, kind: f.kind }),
+        );
+        out.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t)
+                .unwrap()
+                .then_with(|| rank(a.kind).cmp(&rank(b.kind)))
+        });
+        out.into()
+    }
+
+    fn schedule(&mut self, slot: usize) -> &mut VecDeque<Fault> {
+        let cfg = &self.cfg;
+        self.schedules
+            .entry(slot)
+            .or_insert_with(|| Self::generate(cfg, slot))
+    }
+
+    /// Pop every fault on `slot`'s schedule due at or before `now`,
+    /// in schedule order.
+    pub fn due(&mut self, slot: usize, now: f64) -> Vec<Fault> {
+        let sched = self.schedule(slot);
+        let mut fired = Vec::new();
+        while sched.front().map_or(false, |f| f.t <= now) {
+            fired.push(sched.pop_front().unwrap());
+        }
+        fired
+    }
+
+    /// Drop `slot`'s faults scheduled strictly before `t` — called when
+    /// a replica spawns into the slot at pool time `t`, so the schedule
+    /// prefix from before the replica existed never fires.
+    pub fn discard_before(&mut self, slot: usize, t: f64) {
+        let sched = self.schedule(slot);
+        while sched.front().map_or(false, |f| f.t < t) {
+            sched.pop_front();
+        }
+    }
+}
+
+fn rank(k: FaultKind) -> u8 {
+    match k {
+        FaultKind::Crash => 0,
+        FaultKind::Slowdown => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultConfig;
+
+    fn noisy() -> FaultConfig {
+        FaultConfig::default()
+            .with_crash_rate(0.05)
+            .with_slowdown_rate(0.1)
+            .with_seed(99)
+    }
+
+    #[test]
+    fn schedules_are_pure_functions_of_seed_and_slot() {
+        // Access order must not matter: touch slots in opposite orders
+        // and interleave draining; the full schedules still agree.
+        let mut a = FaultPlan::new(noisy());
+        let mut b = FaultPlan::new(noisy());
+        let fa0 = a.due(0, f64::INFINITY);
+        let fa1 = a.due(1, f64::INFINITY);
+        let fb1 = b.due(1, f64::INFINITY);
+        let fb0 = b.due(0, f64::INFINITY);
+        assert_eq!(fa0, fb0);
+        assert_eq!(fa1, fb1);
+        assert!(!fa0.is_empty() && !fa1.is_empty());
+        assert_ne!(fa0, fa1, "slots get independent streams");
+    }
+
+    #[test]
+    fn zero_rates_yield_only_scripted_faults() {
+        let cfg = FaultConfig::default().crash_at(2, 5.0).slow_at(2, 1.0);
+        let mut plan = FaultPlan::new(cfg);
+        assert!(plan.due(0, f64::INFINITY).is_empty());
+        let f = plan.due(2, f64::INFINITY);
+        // Scripted faults come back time-sorted, not insertion-sorted.
+        assert_eq!(
+            f,
+            vec![
+                Fault { t: 1.0, kind: FaultKind::Slowdown },
+                Fault { t: 5.0, kind: FaultKind::Crash },
+            ]
+        );
+    }
+
+    #[test]
+    fn due_pops_only_elapsed_faults_in_order() {
+        let cfg =
+            FaultConfig::default().crash_at(0, 3.0).crash_at(0, 1.0);
+        let mut plan = FaultPlan::new(cfg);
+        assert!(plan.due(0, 0.5).is_empty());
+        let first = plan.due(0, 1.0);
+        assert_eq!(first, vec![Fault { t: 1.0, kind: FaultKind::Crash }]);
+        // Already-popped faults never replay.
+        assert!(plan.due(0, 1.0).is_empty());
+        assert_eq!(plan.due(0, 10.0).len(), 1);
+    }
+
+    #[test]
+    fn discard_before_drops_the_pre_spawn_prefix() {
+        let cfg = FaultConfig::default()
+            .crash_at(3, 1.0)
+            .crash_at(3, 2.0)
+            .crash_at(3, 4.0);
+        let mut plan = FaultPlan::new(cfg);
+        // Replica spawns into slot 3 at t=2.0: the t=1.0 fault is
+        // stale, the t=2.0 fault (>= spawn time) still fires.
+        plan.discard_before(3, 2.0);
+        let f = plan.due(3, 10.0);
+        assert_eq!(f.iter().map(|f| f.t).collect::<Vec<_>>(), [2.0, 4.0]);
+    }
+
+    #[test]
+    fn seeds_change_schedules() {
+        let mut a = FaultPlan::new(noisy());
+        let mut b = FaultPlan::new(noisy().with_seed(100));
+        assert_ne!(a.due(0, f64::INFINITY), b.due(0, f64::INFINITY));
+    }
+}

@@ -37,10 +37,27 @@
 //! best-effort tier ([`ReplicaHandle::accept_handoff`]) and are counted
 //! in `Request::kv_handoffs` on top of `drain_requeues`.
 //!
+//! **Crash outflow** ([`crash_outflow`]): when fault injection kills a
+//! replica (`Failed`), there is no graceful second pass — the KV is
+//! gone and nothing will ever run at the source again. Everything
+//! movable moves at once: unstarted work re-queues standard-tier
+//! exactly like the warm-down pass, while *started* work of **any**
+//! tier is demoted to best-effort and ships its full token progress as
+//! recompute debt (restart from token 0 — the §4.1 preemption path,
+//! stretched to its worst case). Demoting started standard work is the
+//! honest accounting: its admission guarantee was priced against the
+//! dead replica's reserved KV, which no longer exists, so the guarantee
+//! is gone with it. Crash moves reuse the `drain_requeues` /
+//! `kv_handoffs` per-request counters (the pool-level split is tracked
+//! separately by the balancer), and when no *routable* replica exists
+//! they fall back to any live one — a `Warming` emergency respawn can
+//! park evacuated work until it activates. Only a fully dead pool
+//! strands work on the corpse, where `finish` reports it unfinished.
+//!
 //! [`ServerState::is_unstarted`]: crate::sim::ServerState::is_unstarted
 
-use crate::coordinator::request::RequestId;
-use crate::router::replica::ReplicaHandle;
+use crate::coordinator::request::{RequestId, ServiceTier};
+use crate::router::replica::{ReplicaHandle, ReplicaState};
 
 /// One request the warm-down outflow moved off a `Draining` replica.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +179,93 @@ pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize,
         r.kv_handoffs += 1;
         replicas[dest].accept_handoff(r);
         moved.push(DrainMove { id, handoff: true });
+    }
+    moved
+}
+
+/// Last-resort destination when no replica is routable: the best *live*
+/// peer — `Active` first (shouldn't happen, routable would have won),
+/// then `Warming` (an emergency respawn parks the work until it
+/// activates), then `Draining`; least-loaded, then lowest index, within
+/// a class. `None` only when the pool is dead apart from `src`.
+fn fallback_dest(replicas: &[ReplicaHandle], src: usize) -> Option<usize> {
+    replicas
+        .iter()
+        .enumerate()
+        .filter(|(i, h)| *i != src && h.is_live())
+        .min_by_key(|(i, h)| {
+            let class = match h.lifecycle {
+                ReplicaState::Active => 0usize,
+                ReplicaState::Warming => 1,
+                _ => 2,
+            };
+            (class, h.outstanding_tokens(), *i)
+        })
+        .map(|(i, _)| i)
+}
+
+/// Evacuate the freshly `Failed` replica `src` (see the module docs):
+/// one pass over everything it held. Unstarted work re-queues standard
+/// tier; started work — any tier, the crash voided standard admission
+/// guarantees — demotes to best-effort and ships its whole token
+/// progress as recompute debt. Falls back to live non-routable peers
+/// when the pool has no `Active` replica; breaks (stranding the rest on
+/// the corpse for `finish` to report unfinished) only when `src` is the
+/// last live-ish replica standing.
+pub fn crash_outflow(replicas: &mut [ReplicaHandle], src: usize)
+                     -> Vec<DrainMove> {
+    debug_assert_eq!(replicas[src].lifecycle, ReplicaState::Failed);
+    let mut moved = Vec::new();
+    let mut queue: Vec<RequestId> = replicas[src].state.pending.clone();
+    queue.extend_from_slice(&replicas[src].state.running);
+    queue.extend_from_slice(&replicas[src].state.best_effort);
+    let any_routable = |replicas: &[ReplicaHandle], src: usize| {
+        replicas
+            .iter()
+            .enumerate()
+            .any(|(i, h)| i != src && h.is_routable())
+    };
+    for id in queue {
+        match replicas[src].state.requests.get(&id) {
+            None => continue,
+            Some(r) if r.is_finished() => continue,
+            Some(_) => {}
+        }
+        if replicas[src].state.is_unstarted(id) {
+            let probe_req = replicas[src].state.requests[&id].clone();
+            let dest = match crate::router::policy::best_probed(
+                &probe_req, replicas, Some(src))
+            {
+                // Any verdict will do: staying on a corpse is strictly
+                // worse than an infeasible (spillover) destination.
+                Some((dest, _)) => dest,
+                None => match fallback_dest(replicas, src) {
+                    Some(d) => d,
+                    None => break, // dead pool
+                },
+            };
+            let mut r =
+                replicas[src].extract(id).expect("unstarted implies present");
+            r.drain_requeues += 1;
+            replicas[dest].accept_rerouted(r);
+            moved.push(DrainMove { id, handoff: false });
+        } else {
+            let dest = if any_routable(replicas, src) {
+                crate::router::policy::least_loaded(replicas, Some(src))
+            } else {
+                match fallback_dest(replicas, src) {
+                    Some(d) => d,
+                    None => break, // dead pool
+                }
+            };
+            let mut r =
+                replicas[src].extract(id).expect("started implies present");
+            r.tier = ServiceTier::BestEffort;
+            r.drain_requeues += 1;
+            r.kv_handoffs += 1;
+            replicas[dest].accept_handoff(r);
+            moved.push(DrainMove { id, handoff: true });
+        }
     }
     moved
 }
@@ -327,5 +431,92 @@ mod tests {
         assert!(reps[0].state.requests.contains_key(&7),
                 "request waits out the drain when the pool has no Active \
                  replica to take it");
+    }
+
+    #[test]
+    fn crash_outflow_moves_everything_movable() {
+        let mut reps = handles(3);
+        // The victim holds: an unstarted pending request (1), a started
+        // *standard* request mid-prefill (2), and a started best-effort
+        // request (3).
+        reps[0].deliver(Request::simple(
+            1, 0.0, 500, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)));
+        reps[0].deliver(Request::simple(
+            2, 0.0, 400, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)));
+        reps[0].state.pending.retain(|&x| x != 2);
+        reps[0].state.running.push(2);
+        assert!(reps[0].state.kv.grow(2, 64));
+        reps[0].state.req_mut(2).advance_prefill(64, 0.01);
+        deferred_request(&mut reps[0], 3);
+        assert!(reps[0].state.kv.grow(3, 32));
+        reps[0].state.req_mut(3).advance_prefill(32, 0.01);
+
+        reps[0].fail(1.0);
+        let moved = crash_outflow(&mut reps, 0);
+        assert_eq!(moved.len(), 3, "no graceful second pass: all of it moves");
+        assert!(!reps[0].has_work(), "the corpse is empty");
+        // Unstarted work re-queues standard tier.
+        assert!(moved.contains(&DrainMove { id: 1, handoff: false }));
+        // Started work — including the *standard* request, whose
+        // admission guarantee died with the replica's KV — demotes to
+        // best-effort and restarts from token 0 as recompute debt.
+        assert!(moved.contains(&DrainMove { id: 2, handoff: true }));
+        assert!(moved.contains(&DrainMove { id: 3, handoff: true }));
+        for (id, debt) in [(2u64, 64), (3u64, 32)] {
+            let holder = reps
+                .iter()
+                .position(|h| h.state.requests.contains_key(&id))
+                .expect("must survive the crash");
+            assert_ne!(holder, 0);
+            let r = &reps[holder].state.requests[&id];
+            assert_eq!(r.tier, ServiceTier::BestEffort);
+            assert_eq!(r.recompute_pending, debt,
+                       "full token progress ships as debt");
+            assert_eq!((r.drain_requeues, r.kv_handoffs), (1, 1));
+        }
+        let r1 = reps
+            .iter()
+            .find_map(|h| h.state.requests.get(&1))
+            .expect("unstarted request survives");
+        assert_eq!(r1.tier, ServiceTier::Standard);
+        assert_eq!((r1.drain_requeues, r1.kv_handoffs), (1, 0));
+        assert!(crash_outflow(&mut reps, 0).is_empty(), "idempotent");
+    }
+
+    #[test]
+    fn crash_outflow_falls_back_to_a_warming_peer() {
+        let c = cfg();
+        let mut reps = vec![
+            ReplicaHandle::new(0, &c, None, None),
+            ReplicaHandle::warming(1, &c, None, None, 0.0, 2.0),
+        ];
+        reps[0].deliver(Request::simple(
+            1, 0.0, 300, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose)));
+        deferred_request(&mut reps[0], 2);
+        assert!(reps[0].state.kv.grow(2, 16));
+        reps[0].state.req_mut(2).advance_prefill(16, 0.01);
+        reps[0].fail(0.5);
+        // No routable replica — but the Warming emergency spawn parks
+        // the evacuated work until it activates.
+        let moved = crash_outflow(&mut reps, 0);
+        assert_eq!(moved.len(), 2);
+        assert!(reps[1].state.requests.contains_key(&1));
+        assert!(reps[1].state.requests.contains_key(&2));
+        assert!(reps[1].state.pending.contains(&1));
+        assert!(reps[1].state.best_effort.contains(&2));
+    }
+
+    #[test]
+    fn crash_outflow_on_a_dead_pool_strands_work_on_the_corpse() {
+        let mut reps = handles(2);
+        deferred_request(&mut reps[0], 7);
+        reps[1].fail(0.5);
+        reps[0].fail(1.0);
+        assert!(crash_outflow(&mut reps, 0).is_empty());
+        assert!(reps[0].state.requests.contains_key(&7),
+                "stranded work stays for finish() to report unfinished");
     }
 }

@@ -37,12 +37,20 @@
 //!   predictive trigger, as soon as the arrival-rate trend projects
 //!   that crossing within the warm-up lag — warm-down when the pool
 //!   idles, hysteresis in between (see
-//!   [`AutoscalerConfig`](crate::config::AutoscalerConfig)).
+//!   [`AutoscalerConfig`](crate::config::AutoscalerConfig)). Since PR-6
+//!   it also owns the crash side: cooldown-free emergency respawns and
+//!   the per-slot flap circuit breaker.
+//! * [`chaos`] — seed-deterministic fault injection: a
+//!   [`FaultConfig`](crate::config::FaultConfig) compiles into a
+//!   [`chaos::FaultPlan`] of per-*slot* crash/slowdown schedules that
+//!   the balancer fires at pool time, so a fault timeline is a pure
+//!   function of the fault seed and bit-reproducible across runs.
 //!
 //! # Replica lifecycle
 //!
 //! Every replica carries an explicit [`ReplicaState`]; a fixed pool's
-//! replicas simply stay `Active` for the whole run:
+//! replicas simply stay `Active` for the whole run (unless a fault
+//! plan crashes them):
 //!
 //! ```text
 //!                 pool clock           autoscaler Down
@@ -64,6 +72,28 @@
 //!       |                                has_work() == false    v
 //!       `------- new ReplicaHandle <-- [Drained]  <-- (retired_at set,
 //!                 (next scale-up)       leaves the event loop)
+//!
+//!   Fault injection (PR-6) adds an abrupt terminal state reachable
+//!   from ANY live state (Warming / Active / Draining):
+//!
+//!             scheduled crash fires at pool time
+//!   [ live ] ----------------------------------> [Failed]
+//!                                                   |  retired_at set;
+//!                                                   |  KV dies with it
+//!                  crash_outflow: unstarted work    v
+//!              re-queues at its own tier; started  (leaves the
+//!              work (any tier) moves as best-      event loop)
+//!              effort full-recompute debt
+//!
+//!   Elastic pools then respawn immediately (no cooldown, no refusal
+//!   evidence — only the max_replicas bound applies):
+//!
+//!   crash of slot s --> [Warming] inheriting slot s (same override,
+//!        |               remainder of s's fault schedule)
+//!        | unless s tripped the flap breaker (`flap_crashes` crashes
+//!        | within `flap_window`): s is quarantined for
+//!        v `quarantine_secs`
+//!   [Warming] on a FRESH slot (fresh schedule, default override)
 //! ```
 //!
 //! Heterogeneous pools: `RouterConfig::overrides` gives replica `i` its
@@ -73,16 +103,18 @@
 
 pub mod autoscaler;
 pub mod balancer;
+pub mod chaos;
 pub mod migration;
 pub mod policy;
 pub mod replica;
 
 pub use autoscaler::{Autoscaler, ScaleDecision, ScaleEvent, ScaleKind};
 pub use balancer::{run_multi_replica, MultiReplicaResult, Router};
+pub use chaos::FaultPlan;
 pub use policy::RoutePolicy;
 pub use replica::{FeasibilityProbe, ReplicaHandle, ReplicaState};
 
-use crate::config::{AutoscalerConfig, ReplicaOverride};
+use crate::config::{AutoscalerConfig, FaultConfig, ReplicaOverride};
 use crate::coordinator::scheduler::Features;
 
 /// Pool-level router configuration.
@@ -109,6 +141,10 @@ pub struct RouterConfig {
     /// Elastic pool: attach an attainment-driven autoscaler. `None` =
     /// fixed pool (every replica `Active` for the whole run).
     pub autoscaler: Option<AutoscalerConfig>,
+    /// Fault injection: compile this into a seed-deterministic
+    /// [`FaultPlan`] of per-slot crash/slowdown schedules fired at pool
+    /// time. `None` = no faults (every pre-PR-6 run).
+    pub faults: Option<FaultConfig>,
 }
 
 impl RouterConfig {
@@ -120,6 +156,7 @@ impl RouterConfig {
             policy: RoutePolicy::RoundRobin,
             overrides: Vec::new(),
             autoscaler: None,
+            faults: None,
         }
     }
 
@@ -144,6 +181,13 @@ impl RouterConfig {
         self.route_limit =
             self.route_limit.max(a.max_replicas.saturating_sub(1) as u32);
         self.autoscaler = Some(a);
+        self
+    }
+
+    /// Attach a fault-injection plan (seeded crash/slowdown schedules,
+    /// fired at pool time by the balancer's event loop).
+    pub fn with_faults(mut self, f: FaultConfig) -> Self {
+        self.faults = Some(f);
         self
     }
 }

@@ -9,21 +9,28 @@
 //! commitments under its own `PerfModel`?". Probing mutates nothing.
 //!
 //! Probes are memoized: the handle keeps a small cache of recent probe
-//! results, keyed on everything the admission pricing reads from the
-//! candidate, and invalidated by a dirty-bit epoch that every
-//! state-mutating entry point (delivery, scheduling step, extraction,
-//! re-route acceptance) bumps, plus the clock and a cheap queue/KV
-//! fingerprint. Burst dispatch, declined-hop targeting, and the
-//! migration pass repeatedly probe the same request against unchanged
-//! replicas; those repeats skip the DP dry-run entirely. Cached answers
-//! are bit-identical to recomputation — external code that mutates
-//! `state` directly (tests) changes the fingerprint or misses the cache.
+//! *verdicts*, keyed on everything the admission pricing reads from the
+//! candidate, and invalidated by a dirty-bit epoch. The epoch is bumped
+//! **only when a mutation changes what admission reads** — the
+//! [`AdmissionDemand`] fingerprint: per-tier pending counts and prefill
+//! backlogs, running prefill backlogs, running decode counts, and
+//! reserved pages. A mutation the DP cannot observe (a warm-down or
+//! crash KV handoff joining the best-effort queue, an extraction of
+//! best-effort work) leaves cached verdicts valid and they survive
+//! (PR-6, carried-forward probe-cache item (a)). Load-snapshot fields
+//! (`outstanding_tokens` etc.) change on *any* mutation, so the cache
+//! stores only the verdict and every probe rebuilds the snapshot
+//! fresh. Burst dispatch, declined-hop targeting, and the migration
+//! pass repeatedly probe the same request against unchanged replicas;
+//! those repeats skip the DP dry-run entirely. Cached answers are
+//! bit-identical to recomputation — external code that mutates `state`
+//! directly (tests) changes the key fingerprint or misses the cache.
 
 use std::cell::RefCell;
 
 use crate::config::{ReplicaOverride, ScenarioConfig};
-use crate::coordinator::request::{Request, RequestId, ServiceTier};
-use crate::coordinator::scheduler::{Features, SlosServe};
+use crate::coordinator::request::{Phase, Request, RequestId, ServiceTier};
+use crate::coordinator::scheduler::{tier_of, Features, SlosServe, TIERS};
 use crate::sim::{apply_batch, deliver, Policy, ServerState};
 use crate::workload::Rng;
 
@@ -49,6 +56,13 @@ pub enum ReplicaState {
     /// Empty and retired at [`ReplicaHandle::retired_at`]; excluded from
     /// the event loop. Terminal.
     Drained,
+    /// Crashed (fault injection, PR-6): the KV is gone, nothing runs
+    /// here again. The balancer evacuates the dead replica's queues —
+    /// unstarted work re-queues, started work ships as best-effort
+    /// recompute debt — and the autoscaler treats the loss as instant
+    /// spawn demand. Terminal, like `Drained`, but *abrupt*: no
+    /// graceful second pass, `retired_at` is the crash instant.
+    Failed,
 }
 
 /// Snapshot a feasibility probe returns to the routing policy.
@@ -67,16 +81,19 @@ pub struct FeasibilityProbe {
     pub best_effort: usize,
 }
 
-/// Everything a probe's answer depends on: the replica side (clock +
-/// cheap state fingerprint) and the candidate side (exactly the fields
-/// `SlosServe::admission_inputs` prices a probe candidate from).
+/// Everything a probe's *verdict* depends on: the replica side (clock +
+/// cheap admission fingerprint) and the candidate side (exactly the
+/// fields `SlosServe::admission_inputs` prices a probe candidate from).
+/// Deliberately excludes the best-effort queue and raw KV occupancy —
+/// the admission DP reads neither (free memory is priced as total minus
+/// *reservations*), so keying on them would spuriously miss after
+/// demand-neutral mutations like a KV handoff.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct ProbeKey {
     clock: u64,
     pending: usize,
     running: usize,
-    best_effort: usize,
-    kv_free_tokens: usize,
+    reserved_pages: usize,
     pddl: u64,
     arrival: u64,
     ttft_slowdown: u64,
@@ -86,11 +103,33 @@ struct ProbeKey {
     tightest_tpot: u64,
 }
 
-/// Recent probe results for one epoch (cleared whenever the epoch moves).
+/// Per-tier summary of everything the admission DP reads from this
+/// replica (`SlosServe::admission_inputs`): pending candidates and
+/// their prefill backlog, forced running prefills, running decode
+/// counts, and the reservation side of the memory ledger. Two states
+/// with equal demand (at equal clock) price every probe candidate
+/// identically — so a mutation that leaves demand unchanged keeps every
+/// cached verdict valid, and the epoch stays put (partial
+/// invalidation). Decode counts use the request's *nominal* tier;
+/// §3.2.3 dynamic tightening shifts tiers only as the clock advances or
+/// token progress lands, and both already key/bump the cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+struct AdmissionDemand {
+    pending: [usize; TIERS.len()],
+    pending_prefill: [usize; TIERS.len()],
+    running_prefill: [usize; TIERS.len()],
+    running_decode: [usize; TIERS.len()],
+    reserved_pages: usize,
+}
+
+/// Recent probe verdicts for one epoch (cleared whenever the epoch
+/// moves). Only the DP verdict is cached — the load-snapshot half of a
+/// [`FeasibilityProbe`] changes with mutations the verdict survives,
+/// so it is rebuilt fresh on every probe.
 #[derive(Debug, Default)]
 struct ProbeCache {
     epoch: u64,
-    entries: Vec<(ProbeKey, FeasibilityProbe)>,
+    entries: Vec<(ProbeKey, bool)>,
 }
 
 /// Distinct candidate shapes remembered per epoch; a burst round probes
@@ -111,6 +150,11 @@ pub fn scaled_probe_cache_cap(pool_size: usize) -> usize {
 /// One simulated replica under the central router.
 pub struct ReplicaHandle {
     pub id: usize,
+    /// Fault-schedule slot (see [`chaos`](crate::router::chaos)):
+    /// defaults to `id`; a crash-respawn in place inherits the dead
+    /// replica's slot (and the rest of its fault schedule), while a
+    /// quarantined slot's replacement starts a fresh one.
+    pub slot: usize,
     /// This replica's resolved config (pool config + override).
     pub cfg: ScenarioConfig,
     pub policy: SlosServe,
@@ -132,9 +176,16 @@ pub struct ReplicaHandle {
     /// Simulated time this replica was added to the pool (0 for the
     /// initial pool) — start of its replica-seconds accounting.
     pub spawned_at: f64,
-    /// Simulated time the replica finished draining (`Drained`); end of
-    /// its replica-seconds accounting. `None` while the replica lives.
+    /// Simulated time the replica finished draining (`Drained`) or
+    /// crashed (`Failed`); end of its replica-seconds accounting.
+    /// `None` while the replica lives.
     pub retired_at: Option<f64>,
+    /// Transient-slowdown fault: until this instant, batch execution
+    /// times are multiplied by `slow_factor` (a straggler episode —
+    /// realized time only; planning and admission are unaware, exactly
+    /// like `exec_noise`).
+    pub slow_until: f64,
+    pub slow_factor: f64,
     /// Probe-cache capacity (scaled with pool size by the router).
     probe_cache_cap: usize,
     /// Probe-cache dirty bit: bumped by every state-mutating entry point.
@@ -160,6 +211,7 @@ impl ReplicaHandle {
         let rng = Rng::new(cfg.seed ^ (0xB0B0 + id as u64));
         ReplicaHandle {
             id,
+            slot: id,
             cfg,
             policy,
             state,
@@ -171,6 +223,8 @@ impl ReplicaHandle {
             ready_at: 0.0,
             spawned_at: 0.0,
             retired_at: None,
+            slow_until: 0.0,
+            slow_factor: 1.0,
             probe_cache_cap: PROBE_CACHE_CAP,
             epoch: 0,
             probe_cache: RefCell::new(ProbeCache::default()),
@@ -198,9 +252,11 @@ impl ReplicaHandle {
         self.lifecycle == ReplicaState::Active
     }
 
-    /// Still participates in the event loop (everything but `Drained`).
+    /// Still participates in the event loop (everything but the two
+    /// terminal states, `Drained` and `Failed`).
     pub fn is_live(&self) -> bool {
-        self.lifecycle != ReplicaState::Drained
+        !matches!(self.lifecycle,
+                  ReplicaState::Drained | ReplicaState::Failed)
     }
 
     /// `Warming -> Active` (the pool clock reached `ready_at`).
@@ -233,6 +289,30 @@ impl ReplicaHandle {
         self.retired_at = Some(now);
     }
 
+    /// `* -> Failed`: the replica crashes at `now` (fault injection).
+    /// Abrupt and terminal from any live state — a `Warming` spawn can
+    /// die before activating, a `Draining` replica mid-warm-down. The
+    /// caller (the balancer's crash path) evacuates the queues
+    /// afterwards; this only flips the lifecycle and closes the
+    /// replica-seconds account.
+    pub fn fail(&mut self, now: f64) {
+        debug_assert!(self.is_live());
+        self.lifecycle = ReplicaState::Failed;
+        self.retired_at = Some(now);
+    }
+
+    /// Start (or extend) a transient-slowdown episode: batches executed
+    /// before `until` take `factor`x their planned time. Overlapping
+    /// episodes keep the later deadline and the larger factor.
+    pub fn apply_slowdown(&mut self, until: f64, factor: f64) {
+        debug_assert!(factor >= 1.0);
+        let expired = self.clock >= self.slow_until;
+        self.slow_factor =
+            if expired { factor } else { self.slow_factor.max(factor) };
+        self.slow_until =
+            if expired { until } else { self.slow_until.max(until) };
+    }
+
     /// Scale the probe cache with the pool (see [`scaled_probe_cache_cap`]).
     pub fn set_probe_cache_cap(&mut self, cap: usize) {
         self.probe_cache_cap = cap.max(1);
@@ -254,11 +334,52 @@ impl ReplicaHandle {
         (self.state.model.max_batch_tokens, self.state.kv.total_tokens())
     }
 
+    /// What the admission DP would read from this replica right now —
+    /// the partial-invalidation fingerprint (see [`AdmissionDemand`]).
+    fn admission_demand(&self) -> AdmissionDemand {
+        let mut d = AdmissionDemand {
+            reserved_pages: self.policy.reserved_pages(),
+            ..AdmissionDemand::default()
+        };
+        for &id in &self.state.pending {
+            let r = self.state.req(id);
+            let tier = tier_of(r.tightest_tpot());
+            d.pending[tier] += 1;
+            d.pending_prefill[tier] += r.prefill_remaining();
+        }
+        for &id in &self.state.running {
+            let r = self.state.req(id);
+            match r.phase {
+                Phase::Prefill => {
+                    d.running_prefill[tier_of(r.tightest_tpot())] +=
+                        r.prefill_remaining();
+                }
+                Phase::Decode => {
+                    d.running_decode[tier_of(r.tightest_tpot())] += 1;
+                }
+                _ => {}
+            }
+        }
+        d
+    }
+
+    /// Close a mutation opened with a pre-mutation
+    /// [`admission_demand`](Self::admission_demand) snapshot: bump the
+    /// probe-cache epoch only if the mutation changed what admission
+    /// reads. Demand-neutral mutations (best-effort queue traffic) keep
+    /// every cached verdict live.
+    fn note_mutation(&mut self, before: AdmissionDemand) {
+        if self.admission_demand() != before {
+            self.epoch += 1;
+        }
+    }
+
     /// Deliver a newly routed arrival: enters its stage against this
     /// replica's perf model (prefill deadline set here) and queues it.
     pub fn deliver(&mut self, r: Request) {
-        self.epoch += 1;
+        let before = self.admission_demand();
         deliver(&mut self.state, r);
+        self.note_mutation(before);
     }
 
     pub fn has_work(&self) -> bool {
@@ -287,8 +408,7 @@ impl ReplicaHandle {
             clock: self.clock.to_bits(),
             pending: self.state.pending.len(),
             running: self.state.running.len(),
-            best_effort: self.state.best_effort.len(),
-            kv_free_tokens: self.state.kv.free_tokens(),
+            reserved_pages: self.policy.reserved_pages(),
             pddl: candidate.pddl.to_bits(),
             arrival: candidate.arrival.to_bits(),
             ttft_slowdown: candidate.stage().slo.ttft_slowdown.to_bits(),
@@ -303,8 +423,11 @@ impl ReplicaHandle {
     /// while this value is unchanged may share one `PB*` memo (see
     /// `DpPlanner::plan_keyed`). Mixes the mutation epoch with the clock
     /// bits (running-decode tier classification reads `now`) and the same
-    /// cheap queue/KV fingerprint the probe key uses, so direct `state`
+    /// cheap admission fingerprint the probe key uses, so direct `state`
     /// edits (tests) change the generation even without an epoch bump.
+    /// Like the key, it deliberately ignores the best-effort queue and
+    /// raw KV occupancy — admission reads neither, and folding them in
+    /// would discard valid memos after every KV handoff.
     fn probe_generation(&self) -> u64 {
         const K: u64 = 0x9E37_79B9_7F4A_7C15;
         let mut g = self.epoch;
@@ -312,8 +435,7 @@ impl ReplicaHandle {
             self.clock.to_bits(),
             self.state.pending.len() as u64,
             self.state.running.len() as u64,
-            self.state.best_effort.len() as u64,
-            self.state.kv.free_tokens() as u64,
+            self.policy.reserved_pages() as u64,
         ] {
             g = (g.rotate_left(7) ^ v).wrapping_mul(K);
         }
@@ -327,22 +449,31 @@ impl ReplicaHandle {
     /// one generation-keyed `PB*` memo inside the DP itself.
     pub fn probe(&self, candidate: &Request) -> FeasibilityProbe {
         let key = self.probe_key(candidate);
-        {
+        let cached: Option<bool> = {
             let mut cache = self.probe_cache.borrow_mut();
             if cache.epoch != self.epoch {
                 cache.epoch = self.epoch;
                 cache.entries.clear();
-            } else if let Some(&(_, hit)) =
-                cache.entries.iter().find(|(k, _)| *k == key)
-            {
-                return hit;
+                None
+            } else {
+                cache
+                    .entries
+                    .iter()
+                    .find(|(k, _)| *k == key)
+                    .map(|&(_, feasible)| feasible)
             }
-        }
+        };
+        let feasible = cached.unwrap_or_else(|| {
+            self.policy.admission_probe_keyed(
+                self.clock, &self.state, candidate,
+                self.probe_generation())
+        });
+        // The load snapshot is rebuilt on every probe: demand-neutral
+        // mutations (best-effort traffic) change it without touching
+        // the cached verdict's validity.
         let outstanding = self.outstanding_tokens();
         let p = FeasibilityProbe {
-            feasible: self.policy.admission_probe_keyed(
-                self.clock, &self.state, candidate,
-                self.probe_generation()),
+            feasible,
             outstanding_tokens: outstanding,
             drain_seconds: outstanding as f64
                 / self.state.model.peak_throughput(),
@@ -350,11 +481,13 @@ impl ReplicaHandle {
             running: self.state.running.len(),
             best_effort: self.state.best_effort.len(),
         };
-        let mut cache = self.probe_cache.borrow_mut();
-        if cache.entries.len() >= self.probe_cache_cap {
-            cache.entries.clear();
+        if cached.is_none() {
+            let mut cache = self.probe_cache.borrow_mut();
+            if cache.entries.len() >= self.probe_cache_cap {
+                cache.entries.clear();
+            }
+            cache.entries.push((key, feasible));
         }
-        cache.entries.push((key, p));
         p
     }
 
@@ -373,7 +506,13 @@ impl ReplicaHandle {
         let ran = match planned_batch {
             Some(batch) if !batch.entries.is_empty() => {
                 let planned = batch.exec_time(&self.state.model);
-                let dt = self.state.sample_exec(planned);
+                let mut dt = self.state.sample_exec(planned);
+                // Transient-slowdown fault: realized time stretches,
+                // planning stays blind (like exec_noise) — that gap is
+                // what makes a straggler blow deadlines.
+                if now < self.slow_until {
+                    dt *= self.slow_factor;
+                }
                 self.clock = now + dt;
                 self.finished += apply_batch(&batch, now + dt,
                                              &mut self.state, &mut self.rng,
@@ -400,7 +539,7 @@ impl ReplicaHandle {
     /// leak the pre-subsystem router had on re-routing partially
     /// prefilled best-effort requests.
     pub fn extract(&mut self, id: RequestId) -> Option<Request> {
-        self.epoch += 1;
+        let before = self.admission_demand();
         let mut r = self.state.requests.remove(&id)?;
         self.state.pending.retain(|&x| x != id);
         self.state.running.retain(|&x| x != id);
@@ -408,6 +547,7 @@ impl ReplicaHandle {
         if self.state.kv.release(id) > 0 {
             r.recompute_pending = r.tokens_held();
         }
+        self.note_mutation(before);
         Some(r)
     }
 
@@ -416,11 +556,12 @@ impl ReplicaHandle {
     /// admission. The prefill deadline is *kept* — SLOs are a property of
     /// the request and its arrival, not of whichever replica serves it.
     pub fn accept_rerouted(&mut self, mut r: Request) {
-        self.epoch += 1;
+        let before = self.admission_demand();
         r.tier = ServiceTier::Standard;
         let id = r.id;
         self.state.pending.push(id);
         self.state.requests.insert(id, r);
+        self.note_mutation(before);
     }
 
     /// Accept a *started* best-effort request evicted from a `Draining`
@@ -433,12 +574,18 @@ impl ReplicaHandle {
     /// recompute debt is paid by the §4.1 preemption-resume machinery —
     /// the best-effort fill rebuilds the KV with prefill passes, then
     /// decoding continues where it left off.
+    ///
+    /// Admission never reads the best-effort queue, so a handoff is
+    /// demand-neutral: `note_mutation` sees no delta and every cached
+    /// probe verdict survives (the partial-invalidation payoff — crash
+    /// evacuations fan handoffs across the pool mid-burst).
     pub fn accept_handoff(&mut self, r: Request) {
         debug_assert_eq!(r.tier, ServiceTier::BestEffort);
-        self.epoch += 1;
+        let before = self.admission_demand();
         let id = r.id;
         self.state.best_effort.push(id);
         self.state.requests.insert(id, r);
+        self.note_mutation(before);
     }
 }
 
@@ -544,6 +691,93 @@ mod tests {
         assert!(fixed.is_routable());
         assert_eq!(fixed.spawned_at, 0.0);
         assert_eq!(fixed.retired_at, None);
+    }
+
+    #[test]
+    fn failed_is_terminal_and_closes_the_account() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        assert_eq!(h.slot, 0, "slot defaults to id");
+        h.fail(7.5);
+        assert_eq!(h.lifecycle, ReplicaState::Failed);
+        assert!(!h.is_live() && !h.is_routable());
+        assert_eq!(h.retired_at, Some(7.5));
+        // A Warming spawn can die before ever activating.
+        let mut w = ReplicaHandle::warming(1, &c, None, None, 10.0, 2.0);
+        w.fail(11.0);
+        assert!(!w.is_live());
+        assert_eq!(w.retired_at, Some(11.0));
+    }
+
+    #[test]
+    fn slowdown_stretches_realized_time_only() {
+        let c = cfg();
+        let mut fast = ReplicaHandle::new(0, &c, None, None);
+        let mut slow = ReplicaHandle::new(0, &c, None, None);
+        fast.deliver(req(1, 400, 10));
+        slow.deliver(req(1, 400, 10));
+        slow.apply_slowdown(1e9, 3.0);
+        assert!(fast.step() && slow.step());
+        assert!((slow.clock - 3.0 * fast.clock).abs() < 1e-9,
+                "same batch, same jitter stream, 3x realized time");
+        // Expired episodes stop stretching; a new one replaces the
+        // factor outright.
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        h.apply_slowdown(1.0, 5.0);
+        h.clock = 2.0;
+        h.apply_slowdown(4.0, 2.0);
+        assert_eq!((h.slow_until, h.slow_factor), (4.0, 2.0));
+    }
+
+    #[test]
+    fn handoff_is_demand_neutral_and_keeps_cached_verdicts() {
+        use crate::sim::decline_to_best_effort;
+        let c = cfg();
+        let mut src = ReplicaHandle::new(0, &c, None, None);
+        src.deliver(req(7, 100, 10));
+        decline_to_best_effort(&mut src.state, 7);
+        assert!(src.state.kv.grow(7, 48));
+        src.state.req_mut(7).advance_prefill(48, 0.1);
+        let moved = src.extract(7).expect("present");
+
+        let mut h = ReplicaHandle::new(1, &c, None, None);
+        h.deliver(req(2, 600, 30)); // background load
+        let candidate = req(9, 800, 40);
+        let p1 = h.probe(&candidate); // populates the cache
+        let epoch_before = h.epoch;
+        h.accept_handoff(moved);
+        assert_eq!(h.epoch, epoch_before,
+                   "best-effort handoff is demand-neutral: no epoch bump");
+        let p2 = h.probe(&candidate); // served from the surviving cache
+        // The cached verdict must equal a fresh replica's answer...
+        let mut fresh = ReplicaHandle::new(2, &c, None, None);
+        fresh.deliver(req(2, 600, 30));
+        let mut moved2 = req(7, 100, 10);
+        moved2.tier = ServiceTier::BestEffort;
+        moved2.recompute_pending = 48;
+        fresh.accept_handoff(moved2);
+        let pf = fresh.probe(&candidate);
+        assert_eq!(p2.feasible, pf.feasible,
+                   "surviving cache entry == fresh probe verdict");
+        // ...while the load snapshot half is rebuilt, not cached.
+        assert_eq!(p2.best_effort, 1);
+        assert!(p2.outstanding_tokens > p1.outstanding_tokens,
+                "handoff load visible in the fresh snapshot");
+    }
+
+    #[test]
+    fn demand_changing_mutations_still_invalidate() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        let e0 = h.epoch;
+        h.deliver(req(1, 500, 20)); // pending demand changes
+        assert!(h.epoch > e0, "pending delivery must bump the epoch");
+        let e1 = h.epoch;
+        let _ = h.extract(1); // pending demand changes back
+        assert!(h.epoch > e1, "pending extraction must bump the epoch");
+        let e2 = h.epoch;
+        h.accept_rerouted(req(3, 200, 5));
+        assert!(h.epoch > e2, "re-route joins pending: must bump");
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Fault-injection integration tests (ISSUE 6 acceptance): on the
+//! bursty Mixed trace, a pool with injected replica crashes must (1)
+//! be bit-reproducible for a fixed fault seed — scale/fault timeline
+//! and metrics alike, (2) conserve every request across a mid-burst
+//! crash and reconcile the crash-loss counters with the per-request
+//! ledger, with the elastic pool's recovery strictly beating a static
+//! pool that ate the same crash, and (3) survive a flapping replica:
+//! the circuit breaker quarantines the bad slot, the respawn moves to
+//! a fresh slot, and the pool still drains all work.
+
+use std::collections::HashSet;
+
+use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
+                         ScenarioConfig};
+use slos_serve::coordinator::request::Request;
+use slos_serve::router::{run_multi_replica, MultiReplicaResult,
+                         RoutePolicy, RouterConfig, ScaleKind};
+use slos_serve::workload;
+
+const N: usize = 200;
+
+/// Bursty heterogeneous Mixed trace (middle third at 4x rate) — the
+/// same shape as the elastic-pool tests, sized down a notch since every
+/// chaos test runs several pools over it.
+fn bursty_workload() -> (ScenarioConfig, Vec<Request>) {
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(1.5)
+        .with_requests(N)
+        .with_seed(42);
+    let mut wl = workload::generate(&cfg);
+    workload::compress_middle_third(&mut wl, 4.0);
+    (cfg, wl)
+}
+
+fn mid_burst() -> f64 {
+    let (_, wl) = bursty_workload();
+    let (t0, t1) = workload::burst_window(&wl);
+    0.5 * (t0 + t1)
+}
+
+fn run_with(rcfg: &RouterConfig) -> MultiReplicaResult {
+    let (cfg, wl) = bursty_workload();
+    run_multi_replica(wl, &cfg, rcfg)
+}
+
+fn assert_identical(a: &MultiReplicaResult, b: &MultiReplicaResult) {
+    assert_eq!(a.metrics.finished, b.metrics.finished);
+    assert_eq!(a.metrics.attained, b.metrics.attained);
+    assert_eq!(a.metrics.span.to_bits(), b.metrics.span.to_bits(),
+               "span must match bit-exactly");
+    assert_eq!(a.rerouted, b.rerouted);
+    assert_eq!(a.migrated, b.migrated);
+    assert_eq!(a.drain_requeued, b.drain_requeued);
+    assert_eq!(a.drain_handoffs, b.drain_handoffs);
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.crash_requeued, b.crash_requeued);
+    assert_eq!(a.crash_handoffs, b.crash_handoffs);
+    assert_eq!(a.peak_replicas, b.peak_replicas);
+    assert_eq!(a.per_replica_finished, b.per_replica_finished);
+    assert_eq!(a.scale_timeline.len(), b.scale_timeline.len());
+    for (x, y) in a.scale_timeline.iter().zip(&b.scale_timeline) {
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.active, y.active);
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+    }
+    assert_eq!(a.replica_seconds.to_bits(), b.replica_seconds.to_bits());
+}
+
+#[test]
+fn chaos_runs_are_bit_deterministic() {
+    // Seeded Poisson crashes AND slowdowns over an elastic pool: the
+    // fault timeline is a pure function of the fault seed, so two runs
+    // must agree bit-for-bit — every scale/fault event, every counter,
+    // every metric.
+    let rcfg = RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_autoscaler(AutoscalerConfig::new(1, 4))
+        .with_faults(FaultConfig::default()
+                     .with_seed(11)
+                     .with_crash_rate(0.01)
+                     .with_slowdown_rate(0.05));
+    let a = run_with(&rcfg);
+    let b = run_with(&rcfg);
+    assert_identical(&a, &b);
+    // A different fault seed is a different universe.
+    let other = RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_autoscaler(AutoscalerConfig::new(1, 4))
+        .with_faults(FaultConfig::default()
+                     .with_seed(12)
+                     .with_crash_rate(0.01)
+                     .with_slowdown_rate(0.05));
+    let c = run_with(&other);
+    let same_timeline = a.scale_timeline.len() == c.scale_timeline.len()
+        && a.scale_timeline.iter().zip(&c.scale_timeline).all(|(x, y)| {
+            x.kind == y.kind && x.t.to_bits() == y.t.to_bits()
+        });
+    assert!(!same_timeline || a.crashes == 0,
+            "reseeding must move the fault timeline");
+}
+
+#[test]
+fn crash_mid_decode_conserves_and_reconciles() {
+    // A scripted crash in the middle of the burst — replica 0 dies with
+    // requests mid-prefill and mid-decode. The elastic pool must still
+    // finish every request (crashed work restarts as recompute debt),
+    // the crash-loss counters must reconcile exactly with the
+    // per-request ledger, and recovery must strictly beat a static pool
+    // that ate the same crash and never got its capacity back.
+    let faults = FaultConfig::default().crash_at(0, mid_burst());
+    let elastic = run_with(
+        &RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_autoscaler(AutoscalerConfig::new(1, 4))
+            .with_faults(faults.clone()));
+    let static2 = run_with(
+        &RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_faults(faults));
+
+    // Conservation: none lost, none duplicated, all finished.
+    assert_eq!(elastic.crashes, 1);
+    assert_eq!(elastic.requests.len(), N);
+    let ids: HashSet<u64> = elastic.requests.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), N, "duplicate ids in result");
+    assert_eq!(elastic.metrics.finished, N,
+               "every request finishes or is reported — and with a \
+                respawn available, all finish: {:?}", elastic.metrics);
+
+    // The ledger: graceful-drain and crash moves share the per-request
+    // counters; the pool-level split must cover them exactly.
+    let req_requeues: usize =
+        elastic.requests.iter().map(|r| r.drain_requeues as usize).sum();
+    let req_handoffs: usize =
+        elastic.requests.iter().map(|r| r.kv_handoffs as usize).sum();
+    assert_eq!(req_requeues,
+               elastic.drain_requeued + elastic.crash_requeued
+                   + elastic.crash_handoffs,
+               "requeue ledger out of balance");
+    assert_eq!(req_handoffs,
+               elastic.drain_handoffs + elastic.crash_handoffs,
+               "handoff ledger out of balance");
+    // Mid-burst the victim is busy: the crash must actually move work.
+    assert!(elastic.crash_requeued + elastic.crash_handoffs > 0,
+            "a mid-burst crash strands work to evacuate");
+
+    // Recovery is visible in the timeline: the crash, the cooldown-free
+    // respawn at the same instant, and its activation one warm-up later.
+    let t_fail = elastic
+        .scale_timeline
+        .iter()
+        .find(|e| e.kind == ScaleKind::Failed)
+        .map(|e| e.t)
+        .expect("crash must be on the timeline");
+    assert!(elastic
+                .scale_timeline
+                .iter()
+                .any(|e| e.kind == ScaleKind::Respawned
+                     && e.t.to_bits() == t_fail.to_bits()),
+            "emergency respawn happens at the crash instant, not after \
+             a cooldown: {:?}", elastic.scale_timeline);
+    assert!(elastic
+                .scale_timeline
+                .iter()
+                .any(|e| e.kind == ScaleKind::Activated && e.t > t_fail),
+            "the respawn must come online: {:?}", elastic.scale_timeline);
+
+    // Headline: self-healing beats eating the loss.
+    assert!(elastic.metrics.attainment() > static2.metrics.attainment(),
+            "elastic-with-respawn {:.3} must strictly beat \
+             static-with-crash {:.3}",
+            elastic.metrics.attainment(), static2.metrics.attainment());
+}
+
+#[test]
+fn flapping_replica_trips_circuit_breaker_and_pool_recovers() {
+    // Slot 0 is scripted to crash every second, six times — but the
+    // breaker (default: 3 crashes in a 10 s window) trips on the third,
+    // quarantines the slot, and the next respawn takes a FRESH slot.
+    // The dead slot's remaining scripted crashes are never attached to
+    // a live replica again, so exactly `flap_crashes` crashes land and
+    // the pool then drains the whole trace.
+    let t0 = mid_burst();
+    let rcfg = RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_autoscaler(AutoscalerConfig::new(2, 4))
+        .with_faults(FaultConfig::default().with_flap(0, t0, 6, 1.0));
+    let res = run_with(&rcfg);
+
+    let kinds: Vec<ScaleKind> =
+        res.scale_timeline.iter().map(|e| e.kind).collect();
+    let failed = kinds.iter().filter(|k| **k == ScaleKind::Failed).count();
+    let quarantined =
+        kinds.iter().filter(|k| **k == ScaleKind::Quarantined).count();
+    let respawned =
+        kinds.iter().filter(|k| **k == ScaleKind::Respawned).count();
+    assert_eq!(failed, 3,
+               "the breaker caps a 6-crash flap at flap_crashes=3: {:?}",
+               res.scale_timeline);
+    assert_eq!(res.crashes, 3);
+    assert_eq!(quarantined, 1, "the third crash trips the breaker");
+    assert_eq!(respawned, 3, "every crash emergency-respawns");
+
+    // The pool never reports fewer routable replicas than min_replicas
+    // allows for longer than a warm-up: by the end of the timeline it
+    // is back at or above the minimum.
+    assert!(res.scale_timeline.last().unwrap().active >= 1);
+
+    // And the flap cost is bounded: the pool still finishes everything.
+    assert_eq!(res.requests.len(), N);
+    assert_eq!(res.metrics.finished, N,
+               "a quarantined flapper must not sink the pool: {:?}",
+               res.metrics);
+}

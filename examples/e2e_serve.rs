@@ -12,6 +12,7 @@
 //! ```
 
 use std::collections::HashMap;
+// slos-lint: allow(d2) -- e2e wall-clock over the real PJRT backend
 use std::time::Instant;
 
 use slos_serve::config::{Scenario, ScenarioConfig, SloSpec};
@@ -67,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     st.model = model.clone();
     let mut policy = SlosServe::new(&cfg);
 
-    let start = Instant::now();
+    let start = Instant::now(); // slos-lint: allow(d2) -- real-hw timing
     let mut delivered_total = 0usize;
     let mut batches = 0usize;
     let mut next_arrival = 0usize;

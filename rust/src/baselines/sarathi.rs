@@ -17,6 +17,7 @@ use crate::coordinator::request::{Phase, RequestId};
 use crate::coordinator::scheduler::TIERS;
 use crate::sim::{Policy, ServerState};
 
+#[derive(Debug)]
 pub struct Sarathi {
     /// Fixed per-batch token cap.
     pub token_cap: usize,
@@ -38,7 +39,7 @@ impl Sarathi {
     fn admit_fcfs(&mut self, st: &mut ServerState) {
         let mut pending = std::mem::take(&mut st.pending);
         pending.sort_by(|a, b| {
-            st.req(*a).arrival.partial_cmp(&st.req(*b).arrival).unwrap()
+            st.req(*a).arrival.total_cmp(&st.req(*b).arrival)
         });
         let total = st.kv.allocator().total_pages();
         let mut used: usize = self.reserved.values().sum();
@@ -84,7 +85,7 @@ impl Policy for Sarathi {
             .filter(|r| r.phase == Phase::Prefill)
             .map(|r| (r.arrival, r.id, r.prefill_remaining()))
             .collect();
-        prefills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        prefills.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (_, id, rem) in prefills {
             if budget == 0 {
                 break;

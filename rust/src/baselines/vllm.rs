@@ -14,6 +14,7 @@ use crate::coordinator::batch_formation::{Batch, BatchEntry, EntryKind};
 use crate::coordinator::request::{Phase, RequestId};
 use crate::sim::{Policy, ServerState};
 
+#[derive(Debug)]
 pub struct Vllm {
     /// Fixed speculation length (0 = auto-regressive vLLM).
     pub spec_len: usize,
@@ -35,7 +36,7 @@ impl Vllm {
         // Admit in arrival order while KV reservations fit.
         let mut pending = std::mem::take(&mut st.pending);
         pending.sort_by(|a, b| {
-            st.req(*a).arrival.partial_cmp(&st.req(*b).arrival).unwrap()
+            st.req(*a).arrival.total_cmp(&st.req(*b).arrival)
         });
         let total = st.kv.allocator().total_pages();
         let mut used: usize = self.reserved.values().sum();
@@ -77,7 +78,7 @@ impl Policy for Vllm {
             .map(|r| (r.arrival, r.id, r.prefill_remaining()))
             .collect();
         if !prefills.is_empty() {
-            prefills.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            prefills.sort_by(|a, b| a.0.total_cmp(&b.0));
             let mut budget = st.model.max_batch_tokens;
             let mut entries = Vec::new();
             for (_, id, rem) in prefills {

@@ -87,12 +87,12 @@ impl Bench {
             std::hint::black_box(f());
             times.push(t.elapsed().as_secs_f64());
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let stats = Stats {
             median: times[times.len() / 2],
             mean: times.iter().sum::<f64>() / times.len() as f64,
             min: times[0],
-            max: *times.last().unwrap(),
+            max: times.last().copied().unwrap_or(f64::NAN),
             iters,
         };
         println!("{}/{:<28} median {:>12} mean {:>12} range {}..{} ({} iters)",

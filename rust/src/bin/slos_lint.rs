@@ -1,0 +1,67 @@
+//! `slos-lint` CLI — walks the repo and prints the violation report.
+//!
+//!   cargo run --bin slos_lint             # repo root inferred
+//!   cargo run --bin slos_lint -- --root . # explicit root
+//!   cargo run --bin slos_lint -- --warns  # warns also fail (strict)
+//!
+//! Exit status: 0 clean, 1 deny violations (or warns under --warns),
+//! 2 usage / I-O error. CI tees stdout into lint-report.txt and
+//! uploads it as an artifact; rust/tests/lint_clean.rs runs the same
+//! pass as a tier-1 gate.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use slos_serve::lint;
+
+fn main() -> ExitCode {
+    // The bin's manifest dir is <repo>/rust; the repo root is its
+    // parent. Baked at compile time, so the tool works from any cwd.
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let mut strict_warns = false;
+
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--root" => match argv.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("slos-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--warns" => strict_warns = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: slos_lint [--root <repo-root>] [--warns]\n\
+                     see docs/LINTS.md for the rule catalogue"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("slos-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    match lint::lint_tree(&root) {
+        Ok(report) => {
+            print!("{}", report.render());
+            let failing = report.deny_count()
+                + if strict_warns { report.warn_count() } else { 0 };
+            if failing > 0 {
+                ExitCode::FAILURE
+            } else {
+                ExitCode::SUCCESS
+            }
+        }
+        Err(e) => {
+            eprintln!("slos-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -90,8 +90,7 @@ impl Ord for QItem {
         // Min-heap on schDDL (earliest deadline first), tie-break by id.
         other
             .sch_ddl
-            .partial_cmp(&self.sch_ddl)
-            .unwrap()
+            .total_cmp(&self.sch_ddl)
             .then(other.id.cmp(&self.id))
     }
 }
@@ -151,7 +150,7 @@ pub fn form_batches(t: f64, decoding: &[DecodingReq], m: &PerfModel)
             if front.sch_ddl >= window_end || budget == 0 {
                 break;
             }
-            let mut item = q.pop().unwrap();
+            let Some(mut item) = q.pop() else { break };
             if item.remaining == 0 {
                 continue; // drained; drop from future batches
             }

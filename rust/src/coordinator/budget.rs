@@ -68,16 +68,18 @@ impl BudgetCurve {
     /// Append a batch: `dt` seconds producing `tokens` budget.
     pub fn push_batch(&mut self, dt: f64, tokens: f64) {
         assert!(dt > 0.0 && tokens >= 0.0);
-        let (t, c) = *self.points.last().unwrap();
+        // Constructors always seed at least one point, so `last()` can
+        // only be empty on a hand-rolled curve; extend from the origin.
+        let (t, c) = self.points.last().copied().unwrap_or((0.0, 0.0));
         self.points.push((t + dt, c + tokens));
     }
 
     pub fn end_time(&self) -> f64 {
-        self.points.last().unwrap().0
+        self.points.last().map_or(0.0, |p| p.0)
     }
 
     pub fn total(&self) -> f64 {
-        self.points.last().unwrap().1
+        self.points.last().map_or(0.0, |p| p.1)
     }
 
     /// Budget available by time `t` (clamped to the curve's range; beyond
@@ -117,7 +119,7 @@ pub fn violation_time(lines: &[DemandLine], budget: &BudgetCurve) -> Option<f64>
         ts.push(l.saturation_time());
     }
     ts.extend(budget.breakpoints());
-    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts.sort_by(|a, b| a.total_cmp(b));
     ts.dedup();
     for &t in &ts {
         let demand: f64 = lines.iter().map(|l| l.at(t)).sum();

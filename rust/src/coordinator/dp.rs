@@ -174,7 +174,7 @@ fn dominated_by(a: u32, b: u32) -> bool {
 /// Multiply-rotate hasher for the small integer keys of the `PB*` memo
 /// (FxHash-style; the offline image has no external hash crates, and
 /// SipHash costs more than a memo hit saves).
-#[derive(Default)]
+#[derive(Debug, Default)]
 pub struct FxHasher(u64);
 
 impl FxHasher {
@@ -213,7 +213,7 @@ type FxMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
 
 /// One arena state: packed key, best prefill budget, parent arena index
 /// (`u32::MAX`-free: the root is index 0 and is its own sentinel).
-#[derive(Clone, Copy)]
+#[derive(Debug, Clone, Copy)]
 struct Node {
     key: u64,
     pb: f64,
@@ -221,7 +221,7 @@ struct Node {
 }
 
 /// One raw (pre-dedup) transition produced while expanding a layer.
-#[derive(Clone, Copy)]
+#[derive(Debug, Clone, Copy)]
 struct Trans {
     key: u64,
     pb: f64,
@@ -233,7 +233,7 @@ struct Trans {
 
 /// A counts-vector proven infeasible, with the context that makes the
 /// superset cutoff sound (see module doc).
-#[derive(Clone, Copy)]
+#[derive(Debug, Clone, Copy)]
 struct InfeasRec {
     /// Live-tier bitmask of (running + extra).
     mask: u8,
@@ -247,7 +247,7 @@ struct InfeasRec {
 /// `PB*` memo tables. Steady-state planning with a retained scratch is
 /// allocation-free (capacity persists across [`DpPlanner::plan_with`]
 /// calls; contents are cleared at each call).
-#[derive(Default)]
+#[derive(Debug, Default)]
 pub struct PlannerScratch {
     cands: Vec<Candidate>,
     overflow: Vec<RequestId>,
@@ -485,7 +485,7 @@ impl<'a> DpPlanner<'a> {
         };
 
         cands.extend_from_slice(candidates);
-        cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+        cands.sort_by(|a, b| a.pddl.total_cmp(&b.pddl)
             .then(a.id.cmp(&b.id)));
         // Cap the DP size; overflow candidates are declined this round
         // (they will be retried at the next invocation). Keep all forced
@@ -715,7 +715,7 @@ pub mod reference {
         assert!(cfg.tiers.len() <= MAX_TIERS);
         assert_eq!(cfg.tiers.len(), cfg.running_counts.len());
         let mut cands: Vec<Candidate> = candidates.to_vec();
-        cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+        cands.sort_by(|a, b| a.pddl.total_cmp(&b.pddl)
             .then(a.id.cmp(&b.id)));
         let mut overflow: Vec<RequestId> = Vec::new();
         if cands.len() > MAX_CANDIDATES {
@@ -729,7 +729,7 @@ pub mod reference {
                 .iter().map(|c| c.id).collect();
             cands = forced;
             cands.extend(rest);
-            cands.sort_by(|a, b| a.pddl.partial_cmp(&b.pddl).unwrap()
+            cands.sort_by(|a, b| a.pddl.total_cmp(&b.pddl)
                 .then(a.id.cmp(&b.id)));
         }
         let n = cands.len();
@@ -834,6 +834,8 @@ pub mod reference {
                 break;
             }
             frontier = Vec::with_capacity(next.len());
+            // slos-lint: allow(d1) -- reference planner: the max-merge into
+            // all_states is order-insensitive (ties broken by parent id)
             for (key, entry) in next {
                 let slot = all_states.entry(key).or_insert(entry);
                 if entry.pb > slot.pb

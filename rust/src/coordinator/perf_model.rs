@@ -194,7 +194,7 @@ impl PerfModel {
 fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
     for col in 0..3 {
         let piv = (col..3).max_by(|&i, &j| {
-            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+            a[i][col].abs().total_cmp(&a[j][col].abs())
         })?;
         if a[piv][col].abs() < 1e-12 {
             return None;

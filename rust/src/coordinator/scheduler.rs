@@ -130,6 +130,7 @@ impl SlosServe {
     /// [`AdmissionDemand`]: crate::router::replica
     /// [`admission_inputs`]: Self::admission_inputs
     pub fn reserved_pages(&self) -> usize {
+        // slos-lint: allow(d1) -- commutative usize sum; order-free
         self.reserved.values().sum()
     }
 
@@ -411,7 +412,7 @@ impl Policy for SlosServe {
                                             self.max_spec_len, &st.model,
                                             self.spec_round_cap(now, st)) {
                 Some(plan) => {
-                    let step = *plan.spec_lens.iter().max().unwrap();
+                    let step = plan.spec_lens.iter().copied().max().unwrap_or(0);
                     (plan.batch_time, plan.spec_lens, step)
                 }
                 None => ar_window(&decodes, st),
@@ -427,7 +428,7 @@ impl Policy for SlosServe {
         // throughput-optimal window.
         if let Some(&(_, pddl, rem)) = prefills
             .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
         {
             let urgency = pddl - now;
             let feasible =
@@ -446,7 +447,7 @@ impl Policy for SlosServe {
         // ---- fill: standard decodes due in this window, EDF ----
         let mut entries: Vec<BatchEntry> = Vec::new();
         let mut budget = budget_total;
-        decodes.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        decodes.sort_by(|a, b| a.1.total_cmp(&b.1));
         // AR mode: skip a decode only when the *next* batch still delivers
         // it on time (due >= end of next batch ~= now + 2 windows). With
         // drift-based due times this makes loose-TPOT requests skip
@@ -474,7 +475,7 @@ impl Policy for SlosServe {
         }
 
         // ---- standard prefills, earliest deadline first ----
-        prefills.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        prefills.sort_by(|a, b| a.1.total_cmp(&b.1));
         for &(id, _pddl, rem) in &prefills {
             if budget == 0 {
                 break;

@@ -101,7 +101,8 @@ pub fn solve_capped(tpots: &[f64], counts: &[usize], alpha: f64,
                 .iter()
                 .map(|&l| counts[l] * (spec_lens[l] + 1))
                 .sum();
-            let spec_step = live.iter().map(|&l| spec_lens[l]).max().unwrap();
+            let spec_step =
+                live.iter().map(|&l| spec_lens[l]).max().unwrap_or(0);
             let bs = m.time2bs(t, spec_step);
             if bs < verify_tokens {
                 continue; // decode verification alone doesn't fit

@@ -16,8 +16,13 @@ use crate::workload::{self, Rng};
 pub const SYSTEMS: [&str; 5] =
     ["slos-serve", "vllm", "vllm-spec", "sarathi", "distserve"];
 
-pub fn make_policy(name: &str, cfg: &ScenarioConfig) -> Box<dyn Policy> {
-    match name {
+/// Policy by CLI name; `None` for an unknown name (the CLI reports it
+/// with the valid list — see main.rs).
+pub fn try_make_policy(
+    name: &str,
+    cfg: &ScenarioConfig,
+) -> Option<Box<dyn Policy>> {
+    Some(match name {
         "slos-serve" => Box::new(SlosServe::new(cfg)),
         "slos-serve-ar" => Box::new(SlosServe::new(cfg).with_features(
             Features { speculative: false, ..Features::default() })),
@@ -29,7 +34,17 @@ pub fn make_policy(name: &str, cfg: &ScenarioConfig) -> Box<dyn Policy> {
         "vllm" => Box::new(Vllm::new()),
         "vllm-spec" => Box::new(Vllm::speculative(cfg)),
         "sarathi" => Box::new(Sarathi::new(cfg)),
-        other => panic!("unknown policy {other}"),
+        _ => return None,
+    })
+}
+
+/// Infallible variant for figure code whose policy names are the
+/// compile-time constants above.
+pub fn make_policy(name: &str, cfg: &ScenarioConfig) -> Box<dyn Policy> {
+    match try_make_policy(name, cfg) {
+        Some(p) => p,
+        // slos-lint: allow(p1) -- figure tables only pass SYSTEMS names
+        None => panic!("unknown policy {name}"),
     }
 }
 
@@ -106,7 +121,10 @@ pub fn fig1_summary(requests: usize) -> f64 {
     let mut ratios = Vec::new();
     println!("# Fig. 1 — capacity, ours vs best baseline");
     for (sc, row) in &data {
-        let ours = row.iter().find(|(s, _)| s == "slos-serve").unwrap().1;
+        let ours = row
+            .iter()
+            .find(|(s, _)| s == "slos-serve")
+            .map_or(f64::NAN, |&(_, c)| c);
         let best_base = row
             .iter()
             .filter(|(s, _)| s != "slos-serve")
@@ -622,6 +640,7 @@ pub fn fig15_overhead() -> Vec<f64> {
                 })
                 .collect();
             let planner = DpPlanner::new(&cfg, &m);
+            // slos-lint: allow(d2) -- fig15 *measures* sched wall time
             let t0 = std::time::Instant::now();
             let iters = 20;
             for _ in 0..iters {

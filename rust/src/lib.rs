@@ -26,6 +26,18 @@
 //!   Gated behind the `xla` cargo feature (needs the vendored `xla` and
 //!   `anyhow` crates from the offline toolchain image).
 //! * [`workload`], [`metrics`], [`memory`], [`config`] — substrates.
+//! * [`lint`] — `slos-lint`, the in-tree determinism & invariant
+//!   static-analysis pass (docs/LINTS.md) gating all of the above.
+
+// Whole-crate guarantees, machine-enforced (ISSUE 7). Everything here
+// is pure Rust over the PJRT FFI boundary's *safe* wrappers — there is
+// no legitimate unsafe in this crate, so it is forbidden outright. The
+// deeper determinism/invariant rules that rustc cannot see (unordered
+// map iteration, wall-clock reads, OS randomness, untested ledger
+// counters) live in `slos-lint`: docs/LINTS.md.
+#![forbid(unsafe_code)]
+#![deny(non_ascii_idents)]
+#![warn(unreachable_pub)]
 
 pub mod baselines;
 pub mod bench_harness;
@@ -34,6 +46,7 @@ pub mod coordinator;
 #[cfg(feature = "xla")]
 pub mod engine;
 pub mod figures;
+pub mod lint;
 pub mod memory;
 pub mod metrics;
 pub mod proptest_lite;

@@ -1,0 +1,17 @@
+// slos-lint fixture: allow-directive semantics, exercised by ../mod.rs
+// tests. Expected: line 7's allow suppresses d3@8 but NOT p1@8; line
+// 9's trailing allow suppresses p1@9; line 10's unknown rule and line
+// 12's missing reason are `lint` errors and suppress nothing; line
+// 14's allow fires on nothing (unused -> warn). Never compiled.
+pub fn f(opt: Option<u64>) -> u64 {
+    // slos-lint: allow(d3) -- fixture: suppress exactly this rule
+    let a = thread_rng().gen() + opt.unwrap();
+    let b = opt.unwrap(); // slos-lint: allow(p1) -- fixture: trailing form
+    // slos-lint: allow(nosuchrule) -- fixture: unknown rule id
+    let c = from_entropy();
+    // slos-lint: allow(d2)
+    let t = std::time::Instant::now();
+    // slos-lint: allow(d1) -- fixture: suppresses nothing on line 15
+    let d = 0;
+    a + b + c + d
+}

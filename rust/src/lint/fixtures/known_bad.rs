@@ -1,0 +1,28 @@
+// slos-lint fixture: known-bad. Each construct below seeds exactly one
+// violation; ../mod.rs tests assert the (rule, line) pairs. This file
+// is never compiled (not a declared module) and the tree walker skips
+// fixtures/ — only the unit tests lex it, under a router-scoped path.
+
+pub struct State {
+    pub requests: HashMap<u64, u64>,
+}
+
+pub fn bad(state: &State, set: HashSet<u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in &state.requests {
+        total += v;
+    }
+    let n: usize = state.requests.keys().count();
+    for s in set.iter() {
+        total += s;
+    }
+    let t0 = std::time::Instant::now();
+    let mut rng = thread_rng();
+    let dev = "/dev/urandom";
+    let first = state.requests.get(&0).unwrap();
+    let second = state.requests.get(&1).expect("present");
+    if total == 0 {
+        panic!("no work");
+    }
+    total + n as u64 + first + second
+}

@@ -1,0 +1,19 @@
+// slos-lint fixture: known-good. Deterministic idioms the rules must
+// not flag: BTreeMap iteration, Vec iteration, collect-and-sort,
+// checked access via unwrap_or. Never compiled; lexed by ../mod.rs
+// tests under a router-scoped path and expected to come back clean.
+
+use std::collections::BTreeMap;
+
+pub fn good(m: &BTreeMap<u64, u64>, v: &[u64]) -> u64 {
+    let mut total = 0;
+    for (_k, val) in m {
+        total += val;
+    }
+    let mut items: Vec<u64> = Vec::new();
+    for x in v.iter() {
+        items.push(*x);
+    }
+    items.sort_unstable();
+    total + items.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,8 @@
+// L1 fixture: `completed` is referenced by the fake test source the
+// ../mod.rs test supplies; `orphaned_counter` is not (expected l1@6).
+// `names` is non-numeric and outside L1's scope. Never compiled.
+pub struct MultiReplicaResult {
+    pub completed: usize,
+    pub orphaned_counter: u64,
+    pub names: Vec<String>,
+}

@@ -1,0 +1,699 @@
+//! Hand-rolled Rust lexer for `slos-lint` (no `syn` — the offline
+//! environment is dependency-free, DESIGN.md §2). It is *not* a full
+//! Rust lexer: it produces exactly what the rules in [`super::rules`]
+//! need — a token stream with line spans where comments are stripped,
+//! string/char literals are opaque single tokens (their text retained so
+//! D3 can look inside for `/dev/urandom`), and lifetimes are
+//! distinguished from char literals — plus the `// slos-lint:
+//! allow(<rule>) -- <reason>` escape-hatch directives found in line
+//! comments, and a per-token `#[cfg(test)]` / `#[test]` mask so rules
+//! can exempt test code.
+//!
+//! Handled literal forms: line + nested block comments, `"…"` with
+//! escapes, raw strings `r"…"` / `r#"…"#` (any `#` count), byte
+//! strings `b"…"`, raw byte strings `br#"…"#`, char literals `'a'` /
+//! `'\n'` / `b'x'`, lifetimes `'ident`. Numbers are lexed loosely
+//! (digits, then alphanumerics, one decimal point) — enough to keep
+//! `0..n` and `1e-3` from confusing the stream.
+
+/// Token classes, deliberately coarse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal (raw/byte included); `text` is the body without
+    /// quotes so rules can inspect the contents.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// `'ident` lifetime.
+    Lifetime,
+    /// Single punctuation character (`text` is one char).
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.chars().next() == Some(c)
+    }
+}
+
+/// One parsed `// slos-lint: allow(<rules>) -- <reason>` directive.
+/// `target_line` is the line the directive governs: its own line when
+/// the comment trails code, otherwise the next line that carries a
+/// token (resolved by [`lex`] after the token stream is complete).
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    /// Line the comment itself sits on.
+    pub line: u32,
+    /// Line whose violations this directive suppresses.
+    pub target_line: u32,
+    /// Rule ids inside `allow(...)`, trimmed, lowercased.
+    pub rules: Vec<String>,
+    /// A non-empty reason followed ` -- `.
+    pub has_reason: bool,
+    /// The comment said `slos-lint:` but the rest didn't parse.
+    pub malformed: bool,
+}
+
+/// A lexed source file: everything the rules need, no filesystem ties.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (used for rule scoping).
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub allows: Vec<AllowDirective>,
+    /// `in_test[i]` — token `i` is inside a `#[cfg(test)]` / `#[test]`
+    /// item (the whole attributed item, brace-matched).
+    pub in_test: Vec<bool>,
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    /// Whether the current line already produced a token (trailing- vs
+    /// own-line comment detection).
+    line_has_token: bool,
+    tokens: Vec<Token>,
+    allows: Vec<AllowDirective>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(ch) = c {
+            self.i += 1;
+            if ch == '\n' {
+                self.line += 1;
+                self.line_has_token = false;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: u32) {
+        self.tokens.push(Token { kind, text, line });
+        self.line_has_token = true;
+    }
+
+    fn is_ident_start(c: char) -> bool {
+        c.is_ascii_alphabetic() || c == '_'
+    }
+
+    fn is_ident_continue(c: char) -> bool {
+        c.is_ascii_alphanumeric() || c == '_'
+    }
+
+    /// Consume a line comment (after the leading `//` was seen, but not
+    /// consumed). Parses a `slos-lint:` directive if present.
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let trailing = self.line_has_token;
+        let mut body = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            body.push(c);
+            self.i += 1; // no newline inside, bump() bookkeeping unneeded
+        }
+        // Strip the comment markers: `//`, `///`, `//!` all collapse.
+        let text = body.trim_start_matches(['/', '!']).trim();
+        if let Some(rest) = text.strip_prefix("slos-lint:") {
+            self.allows.push(parse_directive(rest, line, trailing));
+        }
+    }
+
+    /// Consume a (nested) block comment; `/*` already consumed.
+    fn block_comment(&mut self) {
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.bump() {
+                Some('/') if self.peek(0) == Some('*') => {
+                    self.bump();
+                    depth += 1;
+                }
+                Some('*') if self.peek(0) == Some('/') => {
+                    self.bump();
+                    depth -= 1;
+                }
+                Some(_) => {}
+                None => break,
+            }
+        }
+    }
+
+    /// Consume a `"…"` body (opening quote already consumed); returns
+    /// the body text.
+    fn string_body(&mut self) -> String {
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                Some('\\') => {
+                    s.push('\\');
+                    if let Some(e) = self.bump() {
+                        s.push(e);
+                    }
+                }
+                Some('"') | None => break,
+                Some(c) => s.push(c),
+            }
+        }
+        s
+    }
+
+    /// Consume a raw-string body: `#` count already known, opening
+    /// quote already consumed.
+    fn raw_string_body(&mut self, hashes: usize) -> String {
+        let mut s = String::new();
+        loop {
+            match self.bump() {
+                Some('"') => {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if self.peek(k) != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        for _ in 0..hashes {
+                            self.bump();
+                        }
+                        break;
+                    }
+                    s.push('"');
+                }
+                Some(c) => s.push(c),
+                None => break,
+            }
+        }
+        s
+    }
+
+    /// At `'`: char literal or lifetime. The `'` is not yet consumed.
+    fn quote(&mut self) {
+        let line = self.line;
+        self.bump(); // '
+        match self.peek(0) {
+            Some('\\') => {
+                // Escaped char literal: '\n', '\'', '\u{..}' …
+                self.bump();
+                let mut s = String::from("\\");
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                    s.push(c);
+                }
+                self.push(TokKind::Char, s, line);
+            }
+            Some(c) if Self::is_ident_start(c) => {
+                let mut s = String::new();
+                while let Some(c) = self.peek(0) {
+                    if Self::is_ident_continue(c) {
+                        s.push(c);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                if self.peek(0) == Some('\'') {
+                    self.bump(); // closing quote: 'a'
+                    self.push(TokKind::Char, s, line);
+                } else {
+                    self.push(TokKind::Lifetime, s, line);
+                }
+            }
+            Some(_) => {
+                // Non-ident char literal: '+', ' ', '0'…
+                let mut s = String::new();
+                while let Some(c) = self.bump() {
+                    if c == '\'' {
+                        break;
+                    }
+                    s.push(c);
+                    if s.len() > 8 {
+                        break; // damaged input; don't scan forever
+                    }
+                }
+                self.push(TokKind::Char, s, line);
+            }
+            None => {}
+        }
+    }
+
+    /// At `r`/`b`: raw/byte string if the lookahead matches, else let
+    /// the caller lex an identifier. Returns true when consumed.
+    fn maybe_raw_or_byte(&mut self) -> bool {
+        let line = self.line;
+        let c0 = match self.peek(0) {
+            Some(c) => c,
+            None => return false,
+        };
+        // Compute (prefix length, raw?, byte-char?) for the forms
+        // r" r#" b" br" br#" b' — anything else is an identifier.
+        let (skip, raw) = match (c0, self.peek(1), self.peek(2)) {
+            ('r', Some('"'), _) | ('r', Some('#'), _) => (1, true),
+            ('b', Some('"'), _) => (1, false),
+            ('b', Some('r'), Some('"')) | ('b', Some('r'), Some('#')) => {
+                (2, true)
+            }
+            ('b', Some('\''), _) => {
+                self.bump(); // b
+                self.quote();
+                return true;
+            }
+            _ => return false,
+        };
+        // Raw forms may carry `#`s between prefix and quote; a `r#ident`
+        // raw identifier has ident chars after `#` instead of `"`.
+        let mut hashes = 0usize;
+        while self.peek(skip + hashes) == Some('#') {
+            hashes += 1;
+        }
+        if self.peek(skip + hashes) != Some('"') {
+            return false; // r#ident or bare `r` ident
+        }
+        if raw && hashes == 0 && self.peek(skip) != Some('"') {
+            return false;
+        }
+        for _ in 0..(skip + hashes + 1) {
+            self.bump(); // prefix, hashes, opening quote
+        }
+        let body = if raw {
+            self.raw_string_body(hashes)
+        } else {
+            self.string_body()
+        };
+        self.push(TokKind::Str, body, line);
+        true
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let mut s = String::new();
+        let mut seen_dot = false;
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                s.push(c);
+                self.bump();
+            } else if c == '.' && !seen_dot
+                && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+            {
+                seen_dot = true;
+                s.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Num, s, line);
+    }
+
+    fn run(mut self) -> (Vec<Token>, Vec<AllowDirective>) {
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('/') {
+                self.i += 2;
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.bump();
+                self.bump();
+                self.block_comment();
+            } else if c == '"' {
+                let line = self.line;
+                self.bump();
+                let body = self.string_body();
+                self.push(TokKind::Str, body, line);
+            } else if c == '\'' {
+                self.quote();
+            } else if (c == 'r' || c == 'b') && self.maybe_raw_or_byte() {
+                // consumed as raw/byte literal
+            } else if Self::is_ident_start(c) {
+                let line = self.line;
+                let mut s = String::new();
+                while let Some(c) = self.peek(0) {
+                    if Self::is_ident_continue(c) {
+                        s.push(c);
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.push(TokKind::Ident, s, line);
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else if c.is_whitespace() {
+                self.bump();
+            } else {
+                let line = self.line;
+                self.bump();
+                self.push(TokKind::Punct, c.to_string(), line);
+            }
+        }
+        (self.tokens, self.allows)
+    }
+}
+
+/// Parse the tail of `slos-lint: <rest>` into a directive. Expected
+/// grammar: `allow(<rule>[, <rule>…]) -- <reason>`.
+fn parse_directive(rest: &str, line: u32, trailing: bool) -> AllowDirective {
+    let mut d = AllowDirective {
+        line,
+        // Trailing comments govern their own line; own-line comments are
+        // re-targeted to the next token line once lexing finishes.
+        target_line: if trailing { line } else { line + 1 },
+        rules: Vec::new(),
+        has_reason: false,
+        malformed: false,
+    };
+    let rest = rest.trim();
+    let body = match rest
+        .strip_prefix("allow")
+        .map(str::trim_start)
+        .and_then(|r| r.strip_prefix('('))
+    {
+        Some(b) => b,
+        None => {
+            d.malformed = true;
+            return d;
+        }
+    };
+    let close = match body.find(')') {
+        Some(p) => p,
+        None => {
+            d.malformed = true;
+            return d;
+        }
+    };
+    d.rules = body
+        .get(..close)
+        .unwrap_or("")
+        .split(',')
+        .map(|r| r.trim().to_ascii_lowercase())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if d.rules.is_empty() {
+        d.malformed = true;
+    }
+    let tail = body.get(close + 1..).unwrap_or("").trim_start();
+    if let Some(reason) = tail.strip_prefix("--") {
+        d.has_reason = !reason.trim().is_empty();
+    }
+    d
+}
+
+/// Resolve own-line directives to the next line that carries a token.
+fn resolve_targets(tokens: &[Token], allows: &mut [AllowDirective]) {
+    for a in allows.iter_mut() {
+        if a.target_line == a.line {
+            continue; // trailing: already resolved
+        }
+        if let Some(t) = tokens.iter().find(|t| t.line > a.line) {
+            a.target_line = t.line;
+        }
+    }
+}
+
+/// Mark every token under a `#[cfg(test)]` / `#[test]` attributed item.
+/// The mask covers the attribute itself, any stacked attributes after
+/// it, and the item body through its matching closing brace (or the
+/// terminating `;` for brace-less items).
+fn mark_test_regions(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        match attr_span(tokens, i) {
+            Some((end, is_test)) if is_test => {
+                let start = i;
+                let mut j = end;
+                // Skip stacked attributes (`#[cfg(test)] #[derive(..)]`).
+                while let Some((e, _)) = attr_span(tokens, j) {
+                    j = e;
+                }
+                // Item body: everything to the matching `}` of the first
+                // `{`, or to `;` if it comes first (e.g. `mod tests;`).
+                let mut depth = 0usize;
+                while j < tokens.len() {
+                    let t = &tokens[j];
+                    if t.is_punct('{') {
+                        depth += 1;
+                    } else if t.is_punct('}') {
+                        depth = depth.saturating_sub(1);
+                        if depth == 0 {
+                            break;
+                        }
+                    } else if t.is_punct(';') && depth == 0 {
+                        break;
+                    }
+                    j += 1;
+                }
+                for m in mask.iter_mut().take((j + 1).min(tokens.len()))
+                    .skip(start)
+                {
+                    *m = true;
+                }
+                i = j + 1;
+            }
+            Some((end, _)) => i = end,
+            None => i += 1,
+        }
+    }
+    mask
+}
+
+/// If `tokens[i]` opens an attribute `#[...]`, return (index past the
+/// closing `]`, whether it is `#[test]` / contains `cfg ( … test … )`).
+fn attr_span(tokens: &[Token], i: usize) -> Option<(usize, bool)> {
+    if !tokens.get(i)?.is_punct('#') {
+        return None;
+    }
+    let mut j = i + 1;
+    // `#![...]` inner attributes: skip the `!`.
+    if tokens.get(j)?.is_punct('!') {
+        j += 1;
+    }
+    if !tokens.get(j)?.is_punct('[') {
+        return None;
+    }
+    let mut depth = 0usize;
+    let mut is_test = false;
+    let mut saw_cfg = false;
+    while let Some(t) = tokens.get(j) {
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                j += 1;
+                break;
+            }
+        } else if t.is_ident("cfg") {
+            saw_cfg = true;
+        } else if t.is_ident("test") {
+            // `#[test]` directly, or `test` anywhere inside `cfg(...)`
+            // (covers `cfg(test)` and `cfg(all(test, ...))`).
+            if saw_cfg || j == i + 2 {
+                is_test = true;
+            }
+        }
+        j += 1;
+    }
+    Some((j, is_test))
+}
+
+/// Lex `src` into a [`SourceFile`]. `path` is kept verbatim (the rules
+/// use it for scoping) — pass repo-relative `/`-separated paths.
+pub fn lex(path: &str, src: &str) -> SourceFile {
+    let lexer = Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        line_has_token: false,
+        tokens: Vec::new(),
+        allows: Vec::new(),
+    };
+    let (tokens, mut allows) = lexer.run();
+    resolve_targets(&tokens, &mut allows);
+    let in_test = mark_test_regions(&tokens);
+    SourceFile { path: path.to_string(), tokens, allows, in_test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(f: &SourceFile) -> Vec<&str> {
+        f.tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let f = lex(
+            "x.rs",
+            "// thread_rng in a comment\nlet s = \"thread_rng\"; \
+             /* block thread_rng /* nested */ still */ let t = 1;",
+        );
+        assert!(!idents(&f).contains(&"thread_rng"));
+        assert!(idents(&f).contains(&"let"));
+        // The string body is retained on the Str token itself.
+        assert!(f
+            .tokens
+            .iter()
+            .any(|t| t.kind == TokKind::Str && t.text == "thread_rng"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let f = lex(
+            "x.rs",
+            "let a = r#\"raw \"quoted\" body\"#; let b: &'static str = r\"z\";\n\
+             let c = 'x'; let d = '\\n'; let e = b'q'; fn g<'a>(v: &'a u8) {}",
+        );
+        let strs: Vec<&str> = f
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["raw \"quoted\" body", "z"]);
+        let lifetimes: Vec<&str> = f
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["static", "a", "a"]);
+        assert_eq!(
+            f.tokens.iter().filter(|t| t.kind == TokKind::Char).count(),
+            3
+        );
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let f = lex("x.rs", "/* a\nb\nc */ one\n\"s1\ns2\"\ntwo");
+        let one = f.tokens.iter().find(|t| t.is_ident("one")).map(|t| t.line);
+        let two = f.tokens.iter().find(|t| t.is_ident("two")).map(|t| t.line);
+        assert_eq!(one, Some(3));
+        assert_eq!(two, Some(6));
+    }
+
+    #[test]
+    fn allow_directive_trailing_and_own_line() {
+        let src = "\
+let a = 1; // slos-lint: allow(d1) -- trailing reason
+// slos-lint: allow(p1, d2) -- own-line reason
+
+let b = 2;
+";
+        let f = lex("x.rs", src);
+        assert_eq!(f.allows.len(), 2);
+        assert_eq!(f.allows[0].target_line, 1);
+        assert_eq!(f.allows[0].rules, vec!["d1"]);
+        assert!(f.allows[0].has_reason);
+        // Own-line directive skips the blank line to the next token.
+        assert_eq!(f.allows[1].target_line, 4);
+        assert_eq!(f.allows[1].rules, vec!["p1", "d2"]);
+    }
+
+    #[test]
+    fn allow_directive_error_forms() {
+        let f = lex(
+            "x.rs",
+            "// slos-lint: allow(d1)\n// slos-lint: deny(d1) -- x\n\
+             // slos-lint: allow() -- y\n",
+        );
+        assert_eq!(f.allows.len(), 3);
+        assert!(!f.allows[0].has_reason && !f.allows[0].malformed);
+        assert!(f.allows[1].malformed, "only allow(...) is understood");
+        assert!(f.allows[2].malformed, "empty rule list");
+    }
+
+    #[test]
+    fn cfg_test_mask_covers_module_body() {
+        let src = "\
+fn live() { x.unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { y.unwrap(); }
+}
+fn live2() {}
+";
+        let f = lex("x.rs", src);
+        let unwraps: Vec<(u32, bool)> = f
+            .tokens
+            .iter()
+            .zip(&f.in_test)
+            .filter(|(t, _)| t.is_ident("unwrap"))
+            .map(|(t, &m)| (t.line, m))
+            .collect();
+        assert_eq!(unwraps, vec![(1, false), (4, true)]);
+        let live2 = f
+            .tokens
+            .iter()
+            .zip(&f.in_test)
+            .find(|(t, _)| t.is_ident("live2"))
+            .map(|(_, &m)| m);
+        assert_eq!(live2, Some(false));
+    }
+
+    #[test]
+    fn test_attr_and_stacked_attrs_masked() {
+        let src = "\
+#[test]
+#[ignore]
+fn a_case() { assert!(z.unwrap()); }
+fn live() {}
+";
+        let f = lex("x.rs", src);
+        let masked = f
+            .tokens
+            .iter()
+            .zip(&f.in_test)
+            .find(|(t, _)| t.is_ident("unwrap"))
+            .map(|(_, &m)| m);
+        assert_eq!(masked, Some(true));
+        let live = f
+            .tokens
+            .iter()
+            .zip(&f.in_test)
+            .find(|(t, _)| t.is_ident("live"))
+            .map(|(_, &m)| m);
+        assert_eq!(live, Some(false));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let f = lex("x.rs", "for i in 0..n { let x = 1e-3; }");
+        let nums: Vec<&str> = f
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "1e", "3"]);
+        assert!(f.tokens.iter().any(|t| t.is_ident("n")));
+    }
+}

@@ -1,0 +1,360 @@
+//! `slos-lint` — the repo's dependency-free determinism & invariant
+//! static-analysis pass (ISSUE 7).
+//!
+//! The golden trace, `tests/planner_diff.rs`'s flat-vs-reference
+//! bit-identity, and `integration_chaos.rs`'s same-seed determinism all
+//! rest on conventions a compiler never checks: no unordered-map
+//! iteration in planning paths, no wall-clock or OS randomness in the
+//! simulator, and ledger counters that every PR reconciles in tests.
+//! This module makes those conventions mechanical. See docs/LINTS.md
+//! for the rule catalogue and the allow syntax.
+//!
+//! Three entry points share the same core:
+//! * `cargo run --bin slos_lint` — human report, exit 1 on deny
+//! * `rust/tests/lint_clean.rs` — tier-1 gate (tree must be clean)
+//! * unit tests here — fixtures under `fixtures/` (never compiled;
+//!   the tree walker skips that directory)
+//!
+//! Escape hatch, checked by the pass itself:
+//! `// slos-lint: allow(<rule>[, <rule>]) -- <reason>`
+//! Trailing form governs its own line; own-line form governs the next
+//! line bearing a token. A missing reason, an unknown rule id, or an
+//! allow that suppresses nothing is itself reported (the `lint`
+//! meta-rule, which cannot be allowed away).
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lexer::SourceFile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Reported, never fails the run (advisory).
+    Warn,
+    /// Fails `slos_lint` / `lint_clean.rs` unless allow-annotated.
+    Deny,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Rule id (`d1`…`l1`, or `lint` for broken annotations).
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Repo-relative `/`-separated path.
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Outcome of a lint run over a set of lexed files.
+#[derive(Debug)]
+pub struct Report {
+    /// Surviving violations, sorted by (path, line, rule).
+    pub violations: Vec<Violation>,
+    /// Files examined.
+    pub files: usize,
+    /// Violations suppressed by valid allow directives.
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn deny_count(&self) -> usize {
+        self.violations
+            .iter()
+            .filter(|v| v.severity == Severity::Deny)
+            .count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.violations
+            .iter()
+            .filter(|v| v.severity == Severity::Warn)
+            .count()
+    }
+
+    /// Human-readable report (the CI artifact / CLI output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            let sev = match v.severity {
+                Severity::Deny => "deny",
+                Severity::Warn => "warn",
+            };
+            s.push_str(&format!(
+                "{}:{}: {} [{}] {}\n",
+                v.path, v.line, sev, v.rule, v.msg
+            ));
+        }
+        s.push_str(&format!(
+            "slos-lint: {} file(s) examined, {} deny, {} warn, {} \
+             suppressed by allow\n",
+            self.files,
+            self.deny_count(),
+            self.warn_count(),
+            self.suppressed,
+        ));
+        s
+    }
+}
+
+/// Lint a set of already-lexed files: per-file rules, the cross-file L1
+/// pass, then allow-directive validation and application.
+pub fn lint_sources(files: &[SourceFile]) -> Report {
+    let mut violations: Vec<Violation> = Vec::new();
+    for f in files {
+        violations.extend(rules::check_file(f));
+    }
+    violations.extend(rules::check_l1(files));
+
+    // Directive validation + application. Invalid directives (missing
+    // reason, unknown rule, malformed) never suppress — the annotation
+    // has to be fixed first — and report under the un-allowable `lint`
+    // meta-rule.
+    let mut meta: Vec<Violation> = Vec::new();
+    let mut suppressed = 0usize;
+    for f in files {
+        for d in &f.allows {
+            if d.malformed {
+                meta.push(Violation {
+                    rule: "lint",
+                    severity: Severity::Deny,
+                    path: f.path.clone(),
+                    line: d.line,
+                    msg: "malformed slos-lint directive — expected \
+                          `slos-lint: allow(<rule>[, <rule>]) -- <reason>`"
+                        .to_string(),
+                });
+                continue;
+            }
+            let mut valid = true;
+            for r in &d.rules {
+                if !rules::is_known_rule(r) {
+                    valid = false;
+                    meta.push(Violation {
+                        rule: "lint",
+                        severity: Severity::Deny,
+                        path: f.path.clone(),
+                        line: d.line,
+                        msg: format!(
+                            "unknown rule `{r}` in allow directive \
+                             (known: {})",
+                            rules::RULE_IDS.join(", ")
+                        ),
+                    });
+                }
+            }
+            if !d.has_reason {
+                valid = false;
+                meta.push(Violation {
+                    rule: "lint",
+                    severity: Severity::Deny,
+                    path: f.path.clone(),
+                    line: d.line,
+                    msg: "allow directive without `-- <reason>` — say why \
+                          the invariant holds"
+                        .to_string(),
+                });
+            }
+            if !valid {
+                continue;
+            }
+            let mut used = false;
+            violations.retain(|v| {
+                let hit = v.path == f.path
+                    && v.line == d.target_line
+                    && d.rules.iter().any(|r| r.as_str() == v.rule);
+                if hit {
+                    used = true;
+                    suppressed += 1;
+                }
+                !hit
+            });
+            if !used {
+                meta.push(Violation {
+                    rule: "lint",
+                    severity: Severity::Warn,
+                    path: f.path.clone(),
+                    line: d.line,
+                    msg: "unused allow directive — nothing on its target \
+                          line triggers the listed rule(s)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    violations.extend(meta);
+    violations.sort_by(|a, b| {
+        (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule))
+    });
+    Report { violations, files: files.len(), suppressed }
+}
+
+/// Directories walked relative to the repo root. `rust/vendor` is
+/// third-party (not ours to lint) and `rust/src/lint/fixtures` is
+/// deliberately-bad lexer food — both are skipped.
+const WALK_ROOTS: &[&str] =
+    &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+fn skip_rel_path(rel: &str) -> bool {
+    rel.starts_with("rust/src/lint/fixtures") || rel.contains("/vendor/")
+}
+
+fn walk_rs_files(
+    abs: &Path,
+    rel: &str,
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<(), String> {
+    let entries = fs::read_dir(abs)
+        .map_err(|e| format!("read_dir {}: {e}", abs.display()))?;
+    let mut names: Vec<String> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir entry: {e}"))?;
+        names.push(entry.file_name().to_string_lossy().into_owned());
+    }
+    names.sort(); // deterministic report order on every filesystem
+    for name in names {
+        let child_abs = abs.join(&name);
+        let child_rel = format!("{rel}/{name}");
+        if skip_rel_path(&child_rel) {
+            continue;
+        }
+        if child_abs.is_dir() {
+            walk_rs_files(&child_abs, &child_rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((child_rel, child_abs));
+        }
+    }
+    Ok(())
+}
+
+/// Lint the tree rooted at the repo root: lex every `.rs` file under
+/// [`WALK_ROOTS`] and run [`lint_sources`].
+pub fn lint_tree(root: &Path) -> Result<Report, String> {
+    let mut paths: Vec<(String, PathBuf)> = Vec::new();
+    for r in WALK_ROOTS {
+        let abs = root.join(r);
+        if abs.is_dir() {
+            walk_rs_files(&abs, r, &mut paths)?;
+        }
+    }
+    if paths.is_empty() {
+        return Err(format!(
+            "no .rs files under {} — wrong --root?",
+            root.display()
+        ));
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for (rel, abs) in &paths {
+        let src = fs::read_to_string(abs)
+            .map_err(|e| format!("read {}: {e}", abs.display()))?;
+        files.push(lexer::lex(rel, &src));
+    }
+    Ok(lint_sources(&files))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lexer::lex;
+    use super::*;
+
+    const KNOWN_BAD: &str = include_str!("fixtures/known_bad.rs");
+    const KNOWN_GOOD: &str = include_str!("fixtures/known_good.rs");
+    const ALLOWS: &str = include_str!("fixtures/allows.rs");
+    const L1_STRUCTS: &str = include_str!("fixtures/l1_structs.rs");
+
+    fn pairs(r: &Report) -> Vec<(&'static str, u32, Severity)> {
+        r.violations
+            .iter()
+            .map(|v| (v.rule, v.line, v.severity))
+            .collect()
+    }
+
+    #[test]
+    fn known_bad_fixture_every_rule_at_exact_lines() {
+        // Lexed under a router path: d1 scope, p1 scope, d2 non-exempt.
+        let f = lex("rust/src/router/fixture_bad.rs", KNOWN_BAD);
+        let r = lint_sources(&[f]);
+        assert_eq!(
+            pairs(&r),
+            vec![
+                ("d1", 12, Severity::Deny), // for over &state.requests
+                ("d1", 15, Severity::Deny), // .keys()
+                ("d1", 16, Severity::Deny), // set.iter(), HashSet param
+                ("d2", 19, Severity::Deny), // Instant::now()
+                ("d3", 20, Severity::Deny), // thread_rng()
+                ("d3", 21, Severity::Deny), // "/dev/urandom" literal
+                ("p1", 22, Severity::Deny), // .unwrap()
+                ("p1", 23, Severity::Deny), // .expect()
+                ("p1", 25, Severity::Deny), // panic!
+            ]
+        );
+    }
+
+    #[test]
+    fn known_good_fixture_is_clean() {
+        let f = lex("rust/src/router/fixture_good.rs", KNOWN_GOOD);
+        let r = lint_sources(&[f]);
+        assert_eq!(pairs(&r), vec![]);
+        assert_eq!(r.suppressed, 0);
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_the_listed_rule() {
+        let f = lex("rust/src/router/fixture_allows.rs", ALLOWS);
+        let r = lint_sources(&[f]);
+        // Line 8 carries both d3 (suppressed by the own-line allow on
+        // line 7) and p1 (NOT listed — must survive).
+        assert_eq!(
+            pairs(&r),
+            vec![
+                ("p1", 8, Severity::Deny),    // survives allow(d3)
+                ("lint", 10, Severity::Deny), // unknown rule id
+                ("d3", 11, Severity::Deny),   // invalid allow suppresses nothing
+                ("lint", 12, Severity::Deny), // missing -- reason
+                ("d2", 13, Severity::Deny),   // reasonless allow is inert
+                ("lint", 14, Severity::Warn), // unused allow
+            ]
+        );
+        // d3@8 (own-line) and p1@9 (trailing) were suppressed.
+        assert_eq!(r.suppressed, 2);
+    }
+
+    #[test]
+    fn l1_cross_file_counter_coverage() {
+        let lib = lex("rust/src/router/balancer.rs", L1_STRUCTS);
+        let test = lex(
+            "rust/tests/integration_router.rs",
+            "fn t() { assert_eq!(res.completed, 7); }",
+        );
+        let r = lint_sources(&[lib, test]);
+        assert_eq!(pairs(&r), vec![("l1", 6, Severity::Deny)]);
+        let msg = r.violations.first().map(|v| v.msg.clone());
+        assert_eq!(
+            msg.map(|m| m.contains("MultiReplicaResult.orphaned_counter")),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn report_renders_paths_lines_and_summary() {
+        let f = lex("rust/src/router/fixture_bad.rs", KNOWN_BAD);
+        let r = lint_sources(&[f]);
+        let text = r.render();
+        assert!(text.contains("rust/src/router/fixture_bad.rs:12: deny [d1]"));
+        assert!(text.contains("1 file(s) examined, 9 deny"));
+    }
+
+    #[test]
+    fn lint_meta_rule_cannot_be_allowed() {
+        // `allow(lint)` is an unknown-rule error, so annotation problems
+        // can never be silenced by another annotation.
+        let src = "// slos-lint: allow(lint) -- trying to silence meta\n\
+                   fn f() {}\n";
+        let f = lex("rust/src/config.rs", src);
+        let r = lint_sources(&[f]);
+        assert_eq!(pairs(&r), vec![("lint", 1, Severity::Deny)]);
+    }
+}

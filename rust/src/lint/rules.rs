@@ -1,0 +1,670 @@
+//! Rule implementations for `slos-lint`. Each rule is a token-stream
+//! pass over a lexed [`SourceFile`] (see [`super::lexer`]); `check_l1`
+//! is the one cross-file pass. Scoping (which paths a rule covers) is
+//! decided here from the repo-relative path, so unit tests can exercise
+//! scoping by lexing fixture text under synthetic paths.
+//!
+//! Rules (docs/LINTS.md has the long-form rationale):
+//!   d1 — no unordered-map iteration in planning/routing/sim/workload
+//!   d2 — no wall-clock (`Instant`/`SystemTime`) outside bench_harness
+//!   d3 — no OS randomness anywhere (only seeded `workload::rng`)
+//!   p1 — no unwrap/expect/panic! in library code (slice-index → warn)
+//!   l1 — every pub numeric counter on SimResult/MultiReplicaResult is
+//!        referenced from rust/tests/
+//!
+//! NOTE: trigger names below live in string literals only — the lint
+//! lexes its own sources, and string/comment contents are never matched
+//! against ident-based rules, so the tables cannot flag themselves.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{SourceFile, TokKind, Token};
+use super::{Severity, Violation};
+
+/// Every allowable rule id (the `lint` meta-rule for broken annotations
+/// is deliberately absent — it cannot be allowed away).
+pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "p1", "l1"];
+
+pub fn is_known_rule(id: &str) -> bool {
+    RULE_IDS.contains(&id)
+}
+
+/// Unordered-map types whose iteration order depends on the hasher.
+/// `FxMap`/`FxSet` are this repo's aliases (coordinator/dp.rs).
+const MAP_TYPES: &[&str] =
+    &["HashMap", "HashSet", "FxMap", "FxSet", "IndexMap", "IndexSet"];
+
+/// Methods that only exist on maps/sets — flagged on *any* receiver
+/// inside d1 scope (no taint analysis needed to know the receiver).
+const MAP_ONLY_METHODS: &[&str] =
+    &["keys", "values", "values_mut", "into_keys", "into_values"];
+
+/// Iteration methods shared with Vec/slice — flagged only when the
+/// receiver ident is map-tainted (see `d1_taint`).
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "into_iter", "drain", "retain"];
+
+const WALL_CLOCK_TYPES: &[&str] = &["Instant", "SystemTime"];
+
+const OS_RANDOM_IDENTS: &[&str] =
+    &["thread_rng", "from_entropy", "OsRng", "getrandom"];
+
+/// Spelled split so the lint's own token stream never carries the
+/// forbidden substring inside a single string literal.
+const DEV_URANDOM: &str = concat!("/dev/", "urandom");
+const DEV_RANDOM: &str = concat!("/dev/", "random");
+
+/// Idents that may legitimately precede `[` without it being an index
+/// expression (macro-ish keywords; attribute `#[...]` is preceded by a
+/// `#` punct and never matches the ident case).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "let", "in", "if", "else", "match", "return", "for", "while", "loop",
+    "break", "continue", "as", "ref", "mut", "move", "where", "impl",
+    "fn", "pub", "use", "mod", "struct", "enum", "const", "static",
+    "type", "dyn", "box", "await", "yield",
+];
+
+/// Numeric field types L1 treats as counters.
+const NUMERIC_TYPES: &[&str] = &[
+    "usize", "u64", "u32", "u16", "u8", "i64", "i32", "i16", "i8", "f64",
+    "f32",
+];
+
+/// Structs whose pub numeric counters must be asserted on in tests.
+const LEDGER_STRUCTS: &[&str] = &["SimResult", "MultiReplicaResult"];
+
+// ---------------------------------------------------------------------
+// Path scoping
+// ---------------------------------------------------------------------
+
+fn in_d1_scope(path: &str) -> bool {
+    ["coordinator/", "router/", "sim/", "workload/"]
+        .iter()
+        .any(|d| path.contains(d))
+}
+
+fn d2_exempt(path: &str) -> bool {
+    // bench_harness owns wall-clock measurement by design; the other
+    // documented sites (`sched_wall_seconds`) carry allow(d2) inline.
+    path.ends_with("bench_harness.rs")
+}
+
+fn in_p1_scope(path: &str) -> bool {
+    // Library code only: src/ minus bins (main.rs *is* covered — its
+    // CLI plumbing should surface errors, not panic).
+    path.starts_with("rust/src/") && !path.starts_with("rust/src/bin/")
+}
+
+// ---------------------------------------------------------------------
+// Per-file checks
+// ---------------------------------------------------------------------
+
+/// Run every single-file rule that applies to `f`'s path.
+pub fn check_file(f: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if in_d1_scope(&f.path) {
+        check_d1(f, &mut out);
+    }
+    if !d2_exempt(&f.path) {
+        check_d2(f, &mut out);
+    }
+    check_d3(f, &mut out);
+    if in_p1_scope(&f.path) {
+        check_p1(f, &mut out);
+    }
+    out
+}
+
+fn viol(
+    rule: &'static str,
+    severity: Severity,
+    f: &SourceFile,
+    line: u32,
+    msg: String,
+) -> Violation {
+    Violation { rule, severity, path: f.path.clone(), line, msg }
+}
+
+/// Idents bound (or typed) as unordered maps in non-test code: struct
+/// fields / params / ascriptions (`name: HashMap<..>`) and let-bindings
+/// whose initializer mentions a map type (`let mut m = FxMap::..`).
+/// A per-file name set is a deliberate over-approximation — shadowing a
+/// map's name with a Vec needs an allow, which is the safe direction.
+fn d1_taint(f: &SourceFile) -> BTreeSet<String> {
+    let t = &f.tokens;
+    let mut tainted = BTreeSet::new();
+    for i in 0..t.len() {
+        if f.in_test.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        let Some(tok) = t.get(i) else { break };
+        // `name : [& | mut | 'a]* MapType` — field decls, fn params,
+        // type ascriptions. Reject `name ::` paths.
+        if tok.kind == TokKind::Ident
+            && t.get(i + 1).map(|n| n.is_punct(':')).unwrap_or(false)
+            && !t.get(i + 2).map(|n| n.is_punct(':')).unwrap_or(false)
+        {
+            let mut j = i + 2;
+            while t
+                .get(j)
+                .map(|n| {
+                    n.is_punct('&')
+                        || n.is_ident("mut")
+                        || n.kind == TokKind::Lifetime
+                })
+                .unwrap_or(false)
+            {
+                j += 1;
+            }
+            if t.get(j)
+                .map(|n| {
+                    n.kind == TokKind::Ident
+                        && MAP_TYPES.contains(&n.text.as_str())
+                })
+                .unwrap_or(false)
+            {
+                tainted.insert(tok.text.clone());
+            }
+        }
+        // `let [mut] name … = … MapType … ;` — scan a bounded window.
+        if tok.is_ident("let") {
+            let mut j = i + 1;
+            if t.get(j).map(|n| n.is_ident("mut")).unwrap_or(false) {
+                j += 1;
+            }
+            let Some(name) = t.get(j).filter(|n| n.kind == TokKind::Ident)
+            else {
+                continue;
+            };
+            let mut k = j + 1;
+            while k < t.len() && k < j + 64 {
+                let Some(n) = t.get(k) else { break };
+                if n.is_punct(';') {
+                    break;
+                }
+                if n.kind == TokKind::Ident
+                    && MAP_TYPES.contains(&n.text.as_str())
+                {
+                    tainted.insert(name.text.clone());
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    tainted
+}
+
+fn check_d1(f: &SourceFile, out: &mut Vec<Violation>) {
+    let tainted = d1_taint(f);
+    let t = &f.tokens;
+    for i in 0..t.len() {
+        // Nondeterministic iteration in #[cfg(test)] code can't corrupt
+        // a run's outputs, so d1 covers non-test tokens only.
+        if f.in_test.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        let Some(tok) = t.get(i) else { break };
+        // `.method(` receiver checks.
+        if tok.is_punct('.')
+            && t.get(i + 2).map(|n| n.is_punct('(')).unwrap_or(false)
+        {
+            let Some(m) = t.get(i + 1).filter(|n| n.kind == TokKind::Ident)
+            else {
+                continue;
+            };
+            if MAP_ONLY_METHODS.contains(&m.text.as_str()) {
+                out.push(viol(
+                    "d1",
+                    Severity::Deny,
+                    f,
+                    m.line,
+                    format!(
+                        ".{}() iterates an unordered map — use BTreeMap \
+                         or collect-and-sort",
+                        m.text
+                    ),
+                ));
+            } else if ITER_METHODS.contains(&m.text.as_str()) {
+                let recv_tainted = i
+                    .checked_sub(1)
+                    .and_then(|p| t.get(p))
+                    .map(|r| {
+                        r.kind == TokKind::Ident && tainted.contains(&r.text)
+                    })
+                    .unwrap_or(false);
+                if recv_tainted {
+                    out.push(viol(
+                        "d1",
+                        Severity::Deny,
+                        f,
+                        m.line,
+                        format!(
+                            ".{}() on a map-typed binding — unordered \
+                             iteration",
+                            m.text
+                        ),
+                    ));
+                }
+            }
+        }
+        // `for … in <expr> {` with a tainted ident in the iterator expr.
+        if tok.is_ident("for") {
+            let Some(in_pos) = (i + 1..(i + 14).min(t.len()))
+                .find(|&j| t.get(j).map(|n| n.is_ident("in")).unwrap_or(false))
+            else {
+                continue;
+            };
+            for j in in_pos + 1..(in_pos + 24).min(t.len()) {
+                let Some(n) = t.get(j) else { break };
+                if n.is_punct('{') {
+                    break;
+                }
+                // A tainted receiver of a method call (`map.iter()`)
+                // is the `.method(` branch's job — skip it here so one
+                // construct yields one violation.
+                let next_is_dot = t
+                    .get(j + 1)
+                    .map(|p| p.is_punct('.'))
+                    .unwrap_or(false);
+                if n.kind == TokKind::Ident
+                    && tainted.contains(&n.text)
+                    && !next_is_dot
+                {
+                    out.push(viol(
+                        "d1",
+                        Severity::Deny,
+                        f,
+                        n.line,
+                        format!(
+                            "for-loop over map-typed `{}` — unordered \
+                             iteration",
+                            n.text
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn check_d2(f: &SourceFile, out: &mut Vec<Violation>) {
+    for tok in &f.tokens {
+        if tok.kind == TokKind::Ident
+            && WALL_CLOCK_TYPES.contains(&tok.text.as_str())
+        {
+            out.push(viol(
+                "d2",
+                Severity::Deny,
+                f,
+                tok.line,
+                format!(
+                    "wall-clock `{}` outside bench_harness — breaks \
+                     same-seed bit-determinism",
+                    tok.text
+                ),
+            ));
+        }
+    }
+}
+
+fn check_d3(f: &SourceFile, out: &mut Vec<Violation>) {
+    for tok in &f.tokens {
+        let hit = match tok.kind {
+            TokKind::Ident => OS_RANDOM_IDENTS.contains(&tok.text.as_str()),
+            TokKind::Str => {
+                tok.text.contains(DEV_URANDOM) || tok.text.contains(DEV_RANDOM)
+            }
+            _ => false,
+        };
+        if hit {
+            out.push(viol(
+                "d3",
+                Severity::Deny,
+                f,
+                tok.line,
+                "OS randomness — use the seeded workload::rng::Rng only"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn check_p1(f: &SourceFile, out: &mut Vec<Violation>) {
+    let t = &f.tokens;
+    let mut index_sites: Vec<u32> = Vec::new();
+    for i in 0..t.len() {
+        if f.in_test.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        let Some(tok) = t.get(i) else { break };
+        if tok.is_punct('.')
+            && t.get(i + 2).map(|n| n.is_punct('(')).unwrap_or(false)
+        {
+            if let Some(m) = t.get(i + 1).filter(|n| {
+                n.is_ident("unwrap") || n.is_ident("expect")
+            }) {
+                out.push(viol(
+                    "p1",
+                    Severity::Deny,
+                    f,
+                    m.line,
+                    format!(
+                        ".{}() in library code — return an error or \
+                         annotate the invariant",
+                        m.text
+                    ),
+                ));
+            }
+        }
+        if tok.is_ident("panic")
+            && t.get(i + 1).map(|n| n.is_punct('!')).unwrap_or(false)
+        {
+            out.push(viol(
+                "p1",
+                Severity::Deny,
+                f,
+                tok.line,
+                "panic! in library code — return an error or annotate \
+                 the invariant"
+                    .to_string(),
+            ));
+        }
+        // Slice-index `expr[..]`: advisory only (warn, aggregated) —
+        // the tree has hundreds of hot-path index sites whose bounds
+        // are loop invariants; converting them all to .get() is a
+        // separate effort.
+        if tok.is_punct('[') {
+            let prev_indexes = i
+                .checked_sub(1)
+                .and_then(|p| t.get(p))
+                .map(|p| match p.kind {
+                    TokKind::Ident => {
+                        !NON_INDEX_KEYWORDS.contains(&p.text.as_str())
+                    }
+                    TokKind::Punct => p.is_punct(')') || p.is_punct(']'),
+                    _ => false,
+                })
+                .unwrap_or(false);
+            if prev_indexes {
+                index_sites.push(tok.line);
+            }
+        }
+    }
+    if let Some(first) = index_sites.first() {
+        out.push(viol(
+            "p1",
+            Severity::Warn,
+            f,
+            *first,
+            format!(
+                "{} unchecked slice-index site(s) (first here) — prefer \
+                 .get()/.get_mut() in new code",
+                index_sites.len()
+            ),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------
+// L1 — cross-file ledger-counter coverage
+// ---------------------------------------------------------------------
+
+/// Every `pub <field>: <numeric>` on the ledger structs must appear as
+/// an ident somewhere under rust/tests/ — a new counter cannot land
+/// without a reconciliation assertion.
+pub fn check_l1(files: &[SourceFile]) -> Vec<Violation> {
+    let mut test_idents: BTreeSet<&str> = BTreeSet::new();
+    for f in files {
+        if f.path.starts_with("rust/tests/") {
+            for tok in &f.tokens {
+                if tok.kind == TokKind::Ident {
+                    test_idents.insert(tok.text.as_str());
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for f in files {
+        for (strukt, field, line) in ledger_fields(&f.tokens) {
+            if !test_idents.contains(field.as_str()) {
+                out.push(Violation {
+                    rule: "l1",
+                    severity: Severity::Deny,
+                    path: f.path.clone(),
+                    line,
+                    msg: format!(
+                        "pub counter `{strukt}.{field}` is never \
+                         referenced under rust/tests/ — add a \
+                         reconciliation assertion"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Extract `(struct, field, line)` for pub numeric fields of the
+/// ledger structs in one token stream.
+fn ledger_fields(t: &[Token]) -> Vec<(String, String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        let is_target = t.get(i).map(|n| n.is_ident("struct")).unwrap_or(false)
+            && t.get(i + 1)
+                .map(|n| {
+                    n.kind == TokKind::Ident
+                        && LEDGER_STRUCTS.contains(&n.text.as_str())
+                })
+                .unwrap_or(false);
+        if !is_target {
+            i += 1;
+            continue;
+        }
+        let strukt = t.get(i + 1).map(|n| n.text.clone()).unwrap_or_default();
+        // Walk to the body's `{`, then fields at depth 1 until the
+        // matching `}`.
+        let mut j = i + 2;
+        while j < t.len() && !t.get(j).map(|n| n.is_punct('{')).unwrap_or(true)
+        {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < t.len() {
+            let Some(n) = t.get(j) else { break };
+            if n.is_punct('{') {
+                depth += 1;
+            } else if n.is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth == 1 && n.is_ident("pub") {
+                // `pub field : Type` — first type token decides
+                // numeric-ness; generics (Vec<..>) never match.
+                if let (Some(name), Some(colon), Some(ty)) =
+                    (t.get(j + 1), t.get(j + 2), t.get(j + 3))
+                {
+                    if name.kind == TokKind::Ident
+                        && colon.is_punct(':')
+                        && ty.kind == TokKind::Ident
+                        && NUMERIC_TYPES.contains(&ty.text.as_str())
+                    {
+                        out.push((strukt.clone(), name.text.clone(), name.line));
+                    }
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn denies(v: &[Violation], rule: &str) -> Vec<u32> {
+        v.iter()
+            .filter(|x| x.rule == rule && x.severity == Severity::Deny)
+            .map(|x| x.line)
+            .collect()
+    }
+
+    #[test]
+    fn d1_map_only_methods_any_receiver() {
+        let f = lex(
+            "rust/src/router/x.rs",
+            "fn f(m: &Whatever) {\n    let s: usize = m.values().sum();\n}",
+        );
+        assert_eq!(denies(&check_file(&f), "d1"), vec![2]);
+    }
+
+    #[test]
+    fn d1_iter_only_on_tainted_receiver() {
+        let src = "\
+struct S { requests: HashMap<u64, R> }
+fn f(s: &S, v: &Vec<u64>) {
+    for x in v.iter() {}
+    let requests = &s.requests;
+    for r in requests.iter() {}
+}
+";
+        let f = lex("rust/src/sim/x.rs", src);
+        // Only line 5 (tainted `requests`), not line 3 (Vec).
+        assert_eq!(denies(&check_file(&f), "d1"), vec![5]);
+    }
+
+    #[test]
+    fn d1_for_loop_over_map_binding() {
+        let src = "\
+fn f() {
+    let mut next = FxMap::default();
+    for (k, v) in &next {}
+}
+";
+        let f = lex("rust/src/coordinator/x.rs", src);
+        assert_eq!(denies(&check_file(&f), "d1"), vec![3]);
+    }
+
+    #[test]
+    fn d1_out_of_scope_dirs_and_tests_exempt() {
+        let src = "\
+fn f(m: &HashMap<u64, u64>) { for x in m { } }
+#[cfg(test)]
+mod tests {
+    fn g(m: &HashMap<u64, u64>) { for x in m { } }
+}
+";
+        let in_scope = lex("rust/src/router/x.rs", src);
+        assert_eq!(denies(&check_file(&in_scope), "d1"), vec![1]);
+        let out_of_scope = lex("rust/src/metrics/x.rs", src);
+        assert_eq!(denies(&check_file(&out_of_scope), "d1"), vec![]);
+    }
+
+    #[test]
+    fn d2_wall_clock_flagged_outside_bench_harness() {
+        let src = "fn f() { let t0 = std::time::Instant::now(); }";
+        let f = lex("rust/src/metrics/mod.rs", src);
+        assert_eq!(denies(&check_file(&f), "d2"), vec![1]);
+        let exempt = lex("rust/src/bench_harness.rs", src);
+        assert_eq!(denies(&check_file(&exempt), "d2"), vec![]);
+    }
+
+    #[test]
+    fn d3_idents_and_device_paths_everywhere() {
+        let src = format!(
+            "fn f() {{ let r = thread_rng(); let p = \"{}\"; }}",
+            concat!("/dev/", "urandom")
+        );
+        let f = lex("rust/benches/x.rs", &src);
+        assert_eq!(denies(&check_file(&f), "d3"), vec![1, 1]);
+    }
+
+    #[test]
+    fn p1_unwrap_expect_panic_deny_index_warn() {
+        let src = "\
+fn f(v: &[u64]) -> u64 {
+    let a = v.first().unwrap();
+    let b = v.last().expect(\"non-empty\");
+    if *a > *b { panic!(\"bad\"); }
+    v[0]
+}
+";
+        let f = lex("rust/src/coordinator/x.rs", src);
+        let v = check_file(&f);
+        assert_eq!(denies(&v, "p1"), vec![2, 3, 4]);
+        let warns: Vec<&Violation> = v
+            .iter()
+            .filter(|x| x.rule == "p1" && x.severity == Severity::Warn)
+            .collect();
+        assert_eq!(warns.len(), 1);
+        assert_eq!(warns.first().map(|w| w.line), Some(5));
+    }
+
+    #[test]
+    fn p1_scope_excludes_bins_tests_benches() {
+        let src = "fn f(x: Option<u64>) -> u64 { x.unwrap() }";
+        for path in
+            ["rust/src/bin/tool.rs", "rust/benches/b.rs", "rust/tests/t.rs"]
+        {
+            let f = lex(path, src);
+            assert_eq!(denies(&check_file(&f), "p1"), vec![], "{path}");
+        }
+        let lib = lex("rust/src/main.rs", src);
+        assert_eq!(denies(&check_file(&lib), "p1"), vec![1]);
+    }
+
+    #[test]
+    fn p1_index_prev_token_discrimination() {
+        // `#[cfg(..)]`, `vec![..]`, array types `[u8; 4]` are not
+        // index expressions; `v[i]`, `f()[0]`, `m[1][2]` are.
+        let src = "\
+#[derive(Clone)]
+fn f(v: &[u8]) -> u8 {
+    let a = vec![1u8];
+    let t: [u8; 2] = [0, 0];
+    v[0] + g()[1] + m[1][2] + t[1] + a[0]
+}
+";
+        let f = lex("rust/src/workload/x.rs", src);
+        let warn = check_file(&f)
+            .into_iter()
+            .find(|x| x.rule == "p1" && x.severity == Severity::Warn);
+        // v[0], g()[1], m[1], [2], t[1], a[0] — six sites, all line 5.
+        assert_eq!(warn.map(|w| w.msg.contains("6 ")), Some(true));
+    }
+
+    #[test]
+    fn l1_unreferenced_counter_flagged_at_field_line() {
+        let lib = lex(
+            "rust/src/sim/mod.rs",
+            "pub struct SimResult {\n    pub requests: Vec<R>,\n    \
+             pub covered: usize,\n    pub orphaned: u64,\n}",
+        );
+        let test = lex(
+            "rust/tests/integration.rs",
+            "fn t() { assert_eq!(res.covered, 3); }",
+        );
+        let v = check_l1(&[lib, test]);
+        assert_eq!(denies(&v, "l1"), vec![4]);
+        assert_eq!(
+            v.first().map(|x| x.msg.contains("SimResult.orphaned")),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn l1_ignores_non_ledger_structs_and_non_numeric_fields() {
+        let lib = lex(
+            "rust/src/router/balancer.rs",
+            "pub struct Other { pub a: usize }\n\
+             pub struct MultiReplicaResult {\n    pub names: Vec<String>,\n}",
+        );
+        assert_eq!(check_l1(&[lib]), vec![]);
+    }
+}

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use slos_serve::baselines;
 use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
                          ScenarioConfig};
-use slos_serve::figures::make_policy;
+use slos_serve::figures::{make_policy, try_make_policy};
 use slos_serve::metrics::capacity_search;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
 use slos_serve::sim::run;
@@ -95,11 +95,10 @@ faults:         seed-deterministic fault injection (see figure chaos);
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if argv.is_empty() {
+    let Some(cmd) = argv.first().cloned() else {
         println!("{USAGE}");
         return Ok(());
-    }
-    let cmd = argv[0].clone();
+    };
     let args = Args::parse(&argv[1..]);
     let scenario = |a: &Args, d: &str| -> Result<Scenario, String> {
         let s = a.str("scenario", d);
@@ -174,7 +173,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     }
                 }
             } else {
-                let mut p = make_policy(&policy, &cfg);
+                // User-supplied name: surface a CLI error, don't panic.
+                let Some(mut p) = try_make_policy(&policy, &cfg) else {
+                    return Err(format!(
+                        "unknown policy `{policy}` (try slos-serve, vllm, \
+                         vllm-spec, sarathi, distserve)"
+                    )
+                    .into());
+                };
                 let res = run(p.as_mut(), wl, &cfg);
                 print_metrics(&policy, &res.metrics);
             }

@@ -79,8 +79,8 @@ pub fn collect(requests: &[Request], span: f64) -> RunMetrics {
             tpots.push(rec.worst_tpot);
         }
     }
-    ttft_slack.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ttft_slack.sort_by(|a, b| a.total_cmp(b));
+    tpots.sort_by(|a, b| a.total_cmp(b));
     RunMetrics {
         total: requests.len(),
         finished,

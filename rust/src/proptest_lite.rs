@@ -17,6 +17,7 @@ use crate::workload::Rng;
 pub const CASES: usize = 200;
 
 /// Random input generator handed to properties.
+#[derive(Debug)]
 pub struct Gen {
     rng: Rng,
     pub seed: u64,
@@ -70,6 +71,7 @@ pub fn forall(cases: usize, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe)
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
+            // slos-lint: allow(p1) -- failing the caller's test IS the job
             panic!("property failed at case {case} (seed {seed:#x}): {msg}");
         }
     }

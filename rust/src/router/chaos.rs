@@ -79,8 +79,7 @@ impl FaultPlan {
                 .map(|f| Fault { t: f.t, kind: f.kind }),
         );
         out.sort_by(|a, b| {
-            a.t.partial_cmp(&b.t)
-                .unwrap()
+            a.t.total_cmp(&b.t)
                 .then_with(|| rank(a.kind).cmp(&rank(b.kind)))
         });
         out.into()
@@ -98,8 +97,12 @@ impl FaultPlan {
     pub fn due(&mut self, slot: usize, now: f64) -> Vec<Fault> {
         let sched = self.schedule(slot);
         let mut fired = Vec::new();
-        while sched.front().map_or(false, |f| f.t <= now) {
-            fired.push(sched.pop_front().unwrap());
+        while let Some(&f) = sched.front() {
+            if f.t > now {
+                break;
+            }
+            fired.push(f);
+            sched.pop_front();
         }
         fired
     }

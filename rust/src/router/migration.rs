@@ -115,6 +115,7 @@ pub fn rebalance(replicas: &mut [ReplicaHandle], src: usize,
             Some((dest, true)) => dest,
             _ => continue,
         };
+        // slos-lint: allow(p1) -- is_migratable(id) checked just above
         let mut r = replicas[src].extract(id).expect("migratable implies present");
         r.route_hops += 1;
         replicas[dest].accept_rerouted(r);
@@ -158,6 +159,7 @@ pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize,
         else {
             break; // no routable peer left
         };
+        // slos-lint: allow(p1) -- id drawn from the unstarted snapshot
         let mut r = replicas[src].extract(id).expect("unstarted implies present");
         r.drain_requeues += 1;
         replicas[dest].accept_rerouted(r);
@@ -174,6 +176,7 @@ pub fn drain_outflow(replicas: &mut [ReplicaHandle], src: usize,
             continue;
         }
         let dest = crate::router::policy::least_loaded(replicas, Some(src));
+        // slos-lint: allow(p1) -- is_handoff_movable(id) checked just above
         let mut r = replicas[src].extract(id).expect("movable implies present");
         r.drain_requeues += 1;
         r.kv_handoffs += 1;
@@ -245,6 +248,7 @@ pub fn crash_outflow(replicas: &mut [ReplicaHandle], src: usize)
                 },
             };
             let mut r =
+                // slos-lint: allow(p1) -- id from the crashed queue snapshot
                 replicas[src].extract(id).expect("unstarted implies present");
             r.drain_requeues += 1;
             replicas[dest].accept_rerouted(r);
@@ -259,6 +263,7 @@ pub fn crash_outflow(replicas: &mut [ReplicaHandle], src: usize)
                 }
             };
             let mut r =
+                // slos-lint: allow(p1) -- id from the crashed started set
                 replicas[src].extract(id).expect("started implies present");
             r.tier = ServiceTier::BestEffort;
             r.drain_requeues += 1;

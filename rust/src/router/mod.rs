@@ -46,6 +46,16 @@
 //!   the balancer fires at pool time, so a fault timeline is a pure
 //!   function of the fault seed and bit-reproducible across runs.
 //!
+//! # Determinism
+//!
+//! Everything above is bit-deterministic in the run seeds: same
+//! workload/fault seeds, same results, byte for byte (pinned by
+//! `tests/integration_chaos.rs` and the golden trace). The invariants
+//! that guarantee it — no unordered-map iteration on routing paths, no
+//! wall-clock except the documented `sched_wall_seconds` overhead
+//! meters, no OS randomness — are machine-enforced by `slos-lint`
+//! (`cargo run --bin slos_lint`; rules in docs/LINTS.md).
+//!
 //! # Replica lifecycle
 //!
 //! Every replica carries an explicit [`ReplicaState`]; a fixed pool's

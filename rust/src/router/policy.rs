@@ -95,7 +95,7 @@ fn nth_routable(replicas: &[ReplicaHandle], rr_next: usize) -> usize {
         .filter(|(_, h)| h.is_routable())
         .nth(rr_next % active)
         .map(|(i, _)| i)
-        .unwrap()
+        .unwrap_or(0) // unreachable: nth < active routable entries
 }
 
 /// First routable replica after `r` in ring order (the RoundRobin

@@ -393,6 +393,7 @@ impl ReplicaHandle {
     pub fn outstanding_tokens(&self) -> usize {
         self.state
             .requests
+            // slos-lint: allow(d1) -- commutative usize sum; order-free
             .values()
             .filter(|r| !r.is_finished())
             .map(|r| {
@@ -500,6 +501,8 @@ impl ReplicaHandle {
         // when no batch forms, so the probe cache must go stale whenever
         // there was anything to admit.
         let had_pending = !self.state.pending.is_empty();
+        // slos-lint: allow(d2) -- sched_wall_seconds is the documented
+        // wall-clock overhead metric (report-only; never steers routing)
         let t_sched = std::time::Instant::now();
         let planned_batch = self.policy.next_batch(now, &mut self.state);
         self.sched_wall_seconds += t_sched.elapsed().as_secs_f64();

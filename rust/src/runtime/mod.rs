@@ -164,8 +164,7 @@ impl Runtime {
         let mut entries = HashMap::new();
         for meta in &manifest.entries {
             let path = manifest.dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap())
+            let proto = xla::HloModuleProto::from_text_file(&path)
                 .map_err(|e| anyhow!("parse {}: {e:?}", meta.name))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client

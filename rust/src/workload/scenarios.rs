@@ -37,6 +37,7 @@ pub fn build_stages(scenario: Scenario, rng: &mut Rng) -> Vec<Stage> {
         }
         Scenario::Mixed => unreachable!("Mixed samples a concrete scenario"),
         Scenario::Reasoning => {
+            // slos-lint: allow(p1) -- Reasoning always defines thinking stats
             let think = sample_len(scenario.thinking_stats().unwrap(), rng);
             vec![
                 // Tight prefill + tight thinking TPOT (squeeze time-to-answer).
@@ -139,8 +140,8 @@ pub fn stats(requests: &[Request]) -> WorkloadStats {
         .iter()
         .map(|r| r.stages.iter().map(|s| s.decode_tokens as f64).sum())
         .collect();
-    prompts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    outputs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    prompts.sort_by(|a, b| a.total_cmp(b));
+    outputs.sort_by(|a, b| a.total_cmp(b));
     let p99 = |v: &[f64]| v[((v.len() as f64 * 0.99) as usize).min(v.len() - 1)];
     WorkloadStats {
         prompt_mean: prompts.iter().sum::<f64>() / prompts.len() as f64,

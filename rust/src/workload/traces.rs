@@ -117,7 +117,7 @@ pub fn count_cv(arrivals: &[f64], window: f64) -> f64 {
     if arrivals.is_empty() {
         return 0.0;
     }
-    let end = arrivals.last().unwrap() + window;
+    let end = arrivals.last().copied().unwrap_or(0.0) + window;
     let bins = (end / window).ceil() as usize;
     let mut counts = vec![0.0f64; bins];
     for &a in arrivals {

@@ -104,6 +104,11 @@ fn requests_conserved_across_routing_and_migration() {
         }
         let sum: usize = res.per_replica_finished.iter().sum();
         assert_eq!(sum, n, "{policy:?}: per-replica counts disagree");
+        // Ledger sanity (slos-lint L1): sched_wall_seconds is wall-clock
+        // (excluded from bit-determinism checks) — well-formedness only.
+        assert!(res.sched_wall_seconds.is_finite()
+                    && res.sched_wall_seconds >= 0.0,
+                "{policy:?}: sched_wall_seconds malformed");
     }
 }
 

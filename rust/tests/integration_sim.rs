@@ -158,6 +158,11 @@ fn burst_deferral_preserves_standard_tier() {
         .filter(|r| r.tier == ServiceTier::BestEffort && r.is_finished())
         .count();
     assert!(be_finished > 0, "best-effort tier starved");
+    // Ledger sanity (slos-lint L1): the scheduler-overhead counter is
+    // wall-clock, so never compare it across runs — only well-formedness.
+    assert!(res.sched_wall_seconds.is_finite()
+                && res.sched_wall_seconds >= 0.0,
+            "sched_wall_seconds malformed: {}", res.sched_wall_seconds);
 }
 
 #[test]

@@ -1,0 +1,49 @@
+//! Tier-1 gate: the tree is `slos-lint`-clean. Same pass as
+//! `cargo run --bin slos_lint`, run as a test so a stray HashMap
+//! iteration, wall-clock read, OS-randomness call, library panic, or
+//! untested ledger counter fails `cargo test` — not just CI's lint job.
+//! Rules and the allow syntax: docs/LINTS.md.
+
+use std::path::Path;
+
+use slos_serve::lint;
+
+#[test]
+fn tree_has_no_deny_violations() {
+    // tests run with cwd = rust/; the repo root is one level up.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => panic!("slos-lint failed to run: {e}"),
+    };
+    let denies: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| v.severity == lint::Severity::Deny)
+        .map(|v| format!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg))
+        .collect();
+    assert!(
+        denies.is_empty(),
+        "slos-lint deny violations (fix or `// slos-lint: allow(<rule>) \
+         -- <reason>`):\n{}",
+        denies.join("\n")
+    );
+}
+
+#[test]
+fn report_counts_are_consistent() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => panic!("slos-lint failed to run: {e}"),
+    };
+    // The walker found the tree (lib + tests + benches + examples all
+    // contribute), and the render footer agrees with the counts.
+    assert!(report.files > 40, "walker found only {} files", report.files);
+    let footer = format!(
+        "{} deny, {} warn",
+        report.deny_count(),
+        report.warn_count()
+    );
+    assert!(report.render().contains(&footer));
+}

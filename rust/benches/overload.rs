@@ -1,0 +1,76 @@
+//! Overload bench (PR-8): end-to-end cost of the overload-protection
+//! layer. Tracks (a) the price of carrying an armed brownout/shedding
+//! config through a run that never trips it, (b) the protected 2x
+//! overload run (shed sweep + ladder active), and (c) both retry
+//! clients over the protected router — naive instant re-arrival vs
+//! hinted capped backoff — so a regression in the retry queue or the
+//! hint computation shows up as wall-clock, not just as metrics drift.
+
+use slos_serve::bench_harness::{Bench, JsonReport};
+use slos_serve::config::{OverloadConfig, RetryConfig, Scenario,
+                         ScenarioConfig};
+use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+fn main() {
+    slos_serve::figures::fig_overload(120);
+
+    let mk = |rate: f64| {
+        move || {
+            let cfg = ScenarioConfig::new(Scenario::Mixed)
+                .with_rate(rate)
+                .with_requests(150)
+                .with_seed(42);
+            let mut wl = workload::generate(&cfg);
+            workload::compress_middle_third(&mut wl, 4.0);
+            (cfg, wl)
+        }
+    };
+    let calm = mk(1.5);
+    let hot = mk(3.0);
+
+    let mut b = Bench::new("overload_run").with_target_time(1.5);
+    b.bench("static2_armed_no_trip", || {
+        // Armed protection on the canonical (feasible) trace: the price
+        // of the sweep cadence and ladder bookkeeping when nothing fires.
+        let (cfg, wl) = calm();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_overload(OverloadConfig::default());
+        run_multi_replica(wl, &cfg, &rcfg).metrics.goodput()
+    });
+    b.bench("static2_overload_unprotected", || {
+        let (cfg, wl) = hot();
+        let rcfg =
+            RouterConfig::new(2).with_policy(RoutePolicy::BurstAware);
+        run_multi_replica(wl, &cfg, &rcfg).metrics.goodput()
+    });
+    b.bench("static2_overload_protected", || {
+        let (cfg, wl) = hot();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_overload(OverloadConfig::default());
+        run_multi_replica(wl, &cfg, &rcfg).metrics.goodput()
+    });
+    b.bench("static2_overload_naive_retry", || {
+        let (cfg, wl) = hot();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_overload(OverloadConfig::default())
+            .with_retry(RetryConfig::naive());
+        run_multi_replica(wl, &cfg, &rcfg).metrics.goodput()
+    });
+    b.bench("static2_overload_hinted_retry", || {
+        let (cfg, wl) = hot();
+        let rcfg = RouterConfig::new(2)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_overload(OverloadConfig::default())
+            .with_retry(RetryConfig::default());
+        run_multi_replica(wl, &cfg, &rcfg).metrics.goodput()
+    });
+
+    let mut report = JsonReport::new("overload");
+    report.add_group("overload_run", b.finish());
+    let path = report.write().expect("write BENCH_overload.json");
+    println!("wrote {}", path.display());
+}

@@ -526,6 +526,188 @@ impl FaultConfig {
     }
 }
 
+/// Overload-protection configuration for the router's demand-side
+/// defenses (the PR-8 layer): the deadline-expiry shed sweep and the
+/// brownout ladder. Both act only on pool-level state — single-replica
+/// `sim::run` is unaffected.
+///
+/// The **shed sweep** runs every `sweep_every` router rounds over the
+/// replica about to form its next batch and cancels any standard-tier
+/// request whose remaining prefill work provably exceeds what even a
+/// fully dedicated server could finish before its prefill deadline
+/// (`coordinator::batch_formation::provably_late`). Cancelled work
+/// releases its KV pages and is reported as `shed`, never completed.
+///
+/// The **brownout ladder** watches the pool-wide probe-refusal rate
+/// over a decayed sliding `window` (the autoscaler's estimator,
+/// [`router::autoscaler::RateEstimator`](crate::router::autoscaler::RateEstimator)).
+/// At `degrade_threshold` new standard-tier arrivals are demoted to
+/// best-effort (`degraded`); at `reject_threshold` arrivals are turned
+/// away outright (`rejected`) with a deterministic retry-after hint
+/// computed from the pool's projected backlog-drain time. The ladder
+/// steps *down* only once the refusal rate falls below
+/// `hysteresis * threshold`, so an oscillating signal cannot flap it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadConfig {
+    /// Enable the deadline-expiry shed sweep.
+    pub shed: bool,
+    /// Router rounds between shed sweeps (like the migration throttle).
+    pub sweep_every: u64,
+    /// Sliding-window length (seconds) of the refusal-pressure signal.
+    pub window: f64,
+    /// Refusal rate at or above which new standard arrivals demote to
+    /// best-effort.
+    pub degrade_threshold: f64,
+    /// Refusal rate at or above which new arrivals are rejected.
+    pub reject_threshold: f64,
+    /// Step-down factor: a ladder level releases only when the refusal
+    /// rate drops below `hysteresis * threshold` (in (0, 1]).
+    pub hysteresis: f64,
+    /// Minimum arrivals in the window before the ladder may engage.
+    pub min_samples: usize,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            shed: true,
+            sweep_every: 8,
+            window: 3.0,
+            degrade_threshold: 0.3,
+            reject_threshold: 0.6,
+            hysteresis: 0.5,
+            min_samples: 8,
+        }
+    }
+}
+
+impl OverloadConfig {
+    pub fn with_thresholds(mut self, degrade: f64, reject: f64) -> Self {
+        self.degrade_threshold = degrade;
+        self.reject_threshold = reject;
+        self
+    }
+
+    pub fn with_shed(mut self, on: bool) -> Self {
+        self.shed = on;
+        self
+    }
+
+    /// Parse the CLI `--overload` spec: `on` (all defaults) or
+    /// comma-separated atoms `shed=0|1`, `sweep=N`, `window=S`,
+    /// `degrade=F`, `reject=F`, `hysteresis=F`, `min_samples=N`.
+    /// E.g. `--overload degrade=0.25,reject=0.5`.
+    pub fn parse(spec: &str) -> Result<OverloadConfig, String> {
+        let mut cfg = OverloadConfig::default();
+        if spec == "on" || spec == "true" {
+            return Ok(cfg);
+        }
+        for atom in spec.split(',').filter(|a| !a.is_empty()) {
+            let (key, val) = atom
+                .split_once('=')
+                .ok_or(format!("expected key=value in `{atom}`"))?;
+            let v: f64 = val
+                .parse()
+                .map_err(|_| format!("bad number in `{atom}`"))?;
+            match key {
+                "shed" => cfg.shed = v != 0.0,
+                "sweep" => cfg.sweep_every = (v.max(1.0)) as u64,
+                "window" => cfg.window = v,
+                "degrade" => cfg.degrade_threshold = v,
+                "reject" => cfg.reject_threshold = v,
+                "hysteresis" => cfg.hysteresis = v,
+                "min_samples" => cfg.min_samples = v as usize,
+                _ => return Err(format!("unknown overload key `{key}`")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Closed-loop retry-client configuration (the workload side of the
+/// PR-8 overload layer): a request the brownout ladder rejects
+/// re-arrives after a capped exponential backoff with deterministic
+/// jitter — a pure function of `(workload seed, request id, attempt)`
+/// (`workload::retry::backoff_delay`; lint rule d3 holds by
+/// construction). With `honor_hints` the re-arrival additionally waits
+/// out the router's retry-after hint. `naive` models the metastable
+/// failure mode: zero-backoff, hint-ignoring clients that re-offer
+/// rejected load immediately.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryConfig {
+    /// First-attempt backoff (seconds); attempt `k` waits
+    /// `base * 2^(k-1)`, capped at `cap`.
+    pub base: f64,
+    /// Backoff ceiling (seconds).
+    pub cap: f64,
+    /// Max re-arrivals per request before the client gives up.
+    pub max_attempts: u32,
+    /// Pool-wide retry budget: total re-arrivals across all requests.
+    pub budget: usize,
+    /// Jitter fraction in [0, 1): the delay is scaled into
+    /// `[1 - jitter, 1) * backoff` by the per-(request, attempt) hash.
+    pub jitter: f64,
+    /// Honor the router's retry-after hint (re-arrival never earlier
+    /// than `rejection + hint`).
+    pub honor_hints: bool,
+    /// Naive client: re-arrive (almost) immediately, ignoring both the
+    /// backoff schedule and any hint — the retry-storm baseline.
+    pub naive: bool,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            base: 0.25,
+            cap: 8.0,
+            max_attempts: 4,
+            budget: 10_000,
+            jitter: 0.5,
+            honor_hints: true,
+            naive: false,
+        }
+    }
+}
+
+impl RetryConfig {
+    /// The retry-storm baseline: immediate re-arrival, hints ignored.
+    pub fn naive() -> Self {
+        RetryConfig { naive: true, honor_hints: false, ..Default::default() }
+    }
+
+    /// Parse the CLI `--retry-policy` spec: `hinted` (defaults),
+    /// `naive` (retry-storm baseline), or comma-separated atoms
+    /// `base=S`, `cap=S`, `attempts=N`, `budget=N`, `jitter=F`,
+    /// `hints=0|1`, `naive=0|1`. E.g. `--retry-policy base=0.5,attempts=3`.
+    pub fn parse(spec: &str) -> Result<RetryConfig, String> {
+        match spec {
+            "hinted" | "on" | "true" => return Ok(RetryConfig::default()),
+            "naive" => return Ok(RetryConfig::naive()),
+            _ => {}
+        }
+        let mut cfg = RetryConfig::default();
+        for atom in spec.split(',').filter(|a| !a.is_empty()) {
+            let (key, val) = atom
+                .split_once('=')
+                .ok_or(format!("expected key=value in `{atom}`"))?;
+            let v: f64 = val
+                .parse()
+                .map_err(|_| format!("bad number in `{atom}`"))?;
+            match key {
+                "base" => cfg.base = v,
+                "cap" => cfg.cap = v,
+                "attempts" => cfg.max_attempts = v as u32,
+                "budget" => cfg.budget = v as usize,
+                "jitter" => cfg.jitter = v.clamp(0.0, 0.999),
+                "hints" => cfg.honor_hints = v != 0.0,
+                "naive" => cfg.naive = v != 0.0,
+                _ => return Err(format!("unknown retry key `{key}`")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
 /// Per-replica deviations from the pool-wide [`ScenarioConfig`] for
 /// heterogeneous multi-replica serving (§4.2): replicas may differ in
 /// hardware generation, KV memory, speculative-decoding setup, and chunk
@@ -655,6 +837,51 @@ mod tests {
     #[should_panic]
     fn autoscaler_config_rejects_inverted_bounds() {
         AutoscalerConfig::new(3, 2);
+    }
+
+    #[test]
+    fn overload_config_parse_round_trips_the_cli_spec() {
+        let c = OverloadConfig::parse(
+            "shed=0,sweep=4,window=2,degrade=0.25,reject=0.5,\
+             hysteresis=0.4,min_samples=6",
+        )
+        .unwrap();
+        assert!(!c.shed);
+        assert_eq!(c.sweep_every, 4);
+        assert_eq!(c.window, 2.0);
+        assert_eq!((c.degrade_threshold, c.reject_threshold), (0.25, 0.5));
+        assert_eq!(c.hysteresis, 0.4);
+        assert_eq!(c.min_samples, 6);
+        // `on` is the all-defaults spelling.
+        assert_eq!(OverloadConfig::parse("on").unwrap(),
+                   OverloadConfig::default());
+        // Defaults survive for unmentioned knobs.
+        let c = OverloadConfig::parse("reject=0.9").unwrap();
+        assert_eq!(c.degrade_threshold,
+                   OverloadConfig::default().degrade_threshold);
+        assert!(OverloadConfig::parse("bogus").is_err());
+        assert!(OverloadConfig::parse("warp=9").is_err());
+        assert!(OverloadConfig::parse("window=abc").is_err());
+    }
+
+    #[test]
+    fn retry_config_parse_round_trips_the_cli_spec() {
+        let c = RetryConfig::parse(
+            "base=0.5,cap=4,attempts=3,budget=500,jitter=0.25,hints=0",
+        )
+        .unwrap();
+        assert_eq!((c.base, c.cap), (0.5, 4.0));
+        assert_eq!(c.max_attempts, 3);
+        assert_eq!(c.budget, 500);
+        assert_eq!(c.jitter, 0.25);
+        assert!(!c.honor_hints && !c.naive);
+        assert_eq!(RetryConfig::parse("hinted").unwrap(),
+                   RetryConfig::default());
+        let n = RetryConfig::parse("naive").unwrap();
+        assert!(n.naive && !n.honor_hints);
+        assert_eq!(n, RetryConfig::naive());
+        assert!(RetryConfig::parse("bogus").is_err());
+        assert!(RetryConfig::parse("warp=9").is_err());
     }
 
     #[test]

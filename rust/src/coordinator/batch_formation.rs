@@ -212,6 +212,24 @@ pub fn prefill_budget_ar(t: f64, tpots: &[f64], counts: &[usize], m: &PerfModel)
     Some(n_batches * (per_batch - decode_per_batch) + partial)
 }
 
+/// Deadline-expiry proof (the PR-8 shed predicate, checked at batch
+/// formation time by the router's overload sweep): `true` when `tokens`
+/// prefill-side work (remaining prefill + recompute debt) provably
+/// cannot complete within the `dt` seconds left to the prefill
+/// deadline, **even on a fully dedicated server** — the budget is
+/// [`PerfModel::tokens_within`], a chain of max-size pure-prefill
+/// batches with zero decode interference. One-sided by construction:
+/// a real schedule shares the server, so `provably_late` never flags a
+/// request that any schedule could still save, but may keep one no
+/// schedule can (which the attainment metric, not the shed sweep, then
+/// charges for).
+pub fn provably_late(tokens: usize, dt: f64, m: &PerfModel) -> bool {
+    if tokens == 0 {
+        return false; // prefill already done; nothing left to prove
+    }
+    dt <= 0.0 || tokens > m.tokens_within(dt, 0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +349,24 @@ mod tests {
         let a = prefill_budget_ar(1.0, &[0.05, 0.1], &[2, 2], &m).unwrap();
         let b = prefill_budget_ar(1.0, &[0.05, 0.1], &[2, 50], &m).unwrap();
         assert!(b < a);
+    }
+
+    #[test]
+    fn provably_late_is_one_sided() {
+        let m = m();
+        // An expired deadline with work left is always late.
+        assert!(provably_late(1, 0.0, &m));
+        assert!(provably_late(1, -2.0, &m));
+        // Finished prefill is never late, whatever the clock says.
+        assert!(!provably_late(0, -5.0, &m));
+        // Exactly the dedicated-server budget: still achievable.
+        let dt = 0.5;
+        let budget = m.tokens_within(dt, 0);
+        assert!(!provably_late(budget, dt, &m));
+        assert!(provably_late(budget + 1, dt, &m));
+        // Monotone in work and anti-monotone in time.
+        assert!(provably_late(2 * budget, dt, &m));
+        assert!(!provably_late(budget, 2.0 * dt, &m));
     }
 
     #[test]

@@ -102,6 +102,15 @@ pub struct Request {
     /// best-effort preemption (generated tokens are retained; only the
     /// cache is recomputed — §4.1).
     pub recompute_pending: usize,
+    /// Cancelled by the router's deadline-expiry sweep: the perf model
+    /// proved the prefill deadline unattainable, KV was released, and
+    /// the request is reported unfinished (counted once in
+    /// `MultiReplicaResult::shed`).
+    pub shed: bool,
+    /// Times this request re-arrived through the closed-loop retry
+    /// client after a brownout rejection (each re-arrival restarts the
+    /// SLO clock from the new arrival time).
+    pub retries: u32,
 }
 
 /// Outcome record for one completed stage.
@@ -151,6 +160,8 @@ impl Request {
             kv_handoffs: 0,
             preemptions: 0,
             recompute_pending: 0,
+            shed: false,
+            retries: 0,
         }
     }
 

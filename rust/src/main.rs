@@ -6,9 +6,10 @@
 //!                     [--autoscale] [--min-replicas A] [--max-replicas B]
 //!                     [--reactive] [--no-handoff] [--seed X]
 //!                     [--faults SPEC] [--fault-seed Y]
+//!                     [--overload SPEC] [--retry-policy SPEC]
 //! slos-serve capacity [--scenario S] [--requests N]
-//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos>
-//!                     [--requests N]
+//! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos|
+//!                     overload> [--requests N]
 //! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
 //! ```
 //!
@@ -18,8 +19,8 @@
 use std::collections::HashMap;
 
 use slos_serve::baselines;
-use slos_serve::config::{AutoscalerConfig, FaultConfig, Scenario,
-                         ScenarioConfig};
+use slos_serve::config::{AutoscalerConfig, FaultConfig, OverloadConfig,
+                         RetryConfig, Scenario, ScenarioConfig};
 use slos_serve::figures::{make_policy, try_make_policy};
 use slos_serve::metrics::capacity_search;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
@@ -76,8 +77,10 @@ const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
            [--autoscale --min-replicas A --max-replicas B]
            [--reactive] [--no-handoff]
            [--faults SPEC] [--fault-seed Y]
+           [--overload SPEC] [--retry-policy SPEC]
   capacity --scenario S --requests N
-  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos> --requests N
+  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos|overload>
+           --requests N
   trace    --scenario S --rate R --requests N [--stats]
 scenarios:      chatbot coder summarizer mixed toolllm reasoning
 policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
@@ -91,7 +94,16 @@ faults:         seed-deterministic fault injection (see figure chaos);
                 replica), slowrate=R, slowfactor=F, slowsecs=S,
                 horizon=T, crash:SLOT@T, slow:SLOT@T. --fault-seed
                 reseeds the schedules. Runs route through the
-                multi-replica path even with --replicas 1";
+                multi-replica path even with --replicas 1
+overload:       deadline-expiry shedding + brownout ladder (see figure
+                overload); SPEC is `on` or comma-separated: shed=B,
+                sweep=N, window=W, degrade=F, reject=F, hysteresis=F,
+                min_samples=N
+retry-policy:   closed-loop retry client over rejections; SPEC is
+                `hinted`, `naive`, or comma-separated: base=S, cap=S,
+                attempts=N, budget=N, jitter=F, hints=B, naive=B.
+                Both route through the multi-replica path even with
+                --replicas 1";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -128,14 +140,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
                 None => None,
             };
+            let overload = match args.flags.get("overload") {
+                Some(spec) => Some(OverloadConfig::parse(spec)?),
+                None => None,
+            };
+            let retry = match args.flags.get("retry-policy") {
+                Some(spec) => Some(RetryConfig::parse(spec)?),
+                None => None,
+            };
             let wl = workload::generate(&cfg);
-            if replicas > 1 || autoscale || faults.is_some() {
+            if replicas > 1 || autoscale || faults.is_some()
+                || overload.is_some() || retry.is_some()
+            {
                 let rp = args.str("route-policy", "slo-feasibility");
                 let rp = RoutePolicy::parse(&rp)
                     .ok_or_else(|| format!("unknown route policy {rp}"))?;
                 let mut rcfg = RouterConfig::new(replicas).with_policy(rp);
                 if let Some(f) = faults.clone() {
                     rcfg = rcfg.with_faults(f);
+                }
+                if let Some(o) = overload {
+                    rcfg = rcfg.with_overload(o);
+                }
+                if let Some(r) = retry {
+                    rcfg = rcfg.with_retry(r);
                 }
                 if autoscale {
                     let min: usize = args.get("min-replicas", 1);
@@ -171,6 +199,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                         println!("  t {:7.2}s  {:?} replica {} -> {} active",
                                  e.t, e.kind, e.replica, e.active);
                     }
+                }
+                if overload.is_some() || retry.is_some() {
+                    println!("overload: goodput {:.2} req/s | shed {} | \
+                              degraded {} | rejected {} | retries {} | \
+                              retry-gave-up {}",
+                             res.metrics.goodput(), res.shed, res.degraded,
+                             res.rejected, res.retries, res.retry_gave_up);
                 }
             } else {
                 // User-supplied name: surface a CLI error, don't panic.

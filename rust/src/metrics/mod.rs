@@ -40,6 +40,20 @@ impl RunMetrics {
             0.0
         }
     }
+
+    /// Goodput: SLO-*attained* standard-tier completions per second —
+    /// the overload-resilience headline. Under overload, raw
+    /// [`throughput`](Self::throughput) keeps counting completions that
+    /// blew their deadlines (and so delivered no contracted value);
+    /// goodput only counts work the SLO contract was kept on, which is
+    /// what deadline-aware shedding trades late completions for.
+    pub fn goodput(&self) -> f64 {
+        if self.span > 0.0 {
+            self.attained as f64 / self.span
+        } else {
+            0.0
+        }
+    }
 }
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -117,6 +131,29 @@ pub fn window_attainment(requests: &[Request], t0: f64, t1: f64) -> f64 {
     } else {
         attained as f64 / total as f64
     }
+}
+
+/// Goodput restricted to requests *arriving* in `[t0, t1)`: SLO-attained
+/// standard-tier completions among those arrivals, per second of window.
+/// The overload-figure counterpart of [`window_attainment`] — under a
+/// sustained overload the attainment denominator grows with the offered
+/// (and retry-amplified) load, while goodput measures what the pool
+/// actually delivered on contract per unit time. Returns 0 for an empty
+/// or degenerate window.
+pub fn window_goodput(requests: &[Request], t0: f64, t1: f64) -> f64 {
+    if t1 <= t0 {
+        return 0.0;
+    }
+    let attained = requests
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.arrival < t1)
+        .filter(|r| {
+            r.is_finished()
+                && r.tier == ServiceTier::Standard
+                && r.slo_attained()
+        })
+        .count();
+    attained as f64 / (t1 - t0)
 }
 
 /// Binary-search the max rate with attainment >= target. `eval(rate)` runs
@@ -216,5 +253,34 @@ mod tests {
         let m = collect(&[], 0.0);
         assert_eq!(m.ttft_p99, 0.0);
         assert_eq!(m.attainment(), 1.0);
+    }
+
+    #[test]
+    fn goodput_counts_only_attained_standard_work() {
+        let mut late = finished_request(1, false);
+        late.tier = ServiceTier::Standard;
+        let mut be = finished_request(2, true);
+        be.tier = ServiceTier::BestEffort;
+        let reqs = vec![finished_request(0, true), late, be];
+        let m = collect(&reqs, 10.0);
+        // 3 finished, 1 attained: throughput 0.3/s, goodput 0.1/s.
+        assert!((m.throughput() - 0.3).abs() < 1e-12);
+        assert!((m.goodput() - 0.1).abs() < 1e-12);
+        let empty = collect(&[], 0.0);
+        assert_eq!(empty.goodput(), 0.0);
+    }
+
+    #[test]
+    fn window_goodput_is_rate_over_the_window() {
+        let mut a = finished_request(0, true); // arrival 0.0, attained
+        a.arrival = 1.0;
+        let mut b = finished_request(1, false); // late: not attained
+        b.arrival = 1.5;
+        let c = finished_request(2, true); // outside the window
+        let reqs = vec![a, b, c];
+        // Window [1, 3): one attained arrival over 2 seconds.
+        assert!((window_goodput(&reqs, 1.0, 3.0) - 0.5).abs() < 1e-12);
+        // Degenerate window.
+        assert_eq!(window_goodput(&reqs, 3.0, 3.0), 0.0);
     }
 }

@@ -96,6 +96,16 @@ pub enum ScaleKind {
     /// A transient-slowdown fault began on a live replica (it stays
     /// routable; only realized batch times stretch).
     Slowdown,
+    /// The brownout ladder (PR-8) stepped to Degrade: new standard
+    /// arrivals are demoted to best-effort. Pool-level — the event's
+    /// `replica` is 0 by convention.
+    BrownoutDegrade,
+    /// The brownout ladder stepped to Reject: new arrivals are turned
+    /// away with a retry-after hint. Pool-level (`replica` 0).
+    BrownoutReject,
+    /// The brownout ladder stepped back to Normal (hysteresis release).
+    /// Pool-level (`replica` 0).
+    BrownoutClear,
 }
 
 /// Scaling decision for one tick.
@@ -119,51 +129,44 @@ pub struct PoolCounts {
     pub draining: usize,
 }
 
-/// The sliding-window controller state.
-pub struct Autoscaler {
-    pub cfg: AutoscalerConfig,
+/// Sliding-window arrival/refusal estimator — the controller's sensory
+/// organ, factored out (PR-8) so the balancer's brownout ladder can run
+/// the same decayed-rate statistics on a *fixed* pool where no
+/// [`Autoscaler`] exists. Holds the `(arrival, refused)` event window
+/// plus a pair of exponentially-decayed arrival counts at two time
+/// constants (`tau_fast` = window/4, `tau_slow` = window): `count / tau`
+/// is a rate estimate that lags a linearly-moving rate by exactly `tau`,
+/// so the pair yields both the current rate and its slope. Pure over its
+/// inputs — no clocks, no randomness (lint rules d2/d3).
+pub struct RateEstimator {
+    window: f64,
     /// `(arrival time, probe refused)` events inside the window.
     events: VecDeque<(f64, bool)>,
     refused_in_window: usize,
-    last_action: f64,
     /// Most recent arrival (anchor for the decayed-count updates).
     last_arrival: Option<f64>,
-    /// Exponentially-decayed arrival counts at two time constants
-    /// (`tau_fast` = window/4, `tau_slow` = window): `count / tau` is a
-    /// rate estimate that lags a linearly-moving rate by exactly `tau`,
-    /// so the pair yields both the current rate and its slope.
     count_fast: f64,
     count_slow: f64,
-    /// Crash instants per fault-schedule *slot* (flap circuit breaker).
-    /// `BTreeMap` for deterministic iteration — chaos runs must stay
-    /// bit-reproducible.
-    crash_times: BTreeMap<usize, Vec<f64>>,
-    /// Slots the circuit breaker quarantined, with release times.
-    quarantined_until: BTreeMap<usize, f64>,
 }
 
-impl Autoscaler {
-    pub fn new(cfg: AutoscalerConfig) -> Self {
-        Autoscaler {
-            cfg,
+impl RateEstimator {
+    pub fn new(window: f64) -> Self {
+        RateEstimator {
+            window,
             events: VecDeque::new(),
             refused_in_window: 0,
-            // Allow an action as soon as the first window fills.
-            last_action: f64::NEG_INFINITY,
             last_arrival: None,
             count_fast: 0.0,
             count_slow: 0.0,
-            crash_times: BTreeMap::new(),
-            quarantined_until: BTreeMap::new(),
         }
     }
 
     fn tau_fast(&self) -> f64 {
-        self.cfg.window / 4.0
+        self.window / 4.0
     }
 
     fn tau_slow(&self) -> f64 {
-        self.cfg.window
+        self.window
     }
 
     /// Record one routed arrival: `refused` = no Active replica's
@@ -199,26 +202,15 @@ impl Autoscaler {
     /// of their lags (each lags a linearly-moving rate by its own time
     /// constant), and the rate extrapolates the fast estimator past its
     /// own lag.
-    fn rate_and_slope(&self, now: f64) -> (f64, f64) {
+    pub fn rate_and_slope(&self, now: f64) -> (f64, f64) {
         let (fast, slow) = self.rates_at(now);
         let slope = (fast - slow) / (self.tau_slow() - self.tau_fast());
         ((fast + slope * self.tau_fast()).max(0.0), slope)
     }
 
-    /// EWMA estimate of the arrival rate (req/s) at `now`, extrapolated
-    /// past the fast estimator's own lag. 0 before any arrival.
-    pub fn arrival_rate(&self, now: f64) -> f64 {
-        self.rate_and_slope(now).0
-    }
-
-    /// Estimated arrival-rate slope (req/s per s) at `now`. Positive
-    /// while a burst ramps up.
-    pub fn rate_slope(&self, now: f64) -> f64 {
-        self.rate_and_slope(now).1
-    }
-
-    fn prune(&mut self, now: f64) {
-        let cutoff = now - self.cfg.window;
+    /// Drop events older than one window behind `now`.
+    pub fn prune(&mut self, now: f64) {
+        let cutoff = now - self.window;
         while let Some(&(t, refused)) = self.events.front() {
             if t >= cutoff {
                 break;
@@ -228,12 +220,84 @@ impl Autoscaler {
         }
     }
 
+    /// Arrivals currently inside the window (the `min_samples` gate).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Refusals currently inside the window.
+    pub fn refused(&self) -> usize {
+        self.refused_in_window
+    }
+
     /// Refusal rate over the current window (0 when empty).
     pub fn refusal_rate(&self) -> f64 {
         if self.events.is_empty() {
             return 0.0;
         }
         self.refused_in_window as f64 / self.events.len() as f64
+    }
+
+    /// Consume the window (hysteresis: one burst of evidence buys one
+    /// action; fresh evidence must accumulate before the next). The
+    /// decayed rate counts survive — only the refusal ledger resets.
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.refused_in_window = 0;
+    }
+}
+
+/// The sliding-window controller state.
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    /// Windowed refusal ledger + decayed-rate pair over the arrival
+    /// stream (shared machinery with the PR-8 brownout ladder).
+    est: RateEstimator,
+    last_action: f64,
+    /// Crash instants per fault-schedule *slot* (flap circuit breaker).
+    /// `BTreeMap` for deterministic iteration — chaos runs must stay
+    /// bit-reproducible.
+    crash_times: BTreeMap<usize, Vec<f64>>,
+    /// Slots the circuit breaker quarantined, with release times.
+    quarantined_until: BTreeMap<usize, f64>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Autoscaler {
+            est: RateEstimator::new(cfg.window),
+            cfg,
+            // Allow an action as soon as the first window fills.
+            last_action: f64::NEG_INFINITY,
+            crash_times: BTreeMap::new(),
+            quarantined_until: BTreeMap::new(),
+        }
+    }
+
+    /// Record one routed arrival (see [`RateEstimator::record_arrival`]).
+    pub fn record_arrival(&mut self, now: f64, refused: bool) {
+        self.est.record_arrival(now, refused);
+    }
+
+    /// EWMA estimate of the arrival rate (req/s) at `now`, extrapolated
+    /// past the fast estimator's own lag. 0 before any arrival.
+    pub fn arrival_rate(&self, now: f64) -> f64 {
+        self.est.rate_and_slope(now).0
+    }
+
+    /// Estimated arrival-rate slope (req/s per s) at `now`. Positive
+    /// while a burst ramps up.
+    pub fn rate_slope(&self, now: f64) -> f64 {
+        self.est.rate_and_slope(now).1
+    }
+
+    /// Refusal rate over the current window (0 when empty).
+    pub fn refusal_rate(&self) -> f64 {
+        self.est.refusal_rate()
     }
 
     /// Is the controller still inside the post-action cooldown?
@@ -282,7 +346,7 @@ impl Autoscaler {
     /// warm-down branch, which most ticks never reach.
     pub fn decide(&mut self, now: f64, counts: PoolCounts,
                   backlog_seconds: impl FnOnce() -> f64) -> ScaleDecision {
-        self.prune(now);
+        self.est.prune(now);
         if self.in_cooldown(now) {
             return ScaleDecision::Hold;
         }
@@ -293,15 +357,14 @@ impl Autoscaler {
         // mid-drain — the balancer serves it by cancelling that
         // warm-down instead of spawning.
         let may_grow = pool < self.cfg.max_replicas || counts.draining > 0;
-        let sampled = self.events.len() >= self.cfg.min_samples;
+        let sampled = self.est.len() >= self.cfg.min_samples;
         let refusing = sampled
-            && self.refusal_rate() >= self.cfg.up_threshold;
+            && self.est.refusal_rate() >= self.cfg.up_threshold;
         if refusing && may_grow {
             self.last_action = now;
             // One burst of refusals buys one step; fresh evidence must
             // accumulate before the next (hysteresis).
-            self.events.clear();
-            self.refused_in_window = 0;
+            self.est.clear();
             return ScaleDecision::Up;
         }
 
@@ -317,22 +380,21 @@ impl Autoscaler {
         if self.cfg.predictive
             && may_grow
             && sampled
-            && self.refused_in_window > 0
+            && self.est.refused() > 0
         {
-            let (r_now, slope) = self.rate_and_slope(now);
+            let (r_now, slope) = self.est.rate_and_slope(now);
             if slope > 0.0 {
                 // Refusals are the arrivals beyond what the pool
                 // admits: f = (r - c) / r identifies the admitted rate
                 // c from the current window, and extrapolating r by
                 // `slope * warmup` yields the projected fraction.
-                let admitted = r_now * (1.0 - self.refusal_rate());
+                let admitted = r_now * (1.0 - self.est.refusal_rate());
                 let r_proj = r_now + slope * self.cfg.warmup_seconds;
                 if r_proj > 0.0
                     && (r_proj - admitted) / r_proj >= self.cfg.up_threshold
                 {
                     self.last_action = now;
-                    self.events.clear();
-                    self.refused_in_window = 0;
+                    self.est.clear();
                     return ScaleDecision::Up;
                 }
             }
@@ -343,7 +405,7 @@ impl Autoscaler {
         if counts.active > self.cfg.min_replicas
             && counts.warming == 0
             && counts.draining == 0
-            && self.refused_in_window == 0
+            && self.est.refused() == 0
             && backlog_seconds()
                 <= self.cfg.down_util * self.cfg.window
                     * counts.active as f64
@@ -582,6 +644,34 @@ mod tests {
                 "step must show as positive slope, got {}",
                 a.rate_slope(now));
         assert!(a.arrival_rate(now) > 6.0);
+    }
+
+    #[test]
+    fn rate_estimator_is_reusable_standalone() {
+        // The brownout ladder embeds a bare RateEstimator (no
+        // Autoscaler): the window ledger, refusal rate, and clear()
+        // hysteresis must all work without a controller around them.
+        let mut e = RateEstimator::new(4.0);
+        assert!(e.is_empty());
+        assert_eq!(e.refusal_rate(), 0.0);
+        for i in 0..8 {
+            e.record_arrival(0.25 * i as f64, i % 2 == 0);
+        }
+        assert_eq!(e.len(), 8);
+        assert_eq!(e.refused(), 4);
+        assert!((e.refusal_rate() - 0.5).abs() < 1e-12);
+        // clear() consumes the refusal ledger but keeps the rate pair.
+        let rate_before = e.rate_and_slope(1.75).0;
+        e.clear();
+        assert!(e.is_empty());
+        assert_eq!(e.refused(), 0);
+        assert_eq!(e.rate_and_slope(1.75).0.to_bits(),
+                   rate_before.to_bits(),
+                   "decayed counts must survive window consumption");
+        // prune() slides the window forward.
+        e.record_arrival(2.0, true);
+        e.prune(10.0);
+        assert!(e.is_empty());
     }
 
     #[test]

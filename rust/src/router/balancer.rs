@@ -36,11 +36,13 @@
 
 use std::collections::HashSet;
 
-use crate::config::{FaultKind, ScenarioConfig};
-use crate::coordinator::request::{Request, RequestId};
+use crate::config::{FaultKind, OverloadConfig, RetryConfig, ScenarioConfig};
+use crate::coordinator::batch_formation::provably_late;
+use crate::coordinator::request::{Phase, Request, RequestId, ServiceTier};
 use crate::metrics::{collect, RunMetrics};
-use crate::router::autoscaler::{Autoscaler, PoolCounts, ScaleDecision,
-                                ScaleEvent, ScaleKind};
+use crate::router::autoscaler::{Autoscaler, PoolCounts, RateEstimator,
+                                ScaleDecision, ScaleEvent, ScaleKind};
+use crate::workload::retry::backoff_delay;
 use crate::router::chaos::FaultPlan;
 use crate::router::migration;
 use crate::router::policy::{self, RoutePolicy};
@@ -93,6 +95,121 @@ pub struct MultiReplicaResult {
     /// `crash_handoffs`, and Σ `kv_handoffs` == `drain_handoffs` +
     /// `crash_handoffs`.
     pub crash_handoffs: usize,
+    /// Standard-tier requests the deadline-expiry sweep cancelled (PR-8):
+    /// the perf model proved they could no longer meet their prefill
+    /// deadline even with a dedicated server, so their queue slots and
+    /// KV pages went back to work that still can. Each carries
+    /// `Request::shed` and is reported unfinished.
+    pub shed: usize,
+    /// Standard arrivals the brownout ladder demoted to best-effort at
+    /// the door (the Degrade rung): served without the deadline contract.
+    pub degraded: usize,
+    /// Arrivals the brownout ladder turned away outright (the Reject
+    /// rung), each with a deterministic retry-after hint.
+    pub rejected: usize,
+    /// Re-arrivals the closed-loop retry client scheduled for rejected
+    /// requests (counted at scheduling time; Σ `Request::retries` over
+    /// `requests` equals this).
+    pub retries: usize,
+    /// Rejections that did not re-arrive: the attempt cap or the pool's
+    /// retry budget was exhausted, or no retry client was armed.
+    /// Extended ledger invariant (asserted by the overload tests):
+    /// `rejected` == `retries` + `retry_gave_up`, and the number of
+    /// requests with `Request::shed` set equals `shed`.
+    pub retry_gave_up: usize,
+}
+
+/// Brownout rung the router is currently operating at (PR-8). The
+/// ladder moves on pool-wide refusal pressure measured by the same
+/// [`RateEstimator`] the autoscaler trends on — one rung up can skip
+/// straight to `Reject` under a refusal spike, release steps down one
+/// rung at a time under the hysteresis band.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BrownoutLevel {
+    /// Arrivals route normally through admission.
+    Normal,
+    /// New standard arrivals are demoted to best-effort at the door.
+    Degrade,
+    /// New standard arrivals are turned away with a retry-after hint.
+    Reject,
+}
+
+/// The brownout ladder state: overload knobs + the refusal-pressure
+/// estimator + the current rung.
+struct Brownout {
+    cfg: OverloadConfig,
+    est: RateEstimator,
+    level: BrownoutLevel,
+}
+
+impl Brownout {
+    fn new(cfg: OverloadConfig) -> Self {
+        Brownout {
+            cfg,
+            est: RateEstimator::new(cfg.window),
+            level: BrownoutLevel::Normal,
+        }
+    }
+
+    /// Record one arrival's pool-refusal verdict and move the ladder.
+    /// Escalation needs a sampled window (`min_samples`); release does
+    /// not — after a quiet spell the near-empty window must be able to
+    /// step the ladder back down. Returns the timeline event kind when
+    /// the rung changed.
+    fn observe(&mut self, now: f64, refused: bool) -> Option<ScaleKind> {
+        self.est.record_arrival(now, refused);
+        let f = self.est.refusal_rate();
+        let sampled = self.est.len() >= self.cfg.min_samples;
+        let next = match self.level {
+            BrownoutLevel::Normal => {
+                if sampled && f >= self.cfg.reject_threshold {
+                    BrownoutLevel::Reject
+                } else if sampled && f >= self.cfg.degrade_threshold {
+                    BrownoutLevel::Degrade
+                } else {
+                    BrownoutLevel::Normal
+                }
+            }
+            BrownoutLevel::Degrade => {
+                if sampled && f >= self.cfg.reject_threshold {
+                    BrownoutLevel::Reject
+                } else if f < self.cfg.hysteresis * self.cfg.degrade_threshold
+                {
+                    BrownoutLevel::Normal
+                } else {
+                    BrownoutLevel::Degrade
+                }
+            }
+            BrownoutLevel::Reject => {
+                if f < self.cfg.hysteresis * self.cfg.reject_threshold {
+                    BrownoutLevel::Degrade
+                } else {
+                    BrownoutLevel::Reject
+                }
+            }
+        };
+        if next == self.level {
+            return None;
+        }
+        self.level = next;
+        Some(match next {
+            BrownoutLevel::Normal => ScaleKind::BrownoutClear,
+            BrownoutLevel::Degrade => ScaleKind::BrownoutDegrade,
+            BrownoutLevel::Reject => ScaleKind::BrownoutReject,
+        })
+    }
+}
+
+/// The closed-loop retry client (PR-8): rejected requests re-arrive
+/// after a deterministic backoff. The queue is kept sorted ascending by
+/// `(re-arrival time, id)` so the event loop consumes re-arrivals in a
+/// reproducible global order.
+struct RetryState {
+    cfg: RetryConfig,
+    /// `(re-arrival time, request)`, sorted ascending.
+    queue: Vec<(f64, Request)>,
+    /// Pool-wide retry budget still unspent.
+    budget_left: usize,
 }
 
 /// The central router: replicas + dispatch state.
@@ -116,6 +233,20 @@ pub struct Router {
     crashes: usize,
     crash_requeued: usize,
     crash_handoffs: usize,
+    /// Brownout ladder (PR-8), armed by `RouterConfig::overload`.
+    brownout: Option<Brownout>,
+    /// Closed-loop retry client, armed by `RouterConfig::retry`.
+    retry: Option<RetryState>,
+    shed: usize,
+    degraded: usize,
+    rejected: usize,
+    retries: usize,
+    retry_gave_up: usize,
+    /// Requests cancelled by the deadline-expiry sweep, held for the
+    /// deliver-or-report exit (every request is reported exactly once).
+    shed_requests: Vec<Request>,
+    /// Rejected requests that gave up (attempt cap / budget / no client).
+    turned_away: Vec<Request>,
     /// Test hook: replaces the derived safety horizon so the
     /// horizon-tripped exit path (deliver-or-report conservation) is
     /// exercisable without hour-long workloads.
@@ -157,6 +288,19 @@ impl Router {
             crashes: 0,
             crash_requeued: 0,
             crash_handoffs: 0,
+            brownout: rcfg.overload.map(Brownout::new),
+            retry: rcfg.retry.map(|cfg| RetryState {
+                cfg,
+                queue: Vec::new(),
+                budget_left: cfg.budget,
+            }),
+            shed: 0,
+            degraded: 0,
+            rejected: 0,
+            retries: 0,
+            retry_gave_up: 0,
+            shed_requests: Vec::new(),
+            turned_away: Vec::new(),
             horizon_override: None,
         }
     }
@@ -227,34 +371,48 @@ impl Router {
             // their SLO deadlines stay anchored at their true arrival
             // times, so the wait is paid honestly in the metrics.
             let routable = self.replicas.iter().any(|h| h.is_routable());
-            while routable
-                && next_arrival < total
-                && workload[next_arrival].arrival <= now
-            {
-                let req = workload[next_arrival].clone();
-                let dest =
-                    self.cfg.policy.route(&req, &self.replicas, self.rr_next);
-                self.rr_next += 1;
-                if self.autoscaler.is_some() {
-                    // The scale-up signal: was the *pool* about to defer
-                    // this feasible-SLO arrival — i.e. would no Active
-                    // replica admit it? The chosen destination's verdict
-                    // alone is not a capacity signal: under RoundRobin /
-                    // LeastLoad the pick is probe-blind, and scaling up
-                    // because the ring landed on a busy replica while an
-                    // Active peer had headroom grows the pool for free.
-                    // (Cache-served for the probing policies — route()
-                    // just issued these exact probes.)
-                    let refused = self.pool_refuses(&req);
-                    self.autoscaler
-                        .as_mut()
-                        // slos-lint: allow(p1) -- guarded by the enclosing
-                        // if; pool_refuses borrows block let-chaining here
-                        .unwrap()
-                        .record_arrival(now, refused);
+            while routable {
+                // Merge the workload with the retry client's re-arrival
+                // queue: take whichever is due first, ties to the
+                // original workload (both streams are id-sorted within
+                // equal times, so the order is reproducible).
+                let wl_due = (next_arrival < total)
+                    .then(|| workload[next_arrival].arrival)
+                    .filter(|&t| t <= now);
+                let rq_due = self
+                    .retry
+                    .as_ref()
+                    .and_then(|rs| rs.queue.first())
+                    .map(|&(t, _)| t)
+                    .filter(|&t| t <= now);
+                let take_retry = match (wl_due, rq_due) {
+                    (None, None) => break,
+                    (Some(_), None) => false,
+                    (None, Some(_)) => true,
+                    (Some(w), Some(q)) => q < w,
+                };
+                let req = if take_retry {
+                    // slos-lint: allow(p1) -- take_retry implies a
+                    // non-empty retry queue was just observed
+                    self.retry.as_mut().unwrap().queue.remove(0).1
+                } else {
+                    let r = workload[next_arrival].clone();
+                    next_arrival += 1;
+                    r
+                };
+                self.admit_arrival(req, now);
+            }
+
+            // Deadline-expiry sweep (PR-8): before the replica about to
+            // form a batch spends tokens, cancel the standard-tier work
+            // the perf model proves can no longer meet its prefill
+            // deadline — the freed slots and pages go to requests that
+            // still can.
+            let shed_cfg = self.brownout.as_ref().map(|b| b.cfg);
+            if let Some(oc) = shed_cfg {
+                if oc.shed && self.rounds % oc.sweep_every == 0 {
+                    self.shed_sweep(r, now);
                 }
-                self.replicas[dest].deliver(req);
-                next_arrival += 1;
             }
 
             if self.replicas[r].step() {
@@ -268,6 +426,15 @@ impl Router {
                 let mut next = f64::INFINITY;
                 if routable && next_arrival < total {
                     next = next.min(workload[next_arrival].arrival);
+                }
+                if routable {
+                    // A parked re-arrival is a timed event too: without
+                    // this the loop would break with retries stranded.
+                    if let Some(&(t, _)) =
+                        self.retry.as_ref().and_then(|rs| rs.queue.first())
+                    {
+                        next = next.min(t);
+                    }
                 }
                 for (j, h) in self.replicas.iter().enumerate() {
                     if j != r && h.is_live() && h.clock > now {
@@ -341,6 +508,155 @@ impl Router {
         match policy::best_probed(req, &self.replicas, None) {
             Some((_, feasible)) => !feasible,
             None => true, // no routable replica at all
+        }
+    }
+
+    /// Admit one arrival (fresh or retry re-arrival) at pool time `now`:
+    /// feed the refusal signal to the autoscaler and the brownout
+    /// ladder, then dispatch through the ladder's current rung — route
+    /// normally, demote to best-effort at the door, or reject with a
+    /// retry-after hint. The pool-refusal probe is pure (see
+    /// [`pool_refuses`](Self::pool_refuses)), so computing it before
+    /// `route()` leaves every delivery bit-identical to the pre-PR-8
+    /// order.
+    fn admit_arrival(&mut self, req: Request, now: f64) {
+        let refused = (self.autoscaler.is_some() || self.brownout.is_some())
+            && self.pool_refuses(&req);
+        if let Some(a) = self.autoscaler.as_mut() {
+            // The scale-up signal: was the *pool* about to defer this
+            // feasible-SLO arrival — i.e. would no Active replica admit
+            // it? The chosen destination's verdict alone is not a
+            // capacity signal: under RoundRobin / LeastLoad the pick is
+            // probe-blind, and scaling up because the ring landed on a
+            // busy replica while an Active peer had headroom grows the
+            // pool for free.
+            a.record_arrival(now, refused);
+        }
+        let mut stepped: Option<ScaleKind> = None;
+        let mut level = BrownoutLevel::Normal;
+        if let Some(b) = self.brownout.as_mut() {
+            stepped = b.observe(now, refused);
+            level = b.level;
+        }
+        if let Some(kind) = stepped {
+            self.event(now, kind, 0); // pool-level: replica 0 by convention
+        }
+        // The ladder only gates standard-tier arrivals: best-effort work
+        // already runs without a deadline contract, so demoting or
+        // rejecting it sheds no deadline pressure.
+        if req.tier == ServiceTier::Standard {
+            match level {
+                BrownoutLevel::Reject => {
+                    self.reject(req, now);
+                    return;
+                }
+                BrownoutLevel::Degrade => {
+                    let dest = self
+                        .cfg
+                        .policy
+                        .route(&req, &self.replicas, self.rr_next);
+                    self.rr_next += 1;
+                    self.degraded += 1;
+                    self.replicas[dest].deliver_degraded(req);
+                    return;
+                }
+                BrownoutLevel::Normal => {}
+            }
+        }
+        let dest = self.cfg.policy.route(&req, &self.replicas, self.rr_next);
+        self.rr_next += 1;
+        self.replicas[dest].deliver(req);
+    }
+
+    /// Turn an arrival away at the Reject rung: hand it to the retry
+    /// client if one is armed and its caps allow, else count it as given
+    /// up. `retries` is bumped at *scheduling* time so the ledger
+    /// invariant `rejected == retries + retry_gave_up` holds even when
+    /// the run ends with re-arrivals still parked in the queue.
+    fn reject(&mut self, mut req: Request, now: f64) {
+        self.rejected += 1;
+        let hint = self.retry_hint();
+        let seed = self.scenario.seed;
+        if let Some(rs) = self.retry.as_mut() {
+            let attempt = req.retries.saturating_add(1);
+            if attempt <= rs.cfg.max_attempts && rs.budget_left > 0 {
+                rs.budget_left -= 1;
+                req.retries = attempt;
+                let h = rs.cfg.honor_hints.then_some(hint);
+                let delay =
+                    backoff_delay(&rs.cfg, seed, req.id, attempt, h);
+                let t = now + delay;
+                // Re-arrival restarts the SLO clock: the request
+                // re-enters the door as a fresh arrival at `t` (its
+                // deadline re-anchors there on delivery).
+                req.arrival = t;
+                // Sorted insert by (time, id): times are non-negative,
+                // so the bit order equals the numeric order.
+                let key = (t.to_bits(), req.id);
+                let pos = rs.queue.partition_point(|(qt, qr)| {
+                    (qt.to_bits(), qr.id) < key
+                });
+                rs.queue.insert(pos, (t, req));
+                self.retries += 1;
+                return;
+            }
+        }
+        self.retry_gave_up += 1;
+        self.turned_away.push(req);
+    }
+
+    /// Deterministic retry-after hint: the pool's projected backlog
+    /// drain time (outstanding tokens over aggregate peak throughput
+    /// across routable replicas), clamped to a sane band. Pure over the
+    /// pool state — same-seed runs emit bit-identical hints. With
+    /// nothing routable the hint falls back to one brownout window.
+    fn retry_hint(&self) -> f64 {
+        let mut tokens = 0.0f64;
+        let mut peak = 0.0f64;
+        for h in self.replicas.iter().filter(|h| h.is_routable()) {
+            tokens += h.outstanding_tokens() as f64;
+            peak += h.state.model.peak_throughput();
+        }
+        if peak <= 0.0 {
+            return self.brownout.as_ref().map_or(1.0, |b| b.cfg.window);
+        }
+        (tokens / peak).clamp(0.05, 30.0)
+    }
+
+    /// Deadline-expiry sweep over replica `r` (PR-8): cancel every
+    /// standard-tier request still owing prefill that
+    /// [`provably_late`] proves cannot meet its deadline even with the
+    /// whole server to itself. One-sided by construction — a request is
+    /// only shed when *no* schedule could save it, so the sweep never
+    /// trades away attainable work. Decode-phase requests are exempt:
+    /// their TTFT verdict is already sealed and their remaining work is
+    /// cheap steady-state decode.
+    fn shed_sweep(&mut self, r: usize, now: f64) {
+        let mut late: Vec<RequestId> = Vec::new();
+        {
+            let h = &self.replicas[r];
+            // pending + running are Vecs: deterministic scan order.
+            for &id in h.state.pending.iter().chain(h.state.running.iter()) {
+                let req = h.state.req(id);
+                if req.tier != ServiceTier::Standard
+                    || req.is_finished()
+                    || !matches!(req.phase, Phase::Pending | Phase::Prefill)
+                {
+                    continue;
+                }
+                let tokens =
+                    req.prefill_remaining() + req.recompute_pending;
+                if provably_late(tokens, req.pddl - now, &h.state.model) {
+                    late.push(id);
+                }
+            }
+        }
+        for id in late {
+            if let Some(mut req) = self.replicas[r].shed(id) {
+                req.shed = true;
+                self.shed += 1;
+                self.shed_requests.push(req);
+            }
         }
     }
 
@@ -652,6 +968,14 @@ impl Router {
             crashes,
             crash_requeued,
             crash_handoffs,
+            retry,
+            shed,
+            degraded,
+            rejected,
+            retries,
+            retry_gave_up,
+            shed_requests,
+            turned_away,
             ..
         } = self;
         let per_replica_finished: Vec<usize> =
@@ -673,11 +997,19 @@ impl Router {
             .iter()
             .map(|h| (h.retired_at.unwrap_or(span) - h.spawned_at).max(0.0))
             .sum();
+        // Re-arrivals still parked in the retry queue when the run ends
+        // are reported unfinished, like any other undelivered arrival.
+        let stranded: Vec<Request> = retry
+            .map(|rs| rs.queue.into_iter().map(|(_, r)| r).collect())
+            .unwrap_or_default();
         let mut requests: Vec<Request> = replicas
             .into_iter()
             // slos-lint: allow(d1) -- end-of-run drain; sorted by id below
             .flat_map(|h| h.state.requests.into_values())
             .chain(undelivered)
+            .chain(shed_requests)
+            .chain(turned_away)
+            .chain(stranded)
             .collect();
         requests.sort_by_key(|r| r.id);
         let metrics = collect(&requests, span);
@@ -696,6 +1028,11 @@ impl Router {
             crashes,
             crash_requeued,
             crash_handoffs,
+            shed,
+            degraded,
+            rejected,
+            retries,
+            retry_gave_up,
         }
     }
 }
@@ -1094,5 +1431,147 @@ mod tests {
         assert!(res.scale_timeline.iter().any(|e| {
             e.kind == ScaleKind::Failed
         }));
+    }
+
+    #[test]
+    fn brownout_ladder_steps_and_releases_with_hysteresis() {
+        let oc = OverloadConfig {
+            window: 100.0, // no pruning inside this test
+            min_samples: 4,
+            degrade_threshold: 0.3,
+            reject_threshold: 0.6,
+            hysteresis: 0.5,
+            ..OverloadConfig::default()
+        };
+        let mut b = Brownout::new(oc);
+        // Three refusals: below min_samples, no escalation yet.
+        for i in 0..3 {
+            assert_eq!(b.observe(0.1 * i as f64, true), None);
+            assert_eq!(b.level, BrownoutLevel::Normal);
+        }
+        // Fourth refusal samples the window at f = 1.0: a spike may jump
+        // straight past Degrade to Reject.
+        assert_eq!(b.observe(0.3, true), Some(ScaleKind::BrownoutReject));
+        assert_eq!(b.level, BrownoutLevel::Reject);
+        // Admitted arrivals dilute the refusal rate: f = 4 / (4 + k).
+        // Release is hysteretic (half the engage threshold) and steps
+        // one rung at a time: Reject -> Degrade at f < 0.3 needs k = 10,
+        // Degrade -> Normal at f < 0.15 needs k = 23.
+        let mut events = Vec::new();
+        for k in 1..=23 {
+            if let Some(e) = b.observe(0.3 + 0.01 * k as f64, false) {
+                events.push((k, e));
+            }
+        }
+        assert_eq!(events,
+                   vec![(10, ScaleKind::BrownoutDegrade),
+                        (23, ScaleKind::BrownoutClear)],
+                   "release must walk down one rung at a time");
+        assert_eq!(b.level, BrownoutLevel::Normal);
+    }
+
+    #[test]
+    fn shed_sweep_cancels_only_provably_late_requests() {
+        let c = cfg();
+        let rcfg = RouterConfig::new(1)
+            .with_overload(OverloadConfig::default());
+        let mut router = Router::new(&c, &rcfg);
+        // A request whose prefill deadline passed long ago, holding KV.
+        router.replicas[0].deliver(req(1, 0.0, 2000, 10));
+        let free0 = router.replicas[0].state.kv.allocator().free_pages();
+        assert!(router.replicas[0].state.kv.grow(1, 64));
+        assert!(router.replicas[0].state.kv.allocator().free_pages()
+                < free0);
+        // A request that just arrived: its deadline lies ahead and the
+        // zero-load budget covers it — not provably late.
+        let survivor = Request::simple(
+            2, 1000.0, 400, 10,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose));
+        router.replicas[0].deliver(survivor);
+        router.shed_sweep(0, 1000.0);
+        assert_eq!(router.shed, 1, "exactly the expired request sheds");
+        assert_eq!(router.shed_requests.len(), 1);
+        assert!(router.shed_requests[0].shed);
+        assert_eq!(router.shed_requests[0].id, 1);
+        assert!(!router.replicas[0].state.requests.contains_key(&1));
+        assert!(router.replicas[0].state.requests.contains_key(&2),
+                "the feasible request must survive the sweep");
+        assert_eq!(router.replicas[0].state.kv.allocator().free_pages(),
+                   free0, "shed KV pages return to the pool");
+    }
+
+    #[test]
+    fn rejections_schedule_capped_retries_then_give_up() {
+        let c = cfg();
+        let rcfg = RouterConfig::new(1)
+            .with_overload(OverloadConfig::default())
+            .with_retry(crate::config::RetryConfig {
+                max_attempts: 2,
+                ..crate::config::RetryConfig::default()
+            });
+        let mut router = Router::new(&c, &rcfg);
+        let r = req(5, 1.0, 400, 10);
+        router.reject(r, 1.0);
+        assert_eq!((router.rejected, router.retries, router.retry_gave_up),
+                   (1, 1, 0));
+        let (t1, r2) = router.retry.as_mut().unwrap().queue.remove(0);
+        assert!(t1 > 1.0, "re-arrival must lie strictly ahead");
+        assert_eq!(r2.retries, 1);
+        assert_eq!(r2.arrival.to_bits(), t1.to_bits(),
+                   "the re-arrival restarts the SLO clock");
+        // Second rejection still schedules (attempt 2 == cap) ...
+        router.reject(r2, t1);
+        let (t2, r3) = router.retry.as_mut().unwrap().queue.remove(0);
+        assert_eq!(r3.retries, 2);
+        assert!(t2 > t1);
+        // ... the third exhausts the attempt cap and gives up.
+        router.reject(r3, t2);
+        assert_eq!((router.rejected, router.retries, router.retry_gave_up),
+                   (3, 2, 1));
+        assert_eq!(router.turned_away.len(), 1);
+        assert_eq!(router.rejected,
+                   router.retries + router.retry_gave_up,
+                   "the rejection ledger must always reconcile");
+        // A drained pool-wide budget turns rejections away immediately.
+        let tight = RouterConfig::new(1)
+            .with_overload(OverloadConfig::default())
+            .with_retry(crate::config::RetryConfig {
+                budget: 1,
+                ..crate::config::RetryConfig::default()
+            });
+        let mut router = Router::new(&c, &tight);
+        router.reject(req(7, 0.0, 400, 10), 0.0);
+        router.reject(req(8, 0.0, 400, 10), 0.0);
+        assert_eq!((router.rejected, router.retries, router.retry_gave_up),
+                   (2, 1, 1));
+    }
+
+    #[test]
+    fn rejected_requests_without_retry_client_are_reported_once() {
+        // Force the Reject rung with pathological thresholds on a
+        // saturated pool and no retry client: every rejected arrival
+        // must appear exactly once in the result, unfinished.
+        let c = cfg();
+        let oc = OverloadConfig {
+            degrade_threshold: 0.0,
+            reject_threshold: 0.0,
+            min_samples: 1,
+            ..OverloadConfig::default()
+        };
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, 0.05 * i as f64, 2500, 30))
+            .collect();
+        let rcfg = RouterConfig::new(1)
+            .with_policy(RoutePolicy::BurstAware)
+            .with_overload(oc);
+        let res = run_multi_replica(reqs, &c, &rcfg);
+        assert_eq!(res.requests.len(), 30, "requests lost at the door");
+        let mut ids: Vec<u64> = res.requests.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 30, "duplicate ids in the report");
+        assert!(res.rejected > 0, "zero thresholds must reject");
+        assert_eq!(res.retries, 0, "no retry client armed");
+        assert_eq!(res.retry_gave_up, res.rejected,
+                   "every rejection gives up without a client");
     }
 }

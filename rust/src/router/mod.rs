@@ -106,6 +106,37 @@
 //!   [Warming] on a FRESH slot (fresh schedule, default override)
 //! ```
 //!
+//! # Overload dataflow (PR-8: shed / degrade / reject / retry)
+//!
+//! With [`OverloadConfig`] armed, the balancer adds a demand-side
+//! defense in front of (and orthogonal to) the lifecycle above:
+//!
+//! ```text
+//!   arrival ──> brownout ladder (pool refusal rate, decayed window)
+//!                │ Normal          │ Degrade              │ Reject
+//!                v                 v                      v
+//!           route + deliver   deliver as BEST-EFFORT   turn away +
+//!           (unchanged)       (`degraded`)             retry-after hint
+//!                                                      (`rejected`)
+//!                                                         │
+//!             retry client armed? ───────────────────────┤
+//!             re-arrival at t + backoff(seed, id,        │ attempts /
+//!             attempt) honoring the hint (`retries`) <───┘ budget left
+//!                                                         │ exhausted
+//!                                                         v
+//!                                              reported unserved
+//!                                              (`retry_gave_up`)
+//!
+//!   every `sweep_every` rounds, per replica about to batch:
+//!   standard-tier request provably unable to meet its prefill
+//!   deadline (perf-model proof, batch_formation::provably_late)
+//!   ──> cancelled: KV pages released, reported once as `shed`.
+//! ```
+//!
+//! All five counters reconcile against per-request fields — see the
+//! ledger invariant documented on
+//! [`MultiReplicaResult`](balancer::MultiReplicaResult).
+//!
 //! Heterogeneous pools: `RouterConfig::overrides` gives replica `i` its
 //! own `ReplicaOverride` (hardware preset, KV budget, chunked-prefill
 //! budget, speculation setup) — see `ScenarioConfig::for_replica`.
@@ -124,7 +155,8 @@ pub use chaos::FaultPlan;
 pub use policy::RoutePolicy;
 pub use replica::{FeasibilityProbe, ReplicaHandle, ReplicaState};
 
-use crate::config::{AutoscalerConfig, FaultConfig, ReplicaOverride};
+use crate::config::{AutoscalerConfig, FaultConfig, OverloadConfig,
+                    ReplicaOverride, RetryConfig};
 use crate::coordinator::scheduler::Features;
 
 /// Pool-level router configuration.
@@ -155,6 +187,12 @@ pub struct RouterConfig {
     /// [`FaultPlan`] of per-slot crash/slowdown schedules fired at pool
     /// time. `None` = no faults (every pre-PR-6 run).
     pub faults: Option<FaultConfig>,
+    /// Overload protection (PR-8): deadline-expiry shed sweep + brownout
+    /// ladder. `None` = unprotected (every pre-PR-8 run).
+    pub overload: Option<OverloadConfig>,
+    /// Closed-loop retry client: ladder-rejected requests re-arrive
+    /// after seeded backoff. `None` = rejected work never returns.
+    pub retry: Option<RetryConfig>,
 }
 
 impl RouterConfig {
@@ -167,6 +205,8 @@ impl RouterConfig {
             overrides: Vec::new(),
             autoscaler: None,
             faults: None,
+            overload: None,
+            retry: None,
         }
     }
 
@@ -198,6 +238,19 @@ impl RouterConfig {
     /// fired at pool time by the balancer's event loop).
     pub fn with_faults(mut self, f: FaultConfig) -> Self {
         self.faults = Some(f);
+        self
+    }
+
+    /// Arm the overload-protection layer (deadline-expiry shedding +
+    /// brownout ladder; see [`OverloadConfig`]).
+    pub fn with_overload(mut self, o: OverloadConfig) -> Self {
+        self.overload = Some(o);
+        self
+    }
+
+    /// Attach the closed-loop retry client (see [`RetryConfig`]).
+    pub fn with_retry(mut self, r: RetryConfig) -> Self {
+        self.retry = Some(r);
         self
     }
 }

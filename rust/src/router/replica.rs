@@ -31,7 +31,8 @@ use std::cell::RefCell;
 use crate::config::{ReplicaOverride, ScenarioConfig};
 use crate::coordinator::request::{Phase, Request, RequestId, ServiceTier};
 use crate::coordinator::scheduler::{tier_of, Features, SlosServe, TIERS};
-use crate::sim::{apply_batch, deliver, Policy, ServerState};
+use crate::sim::{apply_batch, decline_to_best_effort, deliver, Policy,
+                 ServerState};
 use crate::workload::Rng;
 
 /// Lifecycle of one replica in an elastic pool (see the state diagram in
@@ -380,6 +381,37 @@ impl ReplicaHandle {
         let before = self.admission_demand();
         deliver(&mut self.state, r);
         self.note_mutation(before);
+    }
+
+    /// Deliver a brownout-demoted arrival (PR-8): it enters its stage
+    /// like any delivery — the prefill deadline stays anchored at the
+    /// true arrival — but goes straight to the best-effort queue without
+    /// an admission pass. The demotion is the ladder's Degrade rung: the
+    /// pool keeps serving the work, just without the standard-tier
+    /// deadline contract it demonstrably cannot honor right now.
+    pub fn deliver_degraded(&mut self, r: Request) {
+        let before = self.admission_demand();
+        let id = r.id;
+        deliver(&mut self.state, r);
+        decline_to_best_effort(&mut self.state, id);
+        self.note_mutation(before);
+    }
+
+    /// Cancel request `id` outright (the deadline-expiry shed, PR-8):
+    /// removed from every queue, KV pages *and* the admission
+    /// reservation released — unlike [`extract`](Self::extract) the
+    /// request is leaving the pool, not moving, so no recompute debt is
+    /// booked. Returns the request for the router's shed ledger.
+    pub fn shed(&mut self, id: RequestId) -> Option<Request> {
+        let before = self.admission_demand();
+        let r = self.state.requests.remove(&id)?;
+        self.state.pending.retain(|&x| x != id);
+        self.state.running.retain(|&x| x != id);
+        self.state.best_effort.retain(|&x| x != id);
+        self.state.kv.release(id);
+        self.policy.on_finished(id);
+        self.note_mutation(before);
+        Some(r)
     }
 
     pub fn has_work(&self) -> bool {
@@ -818,6 +850,45 @@ mod tests {
         assert!(dst.state.best_effort.contains(&7));
         assert!(dst.state.pending.is_empty());
         assert!(dst.state.is_handoff_movable(7));
+    }
+
+    #[test]
+    fn deliver_degraded_enters_best_effort_directly() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        let mut r = req(7, 400, 10);
+        r.arrival = 2.0;
+        h.deliver_degraded(r);
+        let r = &h.state.requests[&7];
+        assert_eq!(r.tier, ServiceTier::BestEffort,
+                   "degraded arrival must skip the standard tier");
+        assert!(h.state.best_effort.contains(&7));
+        assert!(h.state.pending.is_empty(),
+                "no admission pass for a demoted arrival");
+        assert!(r.pddl > 2.0,
+                "the stage still enters with its deadline anchored at \
+                 the true arrival");
+    }
+
+    #[test]
+    fn shed_releases_kv_and_admission_reservation() {
+        let c = cfg();
+        let mut h = ReplicaHandle::new(0, &c, None, None);
+        h.deliver(req(1, 400, 10));
+        // Let admission run: the request is admitted with its pages
+        // reserved, and starts holding KV.
+        assert!(h.step(), "a lone modest request must be admitted");
+        assert!(h.policy.reserved_pages() > 0, "admission reserves pages");
+        let free_before = h.state.kv.allocator().free_pages();
+        let r = h.shed(1).expect("present");
+        assert_eq!(r.id, 1);
+        assert!(!r.is_finished());
+        assert_eq!(h.policy.reserved_pages(), 0,
+                   "shedding must release the admission reservation");
+        assert!(h.state.kv.allocator().free_pages() >= free_before,
+                "shedding must return KV pages to the pool");
+        assert!(!h.has_work());
+        assert!(h.shed(1).is_none(), "second shed finds nothing");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Workload synthesis substrate: deterministic RNG, Azure-like arrival
 //! traces (Fig. 8), and per-scenario request generators (Tab. 1/2/4).
 
+pub mod retry;
 pub mod rng;
 pub mod scenarios;
 pub mod traces;
 
+pub use retry::backoff_delay;
 pub use rng::Rng;
 pub use scenarios::{build_stages, generate, stats, WorkloadStats};
 pub use traces::{burst_window, compress_middle_third, count_cv,

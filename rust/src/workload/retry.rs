@@ -1,0 +1,138 @@
+//! Closed-loop retry client: deterministic backoff for brownout-rejected
+//! requests (the PR-8 demand-side loop).
+//!
+//! Real overloads are amplified by clients: a refused request re-arrives,
+//! adding to exactly the pressure that refused it — the metastable
+//! failure pattern. The router models that loop here, with the delay a
+//! **pure function** of `(workload seed, request id, attempt)` so that a
+//! run with retries armed is bit-reproducible (lint rule d3: no OS
+//! randomness anywhere; the jitter comes from the repo's own SplitMix64).
+//!
+//! The schedule is capped exponential backoff with decorrelated jitter:
+//! attempt `k` waits `min(cap, base * 2^(k-1))` scaled into
+//! `[1 - jitter, 1)` by the per-`(id, attempt)` hash, then floored by the
+//! router's retry-after hint when the client honors hints. A naive
+//! client ([`RetryConfig::naive`]) waits only the minimum re-arrival
+//! epsilon — the storm baseline `figure overload` compares against.
+
+use crate::config::RetryConfig;
+use crate::coordinator::request::RequestId;
+use crate::workload::rng::Rng;
+
+/// Smallest re-arrival delay (seconds). Strictly positive so a rejection
+/// at pool time `t` can never re-arrive within the same arrival drain at
+/// `t` (which would let a rejected request loop forever inside one
+/// router round).
+pub const MIN_DELAY: f64 = 1e-3;
+
+/// Backoff before attempt `attempt` (1-based: the first re-arrival after
+/// the first rejection is attempt 1) of request `id`, under workload
+/// seed `seed`. `hint` is the router's retry-after hint, honored as a
+/// floor when the config says to. Pure in its arguments — calling it
+/// twice with the same inputs yields the same delay, bit for bit.
+pub fn backoff_delay(
+    cfg: &RetryConfig,
+    seed: u64,
+    id: RequestId,
+    attempt: u32,
+    hint: Option<f64>,
+) -> f64 {
+    let mut delay = if cfg.naive {
+        MIN_DELAY
+    } else {
+        // min(cap, base * 2^(k-1)), jittered into [1 - jitter, 1).
+        let exp = (cfg.base * (2.0f64).powi(attempt.saturating_sub(1) as i32))
+            .min(cfg.cap);
+        let u = unit_hash(seed, id, attempt);
+        exp * (1.0 - cfg.jitter * u)
+    };
+    if cfg.honor_hints {
+        if let Some(h) = hint {
+            delay = delay.max(h);
+        }
+    }
+    delay.max(MIN_DELAY)
+}
+
+/// Deterministic uniform in [0, 1) from `(seed, id, attempt)`: one
+/// SplitMix64 draw seeded by a mix of the three. Distinct `(id, attempt)`
+/// pairs decorrelate even under identical workload seeds.
+fn unit_hash(seed: u64, id: RequestId, attempt: u32) -> f64 {
+    let mixed = seed
+        ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    Rng::new(mixed).f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RetryConfig {
+        RetryConfig::default()
+    }
+
+    #[test]
+    fn delay_is_pure_in_seed_id_attempt() {
+        let c = cfg();
+        for id in [0u64, 7, 1000] {
+            for attempt in 1..=4 {
+                let a = backoff_delay(&c, 42, id, attempt, None);
+                let b = backoff_delay(&c, 42, id, attempt, None);
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Different seeds / ids / attempts decorrelate.
+        assert_ne!(
+            backoff_delay(&c, 42, 1, 1, None).to_bits(),
+            backoff_delay(&c, 43, 1, 1, None).to_bits()
+        );
+        assert_ne!(
+            backoff_delay(&c, 42, 1, 1, None).to_bits(),
+            backoff_delay(&c, 42, 2, 1, None).to_bits()
+        );
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_until_the_cap() {
+        let c = RetryConfig { jitter: 0.0, ..cfg() };
+        let d1 = backoff_delay(&c, 0, 1, 1, None);
+        let d2 = backoff_delay(&c, 0, 1, 2, None);
+        let d3 = backoff_delay(&c, 0, 1, 3, None);
+        assert!((d1 - c.base).abs() < 1e-12);
+        assert!((d2 - 2.0 * c.base).abs() < 1e-12);
+        assert!((d3 - 4.0 * c.base).abs() < 1e-12);
+        // Deep attempts saturate at the cap.
+        let deep = backoff_delay(&c, 0, 1, 30, None);
+        assert!((deep - c.cap).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_stays_inside_the_band() {
+        let c = cfg(); // jitter 0.5
+        for id in 0..50u64 {
+            let d = backoff_delay(&c, 7, id, 1, None);
+            assert!(d >= 0.5 * c.base - 1e-12 && d < c.base + 1e-12,
+                    "d={d}");
+        }
+    }
+
+    #[test]
+    fn hints_floor_the_delay_only_when_honored() {
+        let c = cfg();
+        let hinted = backoff_delay(&c, 0, 1, 1, Some(5.0));
+        assert!(hinted >= 5.0);
+        let deaf = RetryConfig { honor_hints: false, ..c };
+        let ignored = backoff_delay(&deaf, 0, 1, 1, Some(5.0));
+        assert!(ignored < 5.0);
+    }
+
+    #[test]
+    fn naive_client_waits_only_the_epsilon() {
+        let c = RetryConfig::naive();
+        for attempt in 1..=4 {
+            let d = backoff_delay(&c, 0, 9, attempt, Some(5.0));
+            assert_eq!(d, MIN_DELAY, "naive ignores schedule and hints");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Overload-resilience integration tests (ISSUE 8 acceptance): on a
+//! Mixed trace at twice the canonical rate over a fixed pool, (1) runs
+//! with shedding, the brownout ladder, the retry client, AND fault
+//! injection armed together must be bit-reproducible, (2) the extended
+//! MultiReplicaResult ledger must reconcile exactly with the
+//! per-request ledger — `rejected == retries + retry_gave_up`, summed
+//! `Request::retries` equals the pool counter, shed flags match the
+//! shed counter, and every request is reported exactly once, (3) the
+//! protected router must strictly beat the unprotected one on
+//! standard-tier goodput, and (4) total refusal — every standard
+//! arrival rejected for the whole run, with and without retries and
+//! faults — must conserve every request without livelock.
+
+use std::collections::HashSet;
+
+use slos_serve::config::{FaultConfig, OverloadConfig, RetryConfig,
+                         Scenario, ScenarioConfig};
+use slos_serve::coordinator::request::{Request, ServiceTier};
+use slos_serve::router::{run_multi_replica, MultiReplicaResult,
+                         RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+const N: usize = 200;
+
+/// The overload trace: the bursty Mixed shape shared with the elastic
+/// and chaos tests, but at 2x the canonical arrival rate — sustained
+/// pressure a fixed 2-replica pool cannot clear.
+fn overload_workload() -> (ScenarioConfig, Vec<Request>) {
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(3.0)
+        .with_requests(N)
+        .with_seed(42);
+    let mut wl = workload::generate(&cfg);
+    workload::compress_middle_third(&mut wl, 4.0);
+    (cfg, wl)
+}
+
+fn mid_burst() -> f64 {
+    let (_, wl) = overload_workload();
+    let (t0, t1) = workload::burst_window(&wl);
+    0.5 * (t0 + t1)
+}
+
+fn run_with(rcfg: &RouterConfig) -> MultiReplicaResult {
+    let (cfg, wl) = overload_workload();
+    run_multi_replica(wl, &cfg, rcfg)
+}
+
+fn protected() -> RouterConfig {
+    RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_overload(OverloadConfig::default())
+}
+
+fn assert_identical(a: &MultiReplicaResult, b: &MultiReplicaResult) {
+    assert_eq!(a.metrics.finished, b.metrics.finished);
+    assert_eq!(a.metrics.attained, b.metrics.attained);
+    assert_eq!(a.metrics.span.to_bits(), b.metrics.span.to_bits(),
+               "span must match bit-exactly");
+    assert_eq!(a.rerouted, b.rerouted);
+    assert_eq!(a.migrated, b.migrated);
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.crash_requeued, b.crash_requeued);
+    assert_eq!(a.crash_handoffs, b.crash_handoffs);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.degraded, b.degraded);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.retry_gave_up, b.retry_gave_up);
+    assert_eq!(a.scale_timeline.len(), b.scale_timeline.len());
+    for (x, y) in a.scale_timeline.iter().zip(&b.scale_timeline) {
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.active, y.active);
+        assert_eq!(x.t.to_bits(), y.t.to_bits());
+    }
+    assert_eq!(a.replica_seconds.to_bits(), b.replica_seconds.to_bits());
+}
+
+/// The extended ledger invariant (documented on `MultiReplicaResult`):
+/// pool-level overload counters must reconcile exactly with the
+/// per-request ledger, and every workload request must be reported
+/// exactly once, whatever mix of finishing, shedding, degradation,
+/// rejection, and retries it went through.
+fn assert_ledger(res: &MultiReplicaResult) {
+    assert_eq!(res.requests.len(), N,
+               "every request reported exactly once");
+    let ids: HashSet<u64> = res.requests.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), N, "duplicate ids in result");
+    assert_eq!(res.rejected, res.retries + res.retry_gave_up,
+               "every rejection either schedules a retry or gives up");
+    let req_retries: usize =
+        res.requests.iter().map(|r| r.retries as usize).sum();
+    assert_eq!(req_retries, res.retries,
+               "per-request retry counts must sum to the pool counter");
+    let shed_flagged = res.requests.iter().filter(|r| r.shed).count();
+    assert_eq!(shed_flagged, res.shed,
+               "shed flags must match the shed counter");
+    // The PR-6/7 crash/drain ledger still holds with shedding armed.
+    let req_requeues: usize =
+        res.requests.iter().map(|r| r.drain_requeues as usize).sum();
+    let req_handoffs: usize =
+        res.requests.iter().map(|r| r.kv_handoffs as usize).sum();
+    assert_eq!(req_requeues,
+               res.drain_requeued + res.crash_requeued + res.crash_handoffs,
+               "requeue ledger out of balance");
+    assert_eq!(req_handoffs, res.drain_handoffs + res.crash_handoffs,
+               "handoff ledger out of balance");
+}
+
+#[test]
+fn overload_runs_are_bit_deterministic_with_everything_armed() {
+    // Shed sweep + brownout ladder + hinted retry client + seeded
+    // Poisson faults, all at once: two runs must agree bit-for-bit on
+    // every metric, counter, and timeline event.
+    let rcfg = protected()
+        .with_retry(RetryConfig::default())
+        .with_faults(FaultConfig::default()
+                     .with_seed(11)
+                     .with_crash_rate(0.01)
+                     .with_slowdown_rate(0.05));
+    let a = run_with(&rcfg);
+    let b = run_with(&rcfg);
+    assert_identical(&a, &b);
+    assert_ledger(&a);
+}
+
+#[test]
+fn protected_router_beats_unprotected_on_standard_goodput() {
+    // The acceptance headline: at ~2x overload on the same fixed pool,
+    // shedding provably-late work and demoting/rejecting at the ladder
+    // must strictly raise SLO-attained standard-tier completions per
+    // second over the run.
+    let unprotected = run_with(
+        &RouterConfig::new(2).with_policy(RoutePolicy::BurstAware));
+    let prot = run_with(&protected());
+    assert!(prot.shed + prot.degraded + prot.rejected > 0,
+            "2x overload must engage the protection layer: {:?}",
+            prot.metrics);
+    assert!(prot.metrics.goodput() > unprotected.metrics.goodput(),
+            "protected goodput {:.3}/s must strictly beat unprotected \
+             {:.3}/s",
+            prot.metrics.goodput(), unprotected.metrics.goodput());
+    assert_ledger(&prot);
+    // Unprotected runs keep the pre-PR-8 shape: counters stay zero.
+    assert_eq!((unprotected.shed, unprotected.degraded,
+                unprotected.rejected, unprotected.retries,
+                unprotected.retry_gave_up),
+               (0, 0, 0, 0, 0));
+}
+
+#[test]
+fn hinted_backoff_beats_naive_retry_storm() {
+    // The metastable gap: naive clients re-offer rejected load
+    // immediately, re-amplifying the pressure that rejected it; hinted
+    // capped backoff spreads the same demand past the burst. Goodput
+    // must not get worse under hints, and the storm must be visibly
+    // larger in rejections.
+    let naive = run_with(&protected().with_retry(RetryConfig::naive()));
+    let hinted = run_with(&protected().with_retry(RetryConfig::default()));
+    assert_ledger(&naive);
+    assert_ledger(&hinted);
+    assert!(naive.rejected >= hinted.rejected,
+            "instant re-arrival must not see fewer rejections than \
+             backed-off re-arrival: naive {} vs hinted {}",
+            naive.rejected, hinted.rejected);
+    assert!(hinted.metrics.goodput() >= naive.metrics.goodput(),
+            "hinted backoff goodput {:.3}/s must not lose to the naive \
+             storm {:.3}/s",
+            hinted.metrics.goodput(), naive.metrics.goodput());
+}
+
+#[test]
+fn total_refusal_conserves_every_request_without_livelock() {
+    // Zero thresholds with an immediate sample gate: the ladder jumps
+    // to Reject on the first arrival and, with hysteresis * 0 = 0
+    // unreachable, never releases — every standard arrival is refused
+    // for the whole run. With and without retries and faults, the run
+    // must terminate (retry attempts are capped) and report every
+    // request exactly once.
+    let (_, wl) = overload_workload();
+    let standard = wl.iter()
+        .filter(|r| r.tier == ServiceTier::Standard)
+        .count();
+    assert!(standard > 0, "Mixed trace must carry standard-tier work");
+    let refuse_all = OverloadConfig {
+        min_samples: 1,
+        ..OverloadConfig::default().with_thresholds(0.0, 0.0)
+    };
+    let retries: [Option<RetryConfig>; 3] =
+        [None, Some(RetryConfig::naive()), Some(RetryConfig::default())];
+    let faults: [Option<FaultConfig>; 2] =
+        [None, Some(FaultConfig::default().crash_at(0, mid_burst()))];
+    for rc in retries {
+        for fc in &faults {
+            let mut rcfg = RouterConfig::new(2)
+                .with_policy(RoutePolicy::BurstAware)
+                .with_overload(refuse_all);
+            if let Some(r) = rc {
+                rcfg = rcfg.with_retry(r);
+            }
+            if let Some(f) = fc.clone() {
+                rcfg = rcfg.with_faults(f);
+            }
+            let res = run_with(&rcfg);
+            assert_ledger(&res);
+            assert_eq!(res.degraded, 0,
+                       "a zero-threshold ladder never stops at Degrade");
+            // Every standard request eventually gives up; with a retry
+            // client each burns its full attempt budget first.
+            assert_eq!(res.retry_gave_up, standard);
+            match rc {
+                None => {
+                    assert_eq!(res.retries, 0);
+                    assert_eq!(res.rejected, standard);
+                }
+                Some(c) => {
+                    assert_eq!(res.retries,
+                               standard * c.max_attempts as usize);
+                    assert_eq!(res.rejected,
+                               standard * (c.max_attempts as usize + 1));
+                }
+            }
+        }
+    }
+}

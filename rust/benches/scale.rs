@@ -1,0 +1,78 @@
+//! Scale bench (PR-9): the ISSUE-9 scale gate as a perf artifact.
+//! Runs the streaming multi-replica path (`run_multi_replica_stream` —
+//! lazy arrival generation, per-round fold of finished requests) over
+//! the Mixed trace at 10k / 100k / 1M requests and reports, per row,
+//! wall seconds, `sched_wall_seconds` per request, and the O(pending)
+//! `peak_inflight` watermark. The gate: per-request scheduling cost at
+//! 1M must stay within 1.5x of the 10k row — a regression here means
+//! something O(trace) or O(replicas)-per-event crept back into the
+//! event loop. Under `SLOS_BENCH_QUICK` the ladder shrinks to
+//! 1k / 5k / 10k (smoke evidence; the flatness assert is full-run
+//! only).
+//!
+//! Each row is timed ONCE (`Stats { iters: 1 }` built directly): a 1M
+//! run is minutes of wall time, and the signal is the within-run
+//! per-request ratio, not cross-iteration variance.
+
+use slos_serve::bench_harness::{quick, JsonReport, Stats};
+use slos_serve::config::{Scenario, ScenarioConfig};
+use slos_serve::router::{run_multi_replica_stream, RoutePolicy,
+                         RouterConfig};
+use slos_serve::workload;
+
+fn main() {
+    let sizes: [usize; 3] = if quick() {
+        [1_000, 5_000, 10_000]
+    } else {
+        [10_000, 100_000, 1_000_000]
+    };
+
+    let mut rows = Vec::new();
+    let mut sched_us_rows = Vec::new();
+    let mut report = JsonReport::new("scale");
+    for &n in &sizes {
+        // Feasible load (1 req/s per replica) so the pending set — and
+        // with it fold-mode resident memory — stays O(pending).
+        let cfg = ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(4.0)
+            .with_requests(n)
+            .with_seed(42);
+        let span_hint = n as f64 / cfg.rate;
+        let rcfg =
+            RouterConfig::new(4).with_policy(RoutePolicy::RoundRobin);
+        // slos-lint: allow(d2) -- the scale bench measures wall time
+        let t0 = std::time::Instant::now();
+        let res = run_multi_replica_stream(
+            workload::stream(&cfg), span_hint, &cfg, &rcfg);
+        let wall = t0.elapsed().as_secs_f64();
+        let sched_us = 1e6 * res.sched_wall_seconds / n as f64;
+        println!("scale/n_{n:<8} wall {wall:8.2}s  sched \
+                  {sched_us:7.3} µs/req  peak-inflight {:6}  finished {}",
+                 res.peak_inflight, res.metrics.finished);
+        report.add_derived(format!("sched_us_per_request_n{n}"), sched_us);
+        report.add_derived(format!("peak_inflight_n{n}"),
+                           res.peak_inflight as f64);
+        sched_us_rows.push(sched_us);
+        rows.push((format!("n_{n}"),
+                   Stats { median: wall, mean: wall, min: wall, max: wall,
+                           iters: 1 }));
+    }
+
+    // The gate ratio: per-request sched cost at the largest size over
+    // the smallest. ISSUE 9 acceptance: <= 1.5 at 1M vs 10k.
+    let first = sched_us_rows.first().copied().unwrap_or(0.0);
+    let last = sched_us_rows.last().copied().unwrap_or(0.0);
+    let ratio = if first > 0.0 { last / first } else { 1.0 };
+    report.add_derived("sched_flatness_largest_over_smallest", ratio);
+    println!("sched flatness {ratio:.3}x ({} vs {} requests)",
+             sizes[2], sizes[0]);
+    if !quick() {
+        assert!(ratio <= 1.5,
+                "scale gate: sched µs/req at 1M is {ratio:.3}x the 10k \
+                 row (limit 1.5x)");
+    }
+
+    report.add_group("scale_run", rows);
+    let path = report.write().expect("write BENCH_scale.json");
+    println!("wrote {}", path.display());
+}

@@ -152,12 +152,135 @@ impl Scenario {
 }
 
 /// Arrival process shapes matching the Azure trace characteristics.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// (No `Eq`: the heavy-tailed variants carry `f64` shape parameters.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalPattern {
     /// Azure-Chatting-like: near-Poisson, CV ~= 1.
     Stable,
     /// Azure-Coding-like: on/off modulated Poisson, CV ~= 2.5.
     Bursty,
+    /// Log-normal inter-arrivals (sigma is the log-space std). The
+    /// location parameter is solved so the mean inter-arrival stays
+    /// `1/rate`; larger sigma fattens the tail at a fixed mean.
+    LogNormal { sigma: f64 },
+    /// Pareto inter-arrivals with tail index `alpha` (> 1 so the mean
+    /// exists). The scale parameter is solved so the mean inter-arrival
+    /// stays `1/rate`; `alpha <= 2` already has infinite variance — the
+    /// heaviest tail the generator offers.
+    Pareto { alpha: f64 },
+}
+
+impl ArrivalPattern {
+    /// Default log-space std for `lognormal` CLI specs (CV ~= 1.9).
+    pub const DEFAULT_LOGNORMAL_SIGMA: f64 = 1.2;
+    /// Default tail index for `pareto` CLI specs (infinite variance).
+    pub const DEFAULT_PARETO_ALPHA: f64 = 1.5;
+}
+
+/// Sinusoidal time-of-day modulation of the arrival rate (the diurnal
+/// curve real traffic follows): the instantaneous rate is
+/// `rate * (1 + amplitude * sin(2*pi*(t - phase) / period))`. Applied
+/// to any base [`ArrivalPattern`] by Lewis–Shedler thinning, which
+/// preserves seeded determinism (one extra uniform per candidate
+/// arrival, drawn from the same stream).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateCurve {
+    /// Seconds per full cycle (a simulated "day").
+    pub period: f64,
+    /// Peak-to-mean swing in [0, 1]: 0 = flat, 1 = rate hits zero at
+    /// the trough.
+    pub amplitude: f64,
+    /// Phase offset (seconds); the curve crosses its mean going up at
+    /// `t = phase`.
+    pub phase: f64,
+}
+
+/// Parsed `--arrivals` CLI spec: a base inter-arrival distribution plus
+/// an optional diurnal rate curve. `None` on [`ScenarioConfig::arrival`]
+/// keeps the scenario's Azure-trace default
+/// ([`Scenario::arrival_pattern`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalSpec {
+    pub pattern: ArrivalPattern,
+    pub curve: Option<RateCurve>,
+}
+
+impl ArrivalSpec {
+    /// Parse the CLI `--arrivals` spec: comma-separated atoms. The
+    /// first atom names the base distribution — `poisson` (= `stable`),
+    /// `mmpp` (= `bursty`), `lognormal[:SIGMA]`, `pareto[:ALPHA]` —
+    /// and an optional `diurnal=PERIOD:AMP[:PHASE]` atom adds the
+    /// rate curve. E.g. `--arrivals pareto:1.5,diurnal=3600:0.6`.
+    pub fn parse(spec: &str) -> Result<ArrivalSpec, String> {
+        let mut pattern = None;
+        let mut curve = None;
+        for atom in spec.split(',').filter(|a| !a.is_empty()) {
+            if let Some(rest) = atom.strip_prefix("diurnal=") {
+                let mut it = rest.split(':');
+                let num = |s: Option<&str>, what: &str| -> Result<f64, String> {
+                    s.ok_or(format!("diurnal needs {what} in `{atom}`"))?
+                        .parse()
+                        .map_err(|_| format!("bad {what} in `{atom}`"))
+                };
+                let period = num(it.next(), "PERIOD")?;
+                let amplitude = num(it.next(), "AMP")?;
+                let phase = match it.next() {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| format!("bad PHASE in `{atom}`"))?,
+                    None => 0.0,
+                };
+                if period <= 0.0 {
+                    return Err(format!("diurnal period must be > 0 in `{atom}`"));
+                }
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return Err(format!(
+                        "diurnal amplitude must be in [0, 1] in `{atom}`"));
+                }
+                curve = Some(RateCurve { period, amplitude, phase });
+                continue;
+            }
+            let (name, param) = match atom.split_once(':') {
+                Some((n, p)) => {
+                    let v: f64 = p
+                        .parse()
+                        .map_err(|_| format!("bad number in `{atom}`"))?;
+                    (n, Some(v))
+                }
+                None => (atom, None),
+            };
+            let pat = match (name, param) {
+                ("poisson" | "stable", None) => ArrivalPattern::Stable,
+                ("mmpp" | "bursty", None) => ArrivalPattern::Bursty,
+                ("lognormal", sigma) => {
+                    let sigma = sigma
+                        .unwrap_or(ArrivalPattern::DEFAULT_LOGNORMAL_SIGMA);
+                    if sigma <= 0.0 {
+                        return Err(format!(
+                            "lognormal sigma must be > 0 in `{atom}`"));
+                    }
+                    ArrivalPattern::LogNormal { sigma }
+                }
+                ("pareto", alpha) => {
+                    let alpha =
+                        alpha.unwrap_or(ArrivalPattern::DEFAULT_PARETO_ALPHA);
+                    if alpha <= 1.0 {
+                        return Err(format!(
+                            "pareto alpha must be > 1 in `{atom}`"));
+                    }
+                    ArrivalPattern::Pareto { alpha }
+                }
+                _ => return Err(format!("unknown arrival atom `{atom}`")),
+            };
+            if pattern.is_some() {
+                return Err(format!("duplicate arrival pattern `{atom}`"));
+            }
+            pattern = Some(pat);
+        }
+        let pattern =
+            pattern.ok_or("arrival spec needs a base distribution")?;
+        Ok(ArrivalSpec { pattern, curve })
+    }
 }
 
 /// Hardware presets the roofline perf model is fit for.
@@ -202,6 +325,10 @@ pub struct ScenarioConfig {
     /// preset's physical limit — used for heterogeneous replica pools
     /// (§4.2) where replicas run different chunked-prefill budgets.
     pub chunk_budget: Option<usize>,
+    /// Arrival-process override (`--arrivals`): base distribution plus
+    /// optional diurnal rate curve. `None` keeps the scenario's
+    /// Azure-trace default pattern.
+    pub arrival: Option<ArrivalSpec>,
     pub seed: u64,
 }
 
@@ -222,6 +349,7 @@ impl ScenarioConfig {
             max_spec_len: 8,
             exec_noise: 0.05,
             chunk_budget: None,
+            arrival: None,
             seed: 0,
         }
     }
@@ -243,6 +371,13 @@ impl ScenarioConfig {
 
     pub fn with_speculative(mut self, on: bool) -> Self {
         self.speculative = on;
+        self
+    }
+
+    /// Override the arrival process (base distribution + optional
+    /// diurnal curve). See [`ArrivalSpec::parse`] for the CLI spelling.
+    pub fn with_arrivals(mut self, spec: ArrivalSpec) -> Self {
+        self.arrival = Some(spec);
         self
     }
 
@@ -882,6 +1017,38 @@ mod tests {
         assert_eq!(n, RetryConfig::naive());
         assert!(RetryConfig::parse("bogus").is_err());
         assert!(RetryConfig::parse("warp=9").is_err());
+    }
+
+    #[test]
+    fn arrival_spec_parse_round_trips_the_cli_spec() {
+        let s = ArrivalSpec::parse("poisson").unwrap();
+        assert_eq!(s.pattern, ArrivalPattern::Stable);
+        assert!(s.curve.is_none());
+        assert_eq!(ArrivalSpec::parse("bursty").unwrap().pattern,
+                   ArrivalPattern::Bursty);
+        assert_eq!(ArrivalSpec::parse("mmpp").unwrap().pattern,
+                   ArrivalPattern::Bursty);
+        let s = ArrivalSpec::parse("lognormal:0.8").unwrap();
+        assert_eq!(s.pattern, ArrivalPattern::LogNormal { sigma: 0.8 });
+        let s = ArrivalSpec::parse("lognormal").unwrap();
+        assert_eq!(s.pattern, ArrivalPattern::LogNormal {
+            sigma: ArrivalPattern::DEFAULT_LOGNORMAL_SIGMA });
+        let s = ArrivalSpec::parse("pareto:1.5,diurnal=3600:0.6:900").unwrap();
+        assert_eq!(s.pattern, ArrivalPattern::Pareto { alpha: 1.5 });
+        assert_eq!(s.curve, Some(RateCurve {
+            period: 3600.0, amplitude: 0.6, phase: 900.0 }));
+        // Phase defaults to 0.
+        let s = ArrivalSpec::parse("poisson,diurnal=60:0.5").unwrap();
+        assert_eq!(s.curve.unwrap().phase, 0.0);
+        // Validation: tail/shape bounds and malformed atoms.
+        assert!(ArrivalSpec::parse("pareto:1.0").is_err());
+        assert!(ArrivalSpec::parse("lognormal:0").is_err());
+        assert!(ArrivalSpec::parse("diurnal=60:0.5").is_err());
+        assert!(ArrivalSpec::parse("poisson,diurnal=60:1.5").is_err());
+        assert!(ArrivalSpec::parse("poisson,diurnal=0:0.5").is_err());
+        assert!(ArrivalSpec::parse("poisson,mmpp").is_err());
+        assert!(ArrivalSpec::parse("warp").is_err());
+        assert!(ArrivalSpec::parse("").is_err());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!   d1 — no unordered-map iteration in planning/routing/sim/workload
 //!   d2 — no wall-clock (`Instant`/`SystemTime`) outside bench_harness
 //!   d3 — no OS randomness anywhere (only seeded `workload::rng`)
+//!   d4 — BinaryHeap keys in router//workload/ need an explicit
+//!        `impl Ord` with an id/index tie-break (total order)
 //!   p1 — no unwrap/expect/panic! in library code (slice-index → warn)
 //!   l1 — every pub numeric counter on SimResult/MultiReplicaResult is
 //!        referenced from rust/tests/
@@ -23,7 +25,7 @@ use super::{Severity, Violation};
 
 /// Every allowable rule id (the `lint` meta-rule for broken annotations
 /// is deliberately absent — it cannot be allowed away).
-pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "p1", "l1"];
+pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "d4", "p1", "l1"];
 
 pub fn is_known_rule(id: &str) -> bool {
     RULE_IDS.contains(&id)
@@ -45,6 +47,15 @@ const ITER_METHODS: &[&str] =
     &["iter", "iter_mut", "into_iter", "drain", "retain"];
 
 const WALL_CLOCK_TYPES: &[&str] = &["Instant", "SystemTime"];
+
+/// The priority-queue type d4 guards. Name lives in a string literal so
+/// the table cannot flag itself (see the NOTE above).
+const D4_HEAP_TYPE: &str = "BinaryHeap";
+
+/// Idents accepted as the explicit tie-break component of a heap key's
+/// total order (rule d4): a unique id or positional index that makes
+/// equal-primary-key pops deterministic.
+const D4_TIE_BREAKS: &[&str] = &["id", "index", "idx", "slot", "replica"];
 
 const OS_RANDOM_IDENTS: &[&str] =
     &["thread_rng", "from_entropy", "OsRng", "getrandom"];
@@ -89,6 +100,13 @@ fn d2_exempt(path: &str) -> bool {
     path.ends_with("bench_harness.rs")
 }
 
+fn in_d4_scope(path: &str) -> bool {
+    // The event-ordering substrate: the router's clock/retry queues and
+    // the workload's re-arrival queue. `coordinator/` heaps order batch
+    // *candidates*, where a derived lexicographic Ord is the intent.
+    ["router/", "workload/"].iter().any(|d| path.contains(d))
+}
+
 fn in_p1_scope(path: &str) -> bool {
     // Library code only: src/ minus bins (main.rs *is* covered — its
     // CLI plumbing should surface errors, not panic).
@@ -109,6 +127,9 @@ pub fn check_file(f: &SourceFile) -> Vec<Violation> {
         check_d2(f, &mut out);
     }
     check_d3(f, &mut out);
+    if in_d4_scope(&f.path) {
+        check_d4(f, &mut out);
+    }
     if in_p1_scope(&f.path) {
         check_p1(f, &mut out);
     }
@@ -325,6 +346,88 @@ fn check_d3(f: &SourceFile, out: &mut Vec<Violation>) {
                 f,
                 tok.line,
                 "OS randomness — use the seeded workload::rng::Rng only"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// d4 — deterministic heap ordering. A file in router// workload/ that
+/// uses `BinaryHeap` in non-test code must also spell out at least one
+/// `impl Ord for` whose body mentions a tie-break ident
+/// (id/index/idx/slot/replica). A derived or primary-key-only `Ord`
+/// makes equal-key pops depend on heap internals — the same class of
+/// nondeterminism d1 bans for maps, at the event queue instead.
+fn check_d4(f: &SourceFile, out: &mut Vec<Violation>) {
+    let t = &f.tokens;
+    let heap_line = t.iter().enumerate().find_map(|(i, tok)| {
+        let in_test = f.in_test.get(i).copied().unwrap_or(false);
+        (!in_test && tok.kind == TokKind::Ident && tok.text == D4_HEAP_TYPE)
+            .then_some(tok.line)
+    });
+    let Some(heap_line) = heap_line else { return };
+    // Collect every `impl Ord for` block and whether its brace-matched
+    // body mentions a tie-break ident.
+    let mut impls: Vec<(u32, bool)> = Vec::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        let is_ord_impl = t.get(i).map(|n| n.is_ident("impl")).unwrap_or(false)
+            && t.get(i + 1).map(|n| n.is_ident("Ord")).unwrap_or(false)
+            && t.get(i + 2).map(|n| n.is_ident("for")).unwrap_or(false);
+        if !is_ord_impl {
+            i += 1;
+            continue;
+        }
+        let impl_line = t.get(i).map(|n| n.line).unwrap_or(heap_line);
+        let mut j = i + 3;
+        while j < t.len() && !t.get(j).map(|n| n.is_punct('{')).unwrap_or(true)
+        {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let mut has_tie = false;
+        while j < t.len() {
+            let Some(n) = t.get(j) else { break };
+            if n.is_punct('{') {
+                depth += 1;
+            } else if n.is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if n.kind == TokKind::Ident
+                && D4_TIE_BREAKS.contains(&n.text.as_str())
+            {
+                has_tie = true;
+            }
+            j += 1;
+        }
+        impls.push((impl_line, has_tie));
+        i = j + 1;
+    }
+    if impls.is_empty() {
+        out.push(viol(
+            "d4",
+            Severity::Deny,
+            f,
+            heap_line,
+            format!(
+                "{D4_HEAP_TYPE} items without an explicit `impl Ord` — \
+                 spell the total order with an id/index tie-break so \
+                 equal keys pop deterministically"
+            ),
+        ));
+        return;
+    }
+    if !impls.iter().any(|&(_, tie)| tie) {
+        if let Some(&(line, _)) = impls.first() {
+            out.push(viol(
+                "d4",
+                Severity::Deny,
+                f,
+                line,
+                "heap key `Ord` lacks an id/index tie-break — equal \
+                 primary keys would pop in heap-internal order"
                     .to_string(),
             ));
         }
@@ -583,6 +686,54 @@ mod tests {
         );
         let f = lex("rust/benches/x.rs", &src);
         assert_eq!(denies(&check_file(&f), "d3"), vec![1, 1]);
+    }
+
+    #[test]
+    fn d4_heap_without_ord_impl_denied() {
+        let src = "fn f() { let h: BinaryHeap<u64> = BinaryHeap::new(); }";
+        let f = lex("rust/src/router/x.rs", src);
+        assert_eq!(denies(&check_file(&f), "d4"), vec![1]);
+    }
+
+    #[test]
+    fn d4_ord_without_tie_break_denied_at_impl() {
+        let src = "\
+struct K { t: u64 }
+impl Ord for K {
+    fn cmp(&self, other: &Self) -> Ordering { self.t.cmp(&other.t) }
+}
+fn f() { let h: BinaryHeap<K> = BinaryHeap::new(); }
+";
+        let f = lex("rust/src/workload/x.rs", src);
+        assert_eq!(denies(&check_file(&f), "d4"), vec![2]);
+    }
+
+    #[test]
+    fn d4_ord_with_id_tie_break_clean() {
+        let src = "\
+struct K { t: u64, id: u64 }
+impl Ord for K {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.t, self.id).cmp(&(other.t, other.id))
+    }
+}
+fn f() { let h: BinaryHeap<K> = BinaryHeap::new(); }
+";
+        let f = lex("rust/src/router/x.rs", src);
+        assert_eq!(denies(&check_file(&f), "d4"), vec![]);
+    }
+
+    #[test]
+    fn d4_out_of_scope_and_test_code_exempt() {
+        let src = "fn f() { let h: BinaryHeap<u64> = BinaryHeap::new(); }";
+        let out_of_scope = lex("rust/src/coordinator/x.rs", src);
+        assert_eq!(denies(&check_file(&out_of_scope), "d4"), vec![]);
+        let in_test = lex(
+            "rust/src/router/x.rs",
+            "#[cfg(test)]\nmod tests {\n    fn f() { \
+             let h: BinaryHeap<u64> = BinaryHeap::new(); }\n}",
+        );
+        assert_eq!(denies(&check_file(&in_test), "d4"), vec![]);
     }
 
     #[test]

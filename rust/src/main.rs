@@ -7,10 +7,12 @@
 //!                     [--reactive] [--no-handoff] [--seed X]
 //!                     [--faults SPEC] [--fault-seed Y]
 //!                     [--overload SPEC] [--retry-policy SPEC]
+//!                     [--arrivals SPEC]
 //! slos-serve capacity [--scenario S] [--requests N]
 //! slos-serve figure <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos|
-//!                     overload> [--requests N]
-//! slos-serve trace    [--scenario S] [--rate R] [--requests N] [--stats]
+//!                     overload|scale> [--requests N]
+//! slos-serve trace    [--scenario S] [--rate R] [--requests N]
+//!                     [--arrivals SPEC] [--stats]
 //! ```
 //!
 //! (Hand-rolled argument parsing: the offline environment has no clap —
@@ -19,8 +21,9 @@
 use std::collections::HashMap;
 
 use slos_serve::baselines;
-use slos_serve::config::{AutoscalerConfig, FaultConfig, OverloadConfig,
-                         RetryConfig, Scenario, ScenarioConfig};
+use slos_serve::config::{ArrivalSpec, AutoscalerConfig, FaultConfig,
+                         OverloadConfig, RetryConfig, Scenario,
+                         ScenarioConfig};
 use slos_serve::figures::{make_policy, try_make_policy};
 use slos_serve::metrics::capacity_search;
 use slos_serve::router::{run_multi_replica, RoutePolicy, RouterConfig};
@@ -77,11 +80,11 @@ const USAGE: &str = "usage: slos-serve <serve|capacity|figure|trace> [options]
            [--autoscale --min-replicas A --max-replicas B]
            [--reactive] [--no-handoff]
            [--faults SPEC] [--fault-seed Y]
-           [--overload SPEC] [--retry-policy SPEC]
+           [--overload SPEC] [--retry-policy SPEC] [--arrivals SPEC]
   capacity --scenario S --requests N
-  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos|overload>
-           --requests N
-  trace    --scenario S --rate R --requests N [--stats]
+  figure   <1|2|3|4|8|9|10a|10b|11|12|13|14|15|elastic|chaos|overload|
+            scale> --requests N
+  trace    --scenario S --rate R --requests N [--arrivals SPEC] [--stats]
 scenarios:      chatbot coder summarizer mixed toolllm reasoning
 policies:       slos-serve slos-serve-ar vllm vllm-spec sarathi
 route policies: round-robin least-load slo-feasibility burst-aware
@@ -103,7 +106,12 @@ retry-policy:   closed-loop retry client over rejections; SPEC is
                 `hinted`, `naive`, or comma-separated: base=S, cap=S,
                 attempts=N, budget=N, jitter=F, hints=B, naive=B.
                 Both route through the multi-replica path even with
-                --replicas 1";
+                --replicas 1
+arrivals:       override the scenario's arrival process; SPEC is
+                poisson | bursty | mmpp | lognormal[:SIGMA] |
+                pareto[:ALPHA], optionally with a time-of-day modulator
+                `,diurnal=PERIOD:AMP[:PHASE]` (e.g.
+                `pareto:1.5,diurnal=3600:0.6`). Mean rate stays --rate";
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -121,10 +129,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "serve" => {
             let sc = scenario(&args, "chatbot")?;
             let policy = args.str("policy", "slos-serve");
-            let cfg = ScenarioConfig::new(sc)
+            let mut cfg = ScenarioConfig::new(sc)
                 .with_rate(args.get("rate", 2.0))
                 .with_requests(args.get("requests", 500))
                 .with_seed(args.get("seed", 0));
+            if let Some(spec) = args.flags.get("arrivals") {
+                cfg = cfg.with_arrivals(ArrivalSpec::parse(spec)?);
+            }
             let replicas: usize = args.get("replicas", 1);
             let autoscale = args.bool("autoscale");
             let faults = match args.flags.get("faults") {
@@ -242,9 +253,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
         "trace" => {
             let sc = scenario(&args, "coder")?;
-            let cfg = ScenarioConfig::new(sc)
+            let mut cfg = ScenarioConfig::new(sc)
                 .with_rate(args.get("rate", 2.0))
                 .with_requests(args.get("requests", 2000));
+            if let Some(spec) = args.flags.get("arrivals") {
+                cfg = cfg.with_arrivals(ArrivalSpec::parse(spec)?);
+            }
             let wl = workload::generate(&cfg);
             if args.bool("stats") {
                 let st = workload::stats(&wl);

@@ -64,6 +64,73 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
+/// Streaming fold of [`collect`] (ISSUE 9): requests are folded one at
+/// a time — in any order — and finalized once, so a fold-mode router
+/// run can evict finished requests instead of retaining the trace.
+/// [`collect`] is implemented on top of this, so the two can never
+/// drift: folding the same request multiset yields bit-identical
+/// [`RunMetrics`] (the counts are order-free, and the latency vectors
+/// are `total_cmp`-sorted before the percentile reads, which erases
+/// insertion order).
+///
+/// Memory: O(finished stage records) for the two latency vectors —
+/// two `f64`s per stage, the irreducible cost of exact percentiles —
+/// while the folded `Request`s themselves (stages, SLO specs, stage
+/// records) are dropped, which is the O(trace) term the fold removes.
+#[derive(Debug, Default)]
+pub struct MetricsAccum {
+    total: usize,
+    finished: usize,
+    attained: usize,
+    best_effort: usize,
+    ttft_slack: Vec<f64>,
+    tpots: Vec<f64>,
+}
+
+impl MetricsAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one request, finished or not, into the accumulator.
+    pub fn fold(&mut self, r: &Request) {
+        self.total += 1;
+        if r.tier == ServiceTier::BestEffort {
+            self.best_effort += 1;
+        }
+        if !r.is_finished() {
+            return;
+        }
+        self.finished += 1;
+        // A standard-tier request attains only if every stage met both
+        // SLOs.
+        if r.tier == ServiceTier::Standard && r.slo_attained() {
+            self.attained += 1;
+        }
+        for rec in &r.stage_records {
+            self.ttft_slack.push(rec.prefill_finished - rec.prefill_deadline);
+            self.tpots.push(rec.worst_tpot);
+        }
+    }
+
+    /// Finalize into [`RunMetrics`] over makespan `span`.
+    pub fn finish(mut self, span: f64) -> RunMetrics {
+        self.ttft_slack.sort_by(|a, b| a.total_cmp(b));
+        self.tpots.sort_by(|a, b| a.total_cmp(b));
+        RunMetrics {
+            total: self.total,
+            finished: self.finished,
+            attained: self.attained,
+            best_effort: self.best_effort,
+            ttft_p50: percentile(&self.ttft_slack, 0.5),
+            ttft_p99: percentile(&self.ttft_slack, 0.99),
+            tpot_p50: percentile(&self.tpots, 0.5),
+            tpot_p99: percentile(&self.tpots, 0.99),
+            span,
+        }
+    }
+}
+
 /// Collect metrics over completed requests.
 ///
 /// TTFT is reported as *slack*: `prefill_finished - prefill_deadline`
@@ -71,41 +138,11 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 /// with different prompt lengths, slack is. TPOT is the worst windowed
 /// inter-token time per stage.
 pub fn collect(requests: &[Request], span: f64) -> RunMetrics {
-    let mut attained = 0;
-    let mut finished = 0;
-    let mut best_effort = 0;
-    let mut ttft_slack = Vec::new();
-    let mut tpots = Vec::new();
+    let mut acc = MetricsAccum::new();
     for r in requests {
-        if r.tier == ServiceTier::BestEffort {
-            best_effort += 1;
-        }
-        if !r.is_finished() {
-            continue;
-        }
-        finished += 1;
-        // A standard-tier request attains only if every stage met both SLOs.
-        if r.tier == ServiceTier::Standard && r.slo_attained() {
-            attained += 1;
-        }
-        for rec in &r.stage_records {
-            ttft_slack.push(rec.prefill_finished - rec.prefill_deadline);
-            tpots.push(rec.worst_tpot);
-        }
+        acc.fold(r);
     }
-    ttft_slack.sort_by(|a, b| a.total_cmp(b));
-    tpots.sort_by(|a, b| a.total_cmp(b));
-    RunMetrics {
-        total: requests.len(),
-        finished,
-        attained,
-        best_effort,
-        ttft_p50: percentile(&ttft_slack, 0.5),
-        ttft_p99: percentile(&ttft_slack, 0.99),
-        tpot_p50: percentile(&tpots, 0.5),
-        tpot_p99: percentile(&tpots, 0.99),
-        span,
-    }
+    acc.finish(span)
 }
 
 /// SLO attainment restricted to requests *arriving* in `[t0, t1)` — the
@@ -268,6 +305,34 @@ mod tests {
         assert!((m.goodput() - 0.1).abs() < 1e-12);
         let empty = collect(&[], 0.0);
         assert_eq!(empty.goodput(), 0.0);
+    }
+
+    #[test]
+    fn fold_is_order_free_and_matches_collect() {
+        let reqs = vec![
+            finished_request(0, true),
+            finished_request(1, false),
+            Request::simple(2, 0.0, 10, 2,
+                            SloSpec::from_tiers(SloTier::Loose,
+                                                SloTier::Loose)),
+            finished_request(3, true),
+        ];
+        let want = collect(&reqs, 7.0);
+        // Fold the same multiset in a different order: every field must
+        // come out bit-identical (counts are order-free; the latency
+        // vectors are sorted before the percentile reads).
+        let mut acc = MetricsAccum::new();
+        for i in [3usize, 1, 0, 2] {
+            acc.fold(&reqs[i]);
+        }
+        let got = acc.finish(7.0);
+        assert_eq!((got.total, got.finished, got.attained, got.best_effort),
+                   (want.total, want.finished, want.attained,
+                    want.best_effort));
+        assert_eq!(got.ttft_p50.to_bits(), want.ttft_p50.to_bits());
+        assert_eq!(got.ttft_p99.to_bits(), want.ttft_p99.to_bits());
+        assert_eq!(got.tpot_p50.to_bits(), want.tpot_p50.to_bits());
+        assert_eq!(got.tpot_p99.to_bits(), want.tpot_p99.to_bits());
     }
 
     #[test]

@@ -34,15 +34,16 @@
 //! through the deliver-or-report `finish` path, so crashed work is
 //! reported unfinished, never silently dropped.
 
-use std::collections::HashSet;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
 
 use crate::config::{FaultKind, OverloadConfig, RetryConfig, ScenarioConfig};
 use crate::coordinator::batch_formation::provably_late;
 use crate::coordinator::request::{Phase, Request, RequestId, ServiceTier};
-use crate::metrics::{collect, RunMetrics};
+use crate::metrics::{collect, MetricsAccum, RunMetrics};
 use crate::router::autoscaler::{Autoscaler, PoolCounts, RateEstimator,
                                 ScaleDecision, ScaleEvent, ScaleKind};
-use crate::workload::retry::backoff_delay;
+use crate::workload::retry::{backoff_delay, RetryQueue};
 use crate::router::chaos::FaultPlan;
 use crate::router::migration;
 use crate::router::policy::{self, RoutePolicy};
@@ -117,6 +118,67 @@ pub struct MultiReplicaResult {
     /// `rejected` == `retries` + `retry_gave_up`, and the number of
     /// requests with `Request::shed` set equals `shed`.
     pub retry_gave_up: usize,
+    /// Maximum requests simultaneously resident in the pool (delivered,
+    /// neither finished nor shed) over the run — the O(pending) memory
+    /// bound the scale gate (ISSUE 9) asserts: a fold-mode run's peak
+    /// footprint tracks this, not the trace length.
+    pub peak_inflight: usize,
+}
+
+/// Heap key for the indexed event queue (ISSUE 9): one replica's clock
+/// as raw bits plus its index. The ordering is *total and explicit*
+/// (lint rule d4): clock bits first — clocks are non-negative finite,
+/// so `u64` bit order equals `f64` order — then the replica index, so
+/// equal clocks pop lowest-index first, exactly the replica the old
+/// O(replicas) linear `min_by` (which keeps the first of equal minima)
+/// would have selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ClockKey {
+    clock_bits: u64,
+    index: usize,
+}
+
+impl PartialOrd for ClockKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ClockKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.clock_bits, self.index).cmp(&(other.clock_bits, other.index))
+    }
+}
+
+/// One-request lookahead over the workload source: the event loop needs
+/// "is an arrival due by `now`?" without consuming it, over any
+/// iterator — a materialized `Vec` or the O(1)-memory
+/// [`RequestStream`](crate::workload::RequestStream).
+struct Peeked<I: Iterator<Item = Request>> {
+    it: I,
+    buf: Option<Request>,
+}
+
+impl<I: Iterator<Item = Request>> Peeked<I> {
+    fn new(it: I) -> Self {
+        Peeked { it, buf: None }
+    }
+
+    /// Arrival time of the next request, if any (fills the lookahead).
+    fn peek_arrival(&mut self) -> Option<f64> {
+        if self.buf.is_none() {
+            self.buf = self.it.next();
+        }
+        self.buf.as_ref().map(|r| r.arrival)
+    }
+
+    /// Consume and return the next request.
+    fn take(&mut self) -> Option<Request> {
+        if self.buf.is_none() {
+            self.buf = self.it.next();
+        }
+        self.buf.take()
+    }
 }
 
 /// Brownout rung the router is currently operating at (PR-8). The
@@ -201,13 +263,14 @@ impl Brownout {
 }
 
 /// The closed-loop retry client (PR-8): rejected requests re-arrive
-/// after a deterministic backoff. The queue is kept sorted ascending by
-/// `(re-arrival time, id)` so the event loop consumes re-arrivals in a
-/// reproducible global order.
+/// after a deterministic backoff. The queue pops ascending by
+/// `(re-arrival time, id)` — the same reproducible global order the
+/// sorted `Vec` it replaced kept, at O(log n) per operation
+/// ([`RetryQueue`], ISSUE 9).
 struct RetryState {
     cfg: RetryConfig,
-    /// `(re-arrival time, request)`, sorted ascending.
-    queue: Vec<(f64, Request)>,
+    /// Scheduled re-arrivals, popped in (time, id) order.
+    queue: RetryQueue,
     /// Pool-wide retry budget still unspent.
     budget_left: usize,
 }
@@ -242,6 +305,17 @@ pub struct Router {
     rejected: usize,
     retries: usize,
     retry_gave_up: usize,
+    /// Indexed event queue (ISSUE 9): min-heap over live replica
+    /// clocks, *lazily invalidated* — an entry is stale once its
+    /// replica died or its clock moved past the recorded bits, and
+    /// stale entries are skipped at pop. Replaces the per-round
+    /// O(replicas) `min_by` scan, so a round costs O(log replicas).
+    clock_queue: BinaryHeap<Reverse<ClockKey>>,
+    /// Requests delivered to a replica so far (normal or degraded).
+    delivered: usize,
+    /// Running max of `delivered - finished - shed` (see
+    /// [`MultiReplicaResult::peak_inflight`]).
+    peak_inflight: usize,
     /// Requests cancelled by the deadline-expiry sweep, held for the
     /// deliver-or-report exit (every request is reported exactly once).
     shed_requests: Vec<Request>,
@@ -291,7 +365,7 @@ impl Router {
             brownout: rcfg.overload.map(Brownout::new),
             retry: rcfg.retry.map(|cfg| RetryState {
                 cfg,
-                queue: Vec::new(),
+                queue: RetryQueue::new(),
                 budget_left: cfg.budget,
             }),
             shed: 0,
@@ -299,44 +373,152 @@ impl Router {
             rejected: 0,
             retries: 0,
             retry_gave_up: 0,
+            clock_queue: BinaryHeap::new(),
+            delivered: 0,
+            peak_inflight: 0,
             shed_requests: Vec::new(),
             turned_away: Vec::new(),
             horizon_override: None,
         }
     }
 
+    /// Replicas still in the pool (neither `Drained` nor `Failed`).
+    fn live_count(&self) -> usize {
+        self.replicas.iter().filter(|h| h.is_live()).count()
+    }
+
+    /// Is any replica currently accepting arrivals (`Active`)?
+    fn any_routable(&self) -> bool {
+        self.replicas.iter().any(|h| h.is_routable())
+    }
+
+    /// Replicas currently accepting arrivals.
+    fn routable_count(&self) -> usize {
+        self.replicas.iter().filter(|h| h.is_routable()).count()
+    }
+
+    /// Lifecycle census the autoscaler consumes (shared by the steady
+    /// tick and the crash path — they must never drift).
+    fn pool_counts(&self) -> PoolCounts {
+        let (mut active, mut warming, mut draining) = (0usize, 0, 0);
+        for h in &self.replicas {
+            match h.lifecycle {
+                ReplicaState::Active => active += 1,
+                ReplicaState::Warming => warming += 1,
+                ReplicaState::Draining => draining += 1,
+                ReplicaState::Drained | ReplicaState::Failed => {}
+            }
+        }
+        PoolCounts { active, warming, draining }
+    }
+
+    /// Probe-cache capacity follows the live pool in *both* directions
+    /// (spawn, warm-down, crash): without the re-scale every survivor
+    /// of a pool change would keep a stale-sized cap forever.
+    fn rescale_probe_caches(&mut self) {
+        let cap = scaled_probe_cache_cap(self.live_count().max(1));
+        for h in &mut self.replicas {
+            h.set_probe_cache_cap(cap);
+        }
+    }
+
+    /// Record replica `i`'s current clock in the indexed event queue.
+    /// Entries are never removed in place —
+    /// [`pop_min_replica`](Self::pop_min_replica) discards stale ones
+    /// lazily — so every clock mutation just pushes a fresh key.
+    fn push_clock(&mut self, i: usize) {
+        self.clock_queue.push(Reverse(ClockKey {
+            clock_bits: self.replicas[i].clock.to_bits(),
+            index: i,
+        }));
+    }
+
+    /// Pop the live replica with the minimum `(clock, index)` — the
+    /// replica the old linear `min_by` scan (first of equal minima =
+    /// lowest index) would have selected. Entries whose replica died or
+    /// whose clock has moved on are dropped here; clocks only ever move
+    /// forward, so a stale entry always sorts at-or-before the fresh
+    /// one and is met (and discarded) first. Returns `None` when no
+    /// live replica remains.
+    fn pop_min_replica(&mut self) -> Option<usize> {
+        while let Some(&Reverse(key)) = self.clock_queue.peek() {
+            self.clock_queue.pop();
+            let h = &self.replicas[key.index];
+            if h.is_live() && h.clock.to_bits() == key.clock_bits {
+                return Some(key.index);
+            }
+        }
+        None
+    }
+
     fn event(&mut self, t: f64, kind: ScaleKind, replica: usize) {
-        let active =
-            self.replicas.iter().filter(|h| h.is_routable()).count();
+        let active = self.routable_count();
         self.timeline.push(ScaleEvent { t, kind, replica, active });
     }
 
     /// Serve `workload` to completion (or the safety horizon); consumes
-    /// the router.
+    /// the router. Retain mode: every request is kept and returned in
+    /// `MultiReplicaResult::requests`.
     pub fn run(mut self, mut workload: Vec<Request>) -> MultiReplicaResult {
         workload.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let total = workload.len();
-        let mut next_arrival = 0usize;
-        let mut finished = 0usize;
         let span_guess = workload.last().map(|r| r.arrival).unwrap_or(0.0);
         let horizon = self
             .horizon_override
             .unwrap_or((span_guess + 120.0) * 20.0 + 600.0);
+        self.run_core(workload.into_iter(), total, horizon, None)
+    }
+
+    /// Serve a lazy, arrival-ordered request source without ever
+    /// materializing it (ISSUE 9 fold mode): requests are pulled one at
+    /// a time, and finished requests are folded into a running
+    /// [`MetricsAccum`] and evicted each round, so resident memory is
+    /// O(in-flight + pool), not O(trace). The folded multiset is
+    /// identical to the retained one, so the returned metrics and
+    /// counters are bit-identical to [`run`](Self::run) over the
+    /// collected source (pinned by the `integration_scale` suite);
+    /// `MultiReplicaResult::requests` comes back empty. `span_hint`
+    /// seeds the safety horizon — the eager path reads the last arrival
+    /// off the sorted trace, which a stream cannot know up front.
+    pub fn run_stream<I>(mut self, source: I, span_hint: f64)
+                         -> MultiReplicaResult
+    where
+        I: ExactSizeIterator<Item = Request>,
+    {
+        let total = source.len();
+        let horizon = self
+            .horizon_override
+            .unwrap_or((span_hint + 120.0) * 20.0 + 600.0);
+        self.run_core(source, total, horizon, Some(MetricsAccum::new()))
+    }
+
+    /// The shared event loop behind [`run`](Self::run) (retain mode,
+    /// `fold: None`) and [`run_stream`](Self::run_stream) (fold mode).
+    fn run_core<I: Iterator<Item = Request>>(
+        mut self,
+        source: I,
+        total: usize,
+        horizon: f64,
+        mut fold: Option<MetricsAccum>,
+    ) -> MultiReplicaResult {
+        let mut source = Peeked::new(source);
+        let mut finished = 0usize;
+        // Seed the indexed event queue with every live clock (tests may
+        // have pushed replicas by hand before calling run).
+        self.clock_queue.clear();
+        for i in 0..self.replicas.len() {
+            if self.replicas[i].is_live() {
+                self.push_clock(i);
+            }
+        }
 
         while finished < total {
             // Advance the live replica whose clock is furthest behind
             // (Drained replicas left the pool; their frozen clocks must
-            // not pin the minimum).
-            let Some(r) = self
-                .replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, h)| h.is_live())
-                .min_by(|(_, a), (_, b)| {
-                    a.clock.total_cmp(&b.clock)
-                })
-                .map(|(i, _)| i)
-            else {
+            // not pin the minimum). O(log replicas) off the indexed
+            // queue — the old per-round O(replicas) `min_by` scan is
+            // the hot-path cost the scale gate tracks.
+            let Some(r) = self.pop_min_replica() else {
                 // Reachable since PR-6: fault injection can kill every
                 // replica (`Failed` is live:false, like `Drained`), and a
                 // fixed pool has no autoscaler to respawn one. Fall
@@ -358,7 +540,8 @@ impl Router {
 
             // Fire every scheduled fault due by pool time. The selected
             // replica itself may crash here — re-select rather than step
-            // a corpse.
+            // a corpse. (Its queue entry is already popped; a dead
+            // replica needs none.)
             self.inject_faults(now);
             if !self.replicas[r].is_live() {
                 continue;
@@ -367,23 +550,20 @@ impl Router {
             // Route and deliver every arrival due by the lagging clock —
             // but only while somewhere routable exists. With zero
             // routable replicas (e.g. the whole pool just crashed and a
-            // respawn is still warming) arrivals wait in the workload;
+            // respawn is still warming) arrivals wait in the source;
             // their SLO deadlines stay anchored at their true arrival
             // times, so the wait is paid honestly in the metrics.
-            let routable = self.replicas.iter().any(|h| h.is_routable());
+            let routable = self.any_routable();
             while routable {
                 // Merge the workload with the retry client's re-arrival
                 // queue: take whichever is due first, ties to the
                 // original workload (both streams are id-sorted within
                 // equal times, so the order is reproducible).
-                let wl_due = (next_arrival < total)
-                    .then(|| workload[next_arrival].arrival)
-                    .filter(|&t| t <= now);
+                let wl_due = source.peek_arrival().filter(|&t| t <= now);
                 let rq_due = self
                     .retry
                     .as_ref()
-                    .and_then(|rs| rs.queue.first())
-                    .map(|&(t, _)| t)
+                    .and_then(|rs| rs.queue.peek_time())
                     .filter(|&t| t <= now);
                 let take_retry = match (wl_due, rq_due) {
                     (None, None) => break,
@@ -394,14 +574,20 @@ impl Router {
                 let req = if take_retry {
                     // slos-lint: allow(p1) -- take_retry implies a
                     // non-empty retry queue was just observed
-                    self.retry.as_mut().unwrap().queue.remove(0).1
+                    self.retry.as_mut().and_then(|rs| rs.queue.pop())
+                        .unwrap()
                 } else {
-                    let r = workload[next_arrival].clone();
-                    next_arrival += 1;
-                    r
+                    // slos-lint: allow(p1) -- wl_due implies a buffered
+                    // arrival in the lookahead
+                    source.take().unwrap()
                 };
                 self.admit_arrival(req, now);
             }
+            // In-flight high-water mark: admission is the only point
+            // where residency grows.
+            self.peak_inflight = self
+                .peak_inflight
+                .max(self.delivered - finished - self.shed);
 
             // Deadline-expiry sweep (PR-8): before the replica about to
             // form a batch spends tokens, cancel the standard-tier work
@@ -415,8 +601,19 @@ impl Router {
                 }
             }
 
+            let before = self.replicas[r].finished;
             if self.replicas[r].step() {
-                finished = self.replicas.iter().map(|h| h.finished).sum();
+                // Completions only happen on the stepped replica, so the
+                // delta replaces the old O(replicas) re-sum.
+                finished += self.replicas[r].finished - before;
+                self.push_clock(r);
+                // Fold mode: evict and fold what just finished, so the
+                // pool's footprint stays O(in-flight).
+                if let Some(acc) = fold.as_mut() {
+                    for req in self.replicas[r].take_finished() {
+                        acc.fold(&req);
+                    }
+                }
             } else {
                 // Idle: jump to the next interesting instant. An
                 // arrival is only an event if someone could route it —
@@ -424,39 +621,61 @@ impl Router {
                 // the clock forward 1e-6 at a time; instead jump to the
                 // next live clock (e.g. a respawn's `ready_at`).
                 let mut next = f64::INFINITY;
-                if routable && next_arrival < total {
-                    next = next.min(workload[next_arrival].arrival);
-                }
                 if routable {
+                    if let Some(t) = source.peek_arrival() {
+                        next = next.min(t);
+                    }
                     // A parked re-arrival is a timed event too: without
                     // this the loop would break with retries stranded.
-                    if let Some(&(t, _)) =
-                        self.retry.as_ref().and_then(|rs| rs.queue.first())
+                    if let Some(t) =
+                        self.retry.as_ref().and_then(|rs| rs.queue.peek_time())
                     {
                         next = next.min(t);
                     }
                 }
-                for (j, h) in self.replicas.iter().enumerate() {
-                    if j != r && h.is_live() && h.clock > now {
-                        next = next.min(h.clock);
+                // The queue's valid minimum (r's own entry is already
+                // popped) is the nearest other live clock. Peers parked
+                // *exactly at* `now` are no timed event ahead but may
+                // still hold work — set them aside, then restore them.
+                let mut parked: Vec<ClockKey> = Vec::new();
+                while let Some(&Reverse(key)) = self.clock_queue.peek() {
+                    let h = &self.replicas[key.index];
+                    if !h.is_live()
+                        || h.clock.to_bits() != key.clock_bits
+                        || key.index == r
+                    {
+                        self.clock_queue.pop();
+                        continue;
                     }
+                    if h.clock > now {
+                        next = next.min(h.clock);
+                        break;
+                    }
+                    self.clock_queue.pop();
+                    parked.push(key);
+                }
+                // All other live clocks sit in [now, ∞): a non-finite
+                // `next` means every one of them equals `now`, i.e. the
+                // parked set *is* the old full `j != r` work scan.
+                let any_work = parked
+                    .iter()
+                    .any(|k| self.replicas[k.index].has_work());
+                for key in parked {
+                    self.clock_queue.push(Reverse(key));
                 }
                 if !next.is_finite() {
                     // No timed event ahead — but another replica at an
                     // equal clock may still hold work (e.g. a request we
                     // just re-routed). Step aside instead of halting.
-                    let any_work = self
-                        .replicas
-                        .iter()
-                        .enumerate()
-                        .any(|(j, h)| j != r && h.is_live() && h.has_work());
                     if any_work {
                         self.replicas[r].clock = now + 0.01;
+                        self.push_clock(r);
                         continue;
                     }
                     break; // nothing will ever happen again
                 }
                 self.replicas[r].clock = next.max(now + 1e-6);
+                self.push_clock(r);
             }
 
             self.reroute_declined(r);
@@ -487,18 +706,30 @@ impl Router {
 
             if self.autoscaler.is_some() {
                 self.autoscale(now);
-                let live =
-                    self.replicas.iter().filter(|h| h.is_live()).count();
-                self.peak_replicas = self.peak_replicas.max(live);
+                self.peak_replicas =
+                    self.peak_replicas.max(self.live_count());
             }
         }
         // Deliver-or-report: any exit path that leaves arrivals
         // undelivered (the safety horizon, a dead pool) must still hand
         // them to the result as unfinished requests — silently dropping
         // them would shrink the attainment denominator, inflating every
-        // metric collected from a truncated run.
-        let undelivered = workload.split_off(next_arrival);
-        self.finish(undelivered)
+        // metric collected from a truncated run. Fold mode folds the
+        // remainder straight into the accumulator (never materialized).
+        let mut undelivered: Vec<Request> = Vec::new();
+        match fold.as_mut() {
+            Some(acc) => {
+                while let Some(req) = source.take() {
+                    acc.fold(&req);
+                }
+            }
+            None => {
+                while let Some(req) = source.take() {
+                    undelivered.push(req);
+                }
+            }
+        }
+        self.finish(undelivered, fold)
     }
 
     /// Would every Active replica's feasibility probe refuse `req` right
@@ -557,6 +788,7 @@ impl Router {
                         .route(&req, &self.replicas, self.rr_next);
                     self.rr_next += 1;
                     self.degraded += 1;
+                    self.delivered += 1;
                     self.replicas[dest].deliver_degraded(req);
                     return;
                 }
@@ -565,6 +797,7 @@ impl Router {
         }
         let dest = self.cfg.policy.route(&req, &self.replicas, self.rr_next);
         self.rr_next += 1;
+        self.delivered += 1;
         self.replicas[dest].deliver(req);
     }
 
@@ -590,13 +823,7 @@ impl Router {
                 // re-enters the door as a fresh arrival at `t` (its
                 // deadline re-anchors there on delivery).
                 req.arrival = t;
-                // Sorted insert by (time, id): times are non-negative,
-                // so the bit order equals the numeric order.
-                let key = (t.to_bits(), req.id);
-                let pos = rs.queue.partition_point(|(qt, qr)| {
-                    (qt.to_bits(), qr.id) < key
-                });
-                rs.queue.insert(pos, (t, req));
+                rs.queue.push(t, req);
                 self.retries += 1;
                 return;
             }
@@ -679,15 +906,7 @@ impl Router {
         if !self.replicas[r].has_work() {
             self.replicas[r].finish_drain(now);
             self.event(now, ScaleKind::Drained, r);
-            // Probe-cache capacity follows the pool in *both*
-            // directions: without the re-scale here, every survivor of
-            // a warm-down would keep the burst-sized cap forever.
-            let live =
-                self.replicas.iter().filter(|h| h.is_live()).count();
-            let cap = scaled_probe_cache_cap(live);
-            for h in &mut self.replicas {
-                h.set_probe_cache_cap(cap);
-            }
+            self.rescale_probe_caches();
         }
     }
 
@@ -754,16 +973,7 @@ impl Router {
             if tripped {
                 self.event(now, ScaleKind::Quarantined, j);
             }
-            let (mut active, mut warming, mut draining) = (0usize, 0, 0);
-            for h in &self.replicas {
-                match h.lifecycle {
-                    ReplicaState::Active => active += 1,
-                    ReplicaState::Warming => warming += 1,
-                    ReplicaState::Draining => draining += 1,
-                    ReplicaState::Drained | ReplicaState::Failed => {}
-                }
-            }
-            let counts = PoolCounts { active, warming, draining };
+            let counts = self.pool_counts();
             // slos-lint: allow(p1) -- crash() runs under elastic mode only
             let a = self.autoscaler.as_ref().unwrap();
             // A crash is not a load signal to deliberate over — the
@@ -787,6 +997,9 @@ impl Router {
                     self.cfg.overrides.get(respawn_slot), now, warmup);
                 h.slot = respawn_slot;
                 self.replicas.push(h);
+                // The respawn's parked `ready_at` clock enters the
+                // indexed event queue so the loop can select it.
+                self.push_clock(id);
                 self.event(now, ScaleKind::Respawned, id);
             }
         }
@@ -800,27 +1013,13 @@ impl Router {
                 self.crash_requeued += 1;
             }
         }
-        // Probe-cache capacity follows the live pool in both directions.
-        let live = self.replicas.iter().filter(|h| h.is_live()).count();
-        let cap = scaled_probe_cache_cap(live.max(1));
-        for h in &mut self.replicas {
-            h.set_probe_cache_cap(cap);
-        }
+        self.rescale_probe_caches();
     }
 
     /// One autoscaler tick at pool time `now`: read the pool signal,
     /// apply at most one scaling action.
     fn autoscale(&mut self, now: f64) {
-        let (mut active, mut warming, mut draining) = (0usize, 0, 0);
-        for h in &self.replicas {
-            match h.lifecycle {
-                ReplicaState::Active => active += 1,
-                ReplicaState::Warming => warming += 1,
-                ReplicaState::Draining => draining += 1,
-                ReplicaState::Drained | ReplicaState::Failed => {}
-            }
-        }
-        let counts = PoolCounts { active, warming, draining };
+        let counts = self.pool_counts();
         // The backlog scan is O(requests); hand it to the controller
         // lazily — only the warm-down branch ever pays for it.
         let replicas = &self.replicas;
@@ -863,13 +1062,10 @@ impl Router {
                 self.replicas.push(ReplicaHandle::warming(
                     id, &self.scenario, self.cfg.features,
                     self.cfg.overrides.get(id), now, warmup));
-                // Probe-cache capacity follows the pool size.
-                let live =
-                    self.replicas.iter().filter(|h| h.is_live()).count();
-                let cap = scaled_probe_cache_cap(live);
-                for h in &mut self.replicas {
-                    h.set_probe_cache_cap(cap);
-                }
+                // The spawn's parked `ready_at` clock enters the
+                // indexed event queue so the loop can select it.
+                self.push_clock(id);
+                self.rescale_probe_caches();
                 self.event(now, ScaleKind::SpawnWarming, id);
             }
             ScaleDecision::Down => {
@@ -956,7 +1152,15 @@ impl Router {
         }
     }
 
-    fn finish(self, undelivered: Vec<Request>) -> MultiReplicaResult {
+    /// The deliver-or-report exit shared by both modes. Retain mode
+    /// (`fold: None`) collects every request and runs [`collect`] over
+    /// the id-sorted vec; fold mode folds the leftovers — unfinished
+    /// pool residents, undelivered/shed/turned-away/stranded requests,
+    /// all O(pending) since finished work was evicted each round — into
+    /// the accumulator and finalizes it, which yields bit-identical
+    /// metrics over the identical request multiset.
+    fn finish(self, undelivered: Vec<Request>,
+              fold: Option<MetricsAccum>) -> MultiReplicaResult {
         let Router {
             replicas,
             rerouted,
@@ -974,6 +1178,7 @@ impl Router {
             rejected,
             retries,
             retry_gave_up,
+            peak_inflight,
             shed_requests,
             turned_away,
             ..
@@ -1000,7 +1205,7 @@ impl Router {
         // Re-arrivals still parked in the retry queue when the run ends
         // are reported unfinished, like any other undelivered arrival.
         let stranded: Vec<Request> = retry
-            .map(|rs| rs.queue.into_iter().map(|(_, r)| r).collect())
+            .map(|rs| rs.queue.into_requests())
             .unwrap_or_default();
         let mut requests: Vec<Request> = replicas
             .into_iter()
@@ -1012,7 +1217,16 @@ impl Router {
             .chain(stranded)
             .collect();
         requests.sort_by_key(|r| r.id);
-        let metrics = collect(&requests, span);
+        let metrics = match fold {
+            None => collect(&requests, span),
+            Some(mut acc) => {
+                for r in &requests {
+                    acc.fold(r);
+                }
+                requests = Vec::new();
+                acc.finish(span)
+            }
+        };
         MultiReplicaResult {
             requests,
             metrics,
@@ -1033,6 +1247,7 @@ impl Router {
             rejected,
             retries,
             retry_gave_up,
+            peak_inflight,
         }
     }
 }
@@ -1042,6 +1257,22 @@ impl Router {
 pub fn run_multi_replica(workload: Vec<Request>, cfg: &ScenarioConfig,
                          rcfg: &RouterConfig) -> MultiReplicaResult {
     Router::new(cfg, rcfg).run(workload)
+}
+
+/// Serve a lazy arrival-ordered request source in fold mode (ISSUE 9):
+/// O(in-flight) resident memory, metrics bit-identical to
+/// [`run_multi_replica`] over the collected source, `requests` empty.
+/// `span_hint` seeds the safety horizon (use the expected trace span,
+/// e.g. `n / rate`; an undershoot only risks the horizon exit, which
+/// still deliver-or-reports).
+pub fn run_multi_replica_stream<I>(source: I, span_hint: f64,
+                                   cfg: &ScenarioConfig,
+                                   rcfg: &RouterConfig)
+                                   -> MultiReplicaResult
+where
+    I: ExactSizeIterator<Item = Request>,
+{
+    Router::new(cfg, rcfg).run_stream(source, span_hint)
 }
 
 #[cfg(test)]
@@ -1514,14 +1745,18 @@ mod tests {
         router.reject(r, 1.0);
         assert_eq!((router.rejected, router.retries, router.retry_gave_up),
                    (1, 1, 0));
-        let (t1, r2) = router.retry.as_mut().unwrap().queue.remove(0);
+        let rs = router.retry.as_mut().unwrap();
+        let t1 = rs.queue.peek_time().unwrap();
+        let r2 = rs.queue.pop().unwrap();
         assert!(t1 > 1.0, "re-arrival must lie strictly ahead");
         assert_eq!(r2.retries, 1);
         assert_eq!(r2.arrival.to_bits(), t1.to_bits(),
                    "the re-arrival restarts the SLO clock");
         // Second rejection still schedules (attempt 2 == cap) ...
         router.reject(r2, t1);
-        let (t2, r3) = router.retry.as_mut().unwrap().queue.remove(0);
+        let rs = router.retry.as_mut().unwrap();
+        let t2 = rs.queue.peek_time().unwrap();
+        let r3 = rs.queue.pop().unwrap();
         assert_eq!(r3.retries, 2);
         assert!(t2 > t1);
         // ... the third exhausts the attempt cap and gives up.

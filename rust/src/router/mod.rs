@@ -150,7 +150,8 @@ pub mod policy;
 pub mod replica;
 
 pub use autoscaler::{Autoscaler, ScaleDecision, ScaleEvent, ScaleKind};
-pub use balancer::{run_multi_replica, MultiReplicaResult, Router};
+pub use balancer::{run_multi_replica, run_multi_replica_stream,
+                   MultiReplicaResult, Router};
 pub use chaos::FaultPlan;
 pub use policy::RoutePolicy;
 pub use replica::{FeasibilityProbe, ReplicaHandle, ReplicaState};

@@ -414,6 +414,24 @@ impl ReplicaHandle {
         Some(r)
     }
 
+    /// Drain the completion log (fold-mode eviction, ISSUE 9): remove
+    /// and return every request that finished since the last drain, in
+    /// completion order. Removing a finished request is
+    /// admission-demand-neutral — it holds no KV, sits in no queue, and
+    /// admission never reads it — so the probe-cache epoch stays put.
+    /// Retain-mode runs never call this and keep every request in the
+    /// state map, exactly as before.
+    pub fn take_finished(&mut self) -> Vec<Request> {
+        let ids = std::mem::take(&mut self.state.finished_log);
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            if let Some(r) = self.state.requests.remove(&id) {
+                out.push(r);
+            }
+        }
+        out
+    }
+
     pub fn has_work(&self) -> bool {
         !self.state.pending.is_empty()
             || !self.state.running.is_empty()

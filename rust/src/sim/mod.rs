@@ -32,6 +32,11 @@ pub struct ServerState {
     pub speculative: bool,
     /// Execution-time jitter scale (see `ScenarioConfig::exec_noise`).
     pub exec_noise: f64,
+    /// Ids completed since the last drain, in completion order — the
+    /// fold-mode router eviction (`ReplicaHandle::take_finished`,
+    /// ISSUE 9) consumes this; retain-mode runs just let it grow (one
+    /// id per completion, negligible next to the retained requests).
+    pub finished_log: Vec<RequestId>,
     /// Dedicated jitter stream (deterministic per seed, shared by the
     /// single-replica and router drivers so their runs agree).
     noise_rng: Rng,
@@ -50,6 +55,7 @@ impl ServerState {
             max_spec_len: cfg.max_spec_len,
             speculative: cfg.speculative,
             exec_noise: cfg.exec_noise,
+            finished_log: Vec::new(),
             noise_rng: Rng::new(cfg.seed ^ 0x0153_A0F7),
         }
     }
@@ -282,6 +288,7 @@ pub fn apply_batch(batch: &Batch, now: f64, state: &mut ServerState,
             state.pending.retain(|&x| x != id);
             state.running.retain(|&x| x != id);
             state.best_effort.retain(|&x| x != id);
+            state.finished_log.push(id);
             policy.on_finished(id);
         }
     }

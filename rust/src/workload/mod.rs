@@ -1,13 +1,17 @@
 //! Workload synthesis substrate: deterministic RNG, Azure-like arrival
-//! traces (Fig. 8), and per-scenario request generators (Tab. 1/2/4).
+//! traces (Fig. 8), per-scenario request generators (Tab. 1/2/4), and
+//! the pull-based streaming generator (ISSUE 9) that yields the same
+//! bytes one request at a time.
 
 pub mod retry;
 pub mod rng;
 pub mod scenarios;
+pub mod stream;
 pub mod traces;
 
-pub use retry::backoff_delay;
+pub use retry::{backoff_delay, RetryQueue};
 pub use rng::Rng;
 pub use scenarios::{build_stages, generate, stats, WorkloadStats};
+pub use stream::{stream, RequestStream};
 pub use traces::{burst_window, compress_middle_third, count_cv,
-                 ArrivalProcess};
+                 ArrivalIter, ArrivalProcess};

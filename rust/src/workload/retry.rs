@@ -15,8 +15,11 @@
 //! client ([`RetryConfig::naive`]) waits only the minimum re-arrival
 //! epsilon — the storm baseline `figure overload` compares against.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::config::RetryConfig;
-use crate::coordinator::request::RequestId;
+use crate::coordinator::request::{Request, RequestId};
 use crate::workload::rng::Rng;
 
 /// Smallest re-arrival delay (seconds). Strictly positive so a rejection
@@ -62,6 +65,88 @@ fn unit_hash(seed: u64, id: RequestId, attempt: u32) -> f64 {
         ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
     Rng::new(mixed).f64()
+}
+
+/// One scheduled re-arrival. Ordering is *total and explicit* (lint rule
+/// d4): re-arrival time as raw bits first, request id as the tie-break.
+/// Re-arrival times are non-negative finite, so `u64` bit order equals
+/// `f64` order; ids are unique within the queue, so equal-time entries
+/// pop in id order — exactly the order the PR-8 sorted-`Vec` kept them
+/// in, which keeps armed-retry runs bit-identical across the swap.
+#[derive(Debug, Clone)]
+struct RetryEntry {
+    t_bits: u64,
+    id: RequestId,
+    req: Request,
+}
+
+impl PartialEq for RetryEntry {
+    fn eq(&self, other: &Self) -> bool {
+        (self.t_bits, self.id) == (other.t_bits, other.id)
+    }
+}
+
+impl Eq for RetryEntry {}
+
+impl PartialOrd for RetryEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RetryEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_bits, self.id).cmp(&(other.t_bits, other.id))
+    }
+}
+
+/// Deterministic min-queue of scheduled re-arrivals: O(log n) push/pop
+/// (the PR-8 implementation paid an O(n) `Vec` shift per re-arrival,
+/// which a retry storm turns quadratic). Pop order is (time, id)
+/// ascending — a deterministic total order.
+#[derive(Debug, Clone, Default)]
+pub struct RetryQueue {
+    heap: BinaryHeap<Reverse<RetryEntry>>,
+}
+
+impl RetryQueue {
+    pub fn new() -> Self {
+        RetryQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `req` to re-arrive at time `t` (non-negative finite).
+    pub fn push(&mut self, t: f64, req: Request) {
+        debug_assert!(t.is_finite() && t >= 0.0);
+        let entry = RetryEntry { t_bits: t.to_bits(), id: req.id, req };
+        self.heap.push(Reverse(entry));
+    }
+
+    /// Earliest scheduled re-arrival time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| f64::from_bits(e.t_bits))
+    }
+
+    /// Remove and return the earliest re-arrival.
+    pub fn pop(&mut self) -> Option<Request> {
+        self.heap.pop().map(|Reverse(e)| e.req)
+    }
+
+    /// Drain the queue into its requests (end-of-run stranded-work
+    /// accounting), in deterministic (time, id) order.
+    pub fn into_requests(self) -> Vec<Request> {
+        let mut entries: Vec<RetryEntry> =
+            self.heap.into_iter().map(|Reverse(e)| e).collect();
+        entries.sort();
+        entries.into_iter().map(|e| e.req).collect()
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +219,62 @@ mod tests {
             let d = backoff_delay(&c, 0, 9, attempt, Some(5.0));
             assert_eq!(d, MIN_DELAY, "naive ignores schedule and hints");
         }
+    }
+
+    fn req(id: u64) -> Request {
+        use crate::config::{SloSpec, SloTier};
+        let slo = SloSpec::from_tiers(SloTier::Loose, SloTier::Loose);
+        Request::simple(id, 0.0, 10, 2, slo)
+    }
+
+    #[test]
+    fn retry_queue_pops_in_time_then_id_order() {
+        let mut q = RetryQueue::new();
+        q.push(3.0, req(1));
+        q.push(1.0, req(2));
+        q.push(2.0, req(3));
+        q.push(1.0, req(0)); // same time as id 2: id breaks the tie
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek_time(), Some(1.0));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(order, vec![0, 2, 3, 1]);
+        assert!(q.is_empty() && q.peek_time().is_none());
+    }
+
+    #[test]
+    fn retry_queue_matches_the_sorted_vec_it_replaced() {
+        // Differential check against the PR-8 structure: partition_point
+        // insert on (t_bits, id), pop from the front.
+        let mut q = RetryQueue::new();
+        let mut vec: Vec<(f64, Request)> = Vec::new();
+        let mut rng = Rng::new(11);
+        for id in 0..200u64 {
+            let t = rng.f64() * 4.0;
+            q.push(t, req(id));
+            let key = (t.to_bits(), id);
+            let pos = vec.partition_point(|(qt, qr)| {
+                (qt.to_bits(), qr.id) < key
+            });
+            vec.insert(pos, (t, req(id)));
+        }
+        for (t, r) in vec {
+            assert_eq!(q.peek_time().map(f64::to_bits), Some(t.to_bits()));
+            let popped = q.pop().unwrap();
+            assert_eq!(popped.id, r.id);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn retry_queue_drains_stranded_work_in_order() {
+        let mut q = RetryQueue::new();
+        q.push(2.0, req(5));
+        q.push(1.0, req(9));
+        q.push(2.0, req(3));
+        let ids: Vec<u64> =
+            q.into_requests().into_iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![9, 3, 5]);
     }
 }

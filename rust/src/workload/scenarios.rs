@@ -5,7 +5,6 @@
 use crate::config::{LengthStats, Scenario, ScenarioConfig, SloSpec, SloTier};
 use crate::coordinator::request::{Request, Stage, StageKind};
 use crate::workload::rng::Rng;
-use crate::workload::traces::ArrivalProcess;
 
 /// Sample a token length from Tab. 4 stats (log-normal moment match,
 /// clamped to [4, ~1.6 * P99] like the dataset truncation).
@@ -97,27 +96,12 @@ pub fn build_stages(scenario: Scenario, rng: &mut Rng) -> Vec<Stage> {
 }
 
 /// Generate the full workload for a config: arrival times from the
-/// scenario's Azure-like process, stages per request.
+/// scenario's Azure-like process (or the `--arrivals` override), stages
+/// per request. Eager spelling of the pull-based generator — literally
+/// `stream(config).collect()`, so the streamed and materialized paths
+/// can never diverge (pinned by `workload::stream` tests).
 pub fn generate(config: &ScenarioConfig) -> Vec<Request> {
-    let mut rng = Rng::new(config.seed);
-    let arrivals = ArrivalProcess::new(
-        config.scenario.arrival_pattern(),
-        config.rate,
-    )
-    .generate(config.num_requests, &mut rng);
-
-    arrivals
-        .into_iter()
-        .enumerate()
-        .map(|(i, t)| {
-            let concrete = match config.scenario {
-                Scenario::Mixed => [Scenario::ChatBot, Scenario::Coder,
-                                    Scenario::Summarizer][rng.below(3)],
-                s => s,
-            };
-            Request::new(i as u64, t, build_stages(concrete, &mut rng))
-        })
-        .collect()
+    crate::workload::stream::stream(config).collect()
 }
 
 /// Summary statistics of a generated workload (for `repro trace --stats`

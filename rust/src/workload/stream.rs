@@ -1,0 +1,264 @@
+//! Pull-based workload generation (ISSUE 9): requests materialize one at
+//! a time from an arrival stream plus per-request forked RNG streams, so
+//! a million-request trace costs O(1) generator memory instead of a
+//! pre-built `Vec<Request>`.
+//!
+//! Determinism contract: every random attribute of request `i` comes
+//! from `Rng::new(fork(seed, salt, i))` — a pure function of the config
+//! seed and the request index — and the arrival clock runs on its own
+//! forked stream. The streamed sequence is therefore bit-identical at
+//! any prefix regardless of how far the consumer pulls, and the eager
+//! [`super::generate`](crate::workload::generate) is literally
+//! `stream(cfg).collect()`. (This PR re-based the eager generator onto
+//! the stream: pre-PR-9 workload bytes used one sequential RNG and are
+//! not comparable — the era break is documented in PERF.md.)
+//!
+//! [`compress_middle_third`](crate::workload::compress_middle_third) and
+//! [`burst_window`](crate::workload::burst_window) have streaming
+//! equivalents here: compression is an on-the-fly arrival rewrite
+//! ([`RequestStream::with_compression`]), and the window marks are
+//! recorded as the `n/3` and `2n/3` requests pass by.
+
+use crate::config::{Scenario, ScenarioConfig};
+use crate::coordinator::request::Request;
+use crate::workload::rng::Rng;
+use crate::workload::scenarios::build_stages;
+use crate::workload::traces::{ArrivalIter, ArrivalProcess};
+
+/// Stream-fork salts: one independent RNG stream per attribute family
+/// (same mixing idiom as `workload::retry::unit_hash`).
+const ARRIVAL_SALT: u64 = 0xA551;
+const ATTR_SALT: u64 = 0xA77B;
+
+/// Fork an independent seed from `(seed, salt, i)` — a pure function,
+/// so stream position never leaks between attribute families.
+fn fork(seed: u64, salt: u64, i: u64) -> u64 {
+    seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ i.wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+}
+
+/// Middle-third compression as a stream transform (mirrors the eager
+/// [`compress_middle_third`](crate::workload::compress_middle_third)
+/// float-for-float: `t0` is captured when request `n/3` passes, and
+/// arrivals in `[n/3, 2n/3)` are rewritten to `t0 + (t - t0) / factor`).
+#[derive(Debug, Clone)]
+struct Compression {
+    factor: f64,
+    t0: Option<f64>,
+}
+
+/// Lazy request generator: `Iterator<Item = Request>` over exactly
+/// `cfg.num_requests` requests, in arrival order, O(1) memory.
+#[derive(Debug, Clone)]
+pub struct RequestStream {
+    scenario: Scenario,
+    seed: u64,
+    n: usize,
+    emitted: usize,
+    arrivals: ArrivalIter,
+    compress: Option<Compression>,
+    /// Burst-window marks: the (possibly compressed) arrival times of
+    /// requests `n/3` and `2n/3`, recorded as they pass.
+    mark_lo: Option<f64>,
+    mark_hi: Option<f64>,
+}
+
+/// Build the lazy request stream for a config: arrival times from the
+/// scenario's Azure-like process (or the `--arrivals` override including
+/// the diurnal curve), stages per request from forked RNG streams.
+pub fn stream(cfg: &ScenarioConfig) -> RequestStream {
+    let (pattern, curve) = match cfg.arrival {
+        Some(spec) => (spec.pattern, spec.curve),
+        None => (cfg.scenario.arrival_pattern(), None),
+    };
+    let mut proc = ArrivalProcess::new(pattern, cfg.rate);
+    if let Some(c) = curve {
+        proc = proc.with_curve(c);
+    }
+    RequestStream {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        n: cfg.num_requests,
+        emitted: 0,
+        arrivals: proc.stream(Rng::new(fork(cfg.seed, ARRIVAL_SALT, 0))),
+        compress: None,
+        mark_lo: None,
+        mark_hi: None,
+    }
+}
+
+impl RequestStream {
+    /// Compress the middle third of the stream's arrivals by `factor`
+    /// (the §4.2 "bursty X" shaping) without materializing the trace.
+    pub fn with_compression(mut self, factor: f64) -> Self {
+        assert!(factor >= 1.0);
+        self.compress = Some(Compression { factor, t0: None });
+        self
+    }
+
+    /// `[t0, t1)` bounds of the (possibly compressed) middle third —
+    /// the eager [`burst_window`](crate::workload::burst_window) as a
+    /// stream observation. Valid once the `2n/3`-th request has been
+    /// pulled; `(0, inf)` before that, and for n < 3 (mirroring eager).
+    pub fn burst_window(&self) -> (f64, f64) {
+        if self.n < 3 {
+            return (0.0, f64::INFINITY);
+        }
+        match (self.mark_lo, self.mark_hi) {
+            (Some(lo), Some(hi)) => (lo, hi),
+            _ => (0.0, f64::INFINITY),
+        }
+    }
+}
+
+impl Iterator for RequestStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.emitted >= self.n {
+            return None;
+        }
+        let i = self.emitted;
+        let mut arrival = self.arrivals.next_arrival();
+        if let Some(c) = self.compress.as_mut() {
+            let (a, b) = (self.n / 3, 2 * self.n / 3);
+            if self.n >= 3 && i >= a && i < b {
+                let t0 = *c.t0.get_or_insert(arrival);
+                arrival = t0 + (arrival - t0) / c.factor;
+            }
+        }
+        if i == self.n / 3 {
+            self.mark_lo = Some(arrival);
+        }
+        if i == 2 * self.n / 3 {
+            self.mark_hi = Some(arrival);
+        }
+        let mut rng = Rng::new(fork(self.seed, ATTR_SALT, i as u64));
+        let concrete = match self.scenario {
+            Scenario::Mixed => [Scenario::ChatBot, Scenario::Coder,
+                                Scenario::Summarizer][rng.below(3)],
+            s => s,
+        };
+        self.emitted += 1;
+        Some(Request::new(i as u64, arrival, build_stages(concrete, &mut rng)))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rest = self.n - self.emitted;
+        (rest, Some(rest))
+    }
+}
+
+impl ExactSizeIterator for RequestStream {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{burst_window, compress_middle_third, generate};
+
+    fn cfg(n: usize) -> ScenarioConfig {
+        ScenarioConfig::new(Scenario::Mixed)
+            .with_rate(2.0)
+            .with_requests(n)
+            .with_seed(7)
+    }
+
+    fn same_request(a: &Request, b: &Request) -> bool {
+        a.id == b.id
+            && a.arrival.to_bits() == b.arrival.to_bits()
+            && a.stages.len() == b.stages.len()
+            && a.stages.iter().zip(&b.stages).all(|(x, y)| {
+                x.prefill_tokens == y.prefill_tokens
+                    && x.decode_tokens == y.decode_tokens
+                    && x.slo.tpot.to_bits() == y.slo.tpot.to_bits()
+                    && x.slo.ttft_slowdown.to_bits()
+                        == y.slo.ttft_slowdown.to_bits()
+            })
+    }
+
+    #[test]
+    fn stream_is_bit_identical_to_eager_generate() {
+        let c = cfg(200);
+        let eager = generate(&c);
+        let streamed: Vec<Request> = stream(&c).collect();
+        assert_eq!(eager.len(), streamed.len());
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert!(same_request(a, b), "request {} diverged", a.id);
+        }
+    }
+
+    #[test]
+    fn any_prefix_is_bit_identical_regardless_of_pull_depth() {
+        // The forked-stream property: pulling 30 requests yields the
+        // same bytes as the first 30 of a 500-request run of the same
+        // seed — position in the stream leaks nothing.
+        let long: Vec<Request> = stream(&cfg(500)).collect();
+        let short: Vec<Request> = stream(&cfg(500)).take(30).collect();
+        for (a, b) in long.iter().take(30).zip(&short) {
+            assert!(same_request(a, b), "prefix diverged at {}", a.id);
+        }
+    }
+
+    #[test]
+    fn streamed_compression_matches_eager_transform() {
+        let c = cfg(90);
+        let mut eager = generate(&c);
+        compress_middle_third(&mut eager, 4.0);
+        let streamed: Vec<Request> =
+            stream(&c).with_compression(4.0).collect();
+        for (a, b) in eager.iter().zip(&streamed) {
+            assert!(same_request(a, b),
+                    "compressed request {} diverged", a.id);
+        }
+    }
+
+    #[test]
+    fn streamed_burst_window_matches_eager() {
+        let c = cfg(90);
+        let mut eager = generate(&c);
+        compress_middle_third(&mut eager, 4.0);
+        let want = burst_window(&eager);
+        let mut s = stream(&c).with_compression(4.0);
+        // Before the marks pass, the window is the permissive default.
+        assert_eq!(s.burst_window(), (0.0, f64::INFINITY));
+        let _consumed: Vec<Request> = s.by_ref().collect();
+        let got = s.burst_window();
+        assert_eq!(got.0.to_bits(), want.0.to_bits());
+        assert_eq!(got.1.to_bits(), want.1.to_bits());
+    }
+
+    #[test]
+    fn stream_len_is_exact() {
+        let mut s = stream(&cfg(40));
+        assert_eq!(s.len(), 40);
+        s.next();
+        assert_eq!(s.len(), 39);
+        assert_eq!(s.count(), 39);
+    }
+
+    #[test]
+    fn honors_arrival_spec_override() {
+        use crate::config::{ArrivalPattern, ArrivalSpec, RateCurve};
+        let mut c = cfg(300);
+        c.arrival = Some(ArrivalSpec {
+            pattern: ArrivalPattern::Pareto { alpha: 1.5 },
+            curve: Some(RateCurve {
+                period: 40.0,
+                amplitude: 0.5,
+                phase: 0.0,
+            }),
+        });
+        let a: Vec<f64> = stream(&c).map(|r| r.arrival).collect();
+        let b: Vec<f64> = stream(&c).map(|r| r.arrival).collect();
+        assert_eq!(a, b, "override must stay seed-deterministic");
+        // A heavy-tailed override must visibly change the trace shape
+        // vs the scenario default (Mixed = Stable/Poisson).
+        let default_cv = {
+            let d: Vec<f64> = stream(&cfg(300)).map(|r| r.arrival).collect();
+            crate::workload::count_cv(&d, 1.0)
+        };
+        let pareto_cv = crate::workload::count_cv(&a, 1.0);
+        assert!(pareto_cv > default_cv,
+                "pareto {pareto_cv:.2} <= poisson {default_cv:.2}");
+    }
+}

@@ -1,8 +1,16 @@
 //! Arrival-process synthesis matching the Azure LLM inference traces'
 //! characteristics (paper Fig. 8): Chatting is stable (near-Poisson),
 //! Coding is bursty (on/off modulated Poisson with pronounced spikes).
+//! Heavy-tailed renewal processes (log-normal, Pareto) and a diurnal
+//! rate curve extend the palette for long streamed traces.
+//!
+//! The process is a *stepper*: [`ArrivalState`] carries everything
+//! between arrivals, so the same code drives both the eager
+//! [`ArrivalProcess::generate`] and the infinite [`ArrivalIter`] the
+//! streaming workload path pulls from — one draw sequence, bit-identical
+//! either way.
 
-use crate::config::ArrivalPattern;
+use crate::config::{ArrivalPattern, RateCurve};
 use crate::workload::rng::Rng;
 
 /// Generator of arrival timestamps with a target long-run mean rate.
@@ -10,6 +18,7 @@ use crate::workload::rng::Rng;
 pub struct ArrivalProcess {
     pattern: ArrivalPattern,
     rate: f64,
+    curve: Option<RateCurve>,
 }
 
 /// Bursty process shape parameters (tuned so CV of per-second counts is
@@ -18,59 +27,163 @@ const BURST_MULT: f64 = 6.0; // spike rate multiplier over the base rate
 const BURST_FRACTION: f64 = 0.15; // fraction of time spent in spikes
 const MEAN_SPIKE_SECS: f64 = 4.0;
 
+/// Mutable per-stream state of an [`ArrivalProcess`]: the clock plus the
+/// MMPP phase. Fresh state + same `Rng` reproduces the exact historical
+/// draw sequence of the pre-stepper eager generator.
+#[derive(Debug, Clone)]
+pub struct ArrivalState {
+    t: f64,
+    in_spike: bool,
+    /// MMPP phase end; drawn lazily on the first step so the first draw
+    /// of a fresh stream matches the eager generator byte for byte.
+    state_end: Option<f64>,
+}
+
+impl ArrivalState {
+    pub fn fresh() -> Self {
+        ArrivalState { t: 0.0, in_spike: false, state_end: None }
+    }
+}
+
 impl ArrivalProcess {
     pub fn new(pattern: ArrivalPattern, rate: f64) -> Self {
         assert!(rate > 0.0);
-        ArrivalProcess { pattern, rate }
+        if let ArrivalPattern::Pareto { alpha } = pattern {
+            assert!(alpha > 1.0, "pareto needs alpha > 1 for a finite mean");
+        }
+        if let ArrivalPattern::LogNormal { sigma } = pattern {
+            assert!(sigma > 0.0);
+        }
+        ArrivalProcess { pattern, rate, curve: None }
     }
 
-    /// Generate `n` arrival times starting at t=0.
-    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        match self.pattern {
-            ArrivalPattern::Stable => self.poisson(n, rng),
-            ArrivalPattern::Bursty => self.mmpp(n, rng),
+    /// Modulate the rate with a diurnal curve (Lewis–Shedler thinning:
+    /// the base process runs at the peak rate `rate * (1 + amplitude)`
+    /// and candidates are accepted with probability proportional to the
+    /// instantaneous curve value, so the long-run mean stays `rate`).
+    pub fn with_curve(mut self, curve: RateCurve) -> Self {
+        assert!(curve.period > 0.0);
+        assert!((0.0..=1.0).contains(&curve.amplitude));
+        self.curve = Some(curve);
+        self
+    }
+
+    /// The rate the *base* renewal process runs at: inflated to the
+    /// curve's peak when modulated, so thinning can only ever discard.
+    fn base_rate(&self) -> f64 {
+        match self.curve {
+            Some(c) => self.rate * (1.0 + c.amplitude),
+            None => self.rate,
         }
     }
 
-    fn poisson(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        let mut t = 0.0;
-        (0..n)
-            .map(|_| {
-                t += rng.exponential(self.rate);
-                t
-            })
-            .collect()
+    /// Advance `state` to the next arrival and return its time. One
+    /// stepper drives the eager and streaming paths alike.
+    pub fn next_arrival(&self, state: &mut ArrivalState, rng: &mut Rng)
+                        -> f64 {
+        loop {
+            let t = self.step_base(state, rng);
+            let Some(c) = self.curve else {
+                return t;
+            };
+            // Thinning acceptance: u * peak <= instantaneous modulation.
+            let modulation = 1.0
+                + c.amplitude
+                    * (std::f64::consts::TAU * (t - c.phase) / c.period).sin();
+            if rng.f64() * (1.0 + c.amplitude) <= modulation {
+                return t;
+            }
+        }
+    }
+
+    /// One arrival of the un-modulated base renewal process.
+    fn step_base(&self, st: &mut ArrivalState, rng: &mut Rng) -> f64 {
+        let rate = self.base_rate();
+        match self.pattern {
+            ArrivalPattern::Stable => {
+                st.t += rng.exponential(rate);
+                st.t
+            }
+            ArrivalPattern::Bursty => self.step_mmpp(st, rng, rate),
+            ArrivalPattern::LogNormal { sigma } => {
+                // Location solved so E[dt] = exp(mu + sigma^2/2) = 1/rate.
+                let mu = -rate.ln() - 0.5 * sigma * sigma;
+                st.t += (mu + sigma * rng.normal()).exp();
+                st.t
+            }
+            ArrivalPattern::Pareto { alpha } => {
+                // Scale solved so E[dt] = xm * alpha / (alpha - 1) = 1/rate.
+                let xm = (alpha - 1.0) / (alpha * rate);
+                // 1 - U keeps the draw in (0, 1]: no division by zero.
+                let u = 1.0 - rng.f64();
+                st.t += xm / u.powf(1.0 / alpha);
+                st.t
+            }
+        }
     }
 
     /// Two-state Markov-modulated Poisson: base state at `r_lo`, spike
     /// state at `BURST_MULT * r_lo`, chosen so the long-run mean is `rate`.
-    fn mmpp(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
-        let r_lo = self.rate
-            / ((1.0 - BURST_FRACTION) + BURST_FRACTION * BURST_MULT);
+    fn step_mmpp(&self, st: &mut ArrivalState, rng: &mut Rng, rate: f64)
+                 -> f64 {
+        let r_lo =
+            rate / ((1.0 - BURST_FRACTION) + BURST_FRACTION * BURST_MULT);
         let r_hi = BURST_MULT * r_lo;
         let mean_low_secs =
             MEAN_SPIKE_SECS * (1.0 - BURST_FRACTION) / BURST_FRACTION;
-
-        let mut out = Vec::with_capacity(n);
-        let mut t = 0.0;
-        let mut in_spike = false;
-        let mut state_end = rng.exponential(1.0 / mean_low_secs);
-        while out.len() < n {
-            let rate = if in_spike { r_hi } else { r_lo };
-            let dt = rng.exponential(rate);
-            if t + dt > state_end {
+        let mut state_end = match st.state_end {
+            Some(e) => e,
+            None => {
+                let e = rng.exponential(1.0 / mean_low_secs);
+                st.state_end = Some(e);
+                e
+            }
+        };
+        loop {
+            let r = if st.in_spike { r_hi } else { r_lo };
+            let dt = rng.exponential(r);
+            if st.t + dt > state_end {
                 // State flips before the next arrival; resample from the
                 // flip point (memorylessness makes this exact).
-                t = state_end;
-                in_spike = !in_spike;
-                let dwell = if in_spike { MEAN_SPIKE_SECS } else { mean_low_secs };
-                state_end = t + rng.exponential(1.0 / dwell);
+                st.t = state_end;
+                st.in_spike = !st.in_spike;
+                let dwell =
+                    if st.in_spike { MEAN_SPIKE_SECS } else { mean_low_secs };
+                state_end = st.t + rng.exponential(1.0 / dwell);
+                st.state_end = Some(state_end);
                 continue;
             }
-            t += dt;
-            out.push(t);
+            st.t += dt;
+            return st.t;
         }
-        out
+    }
+
+    /// Generate `n` arrival times starting at t=0.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut st = ArrivalState::fresh();
+        (0..n).map(|_| self.next_arrival(&mut st, rng)).collect()
+    }
+
+    /// Turn the process into an infinite pull-based arrival stream
+    /// owning its RNG — the streaming workload path's clock source.
+    pub fn stream(self, rng: Rng) -> ArrivalIter {
+        ArrivalIter { proc: self, state: ArrivalState::fresh(), rng }
+    }
+}
+
+/// Infinite arrival stream: an [`ArrivalProcess`] plus its state and a
+/// dedicated RNG. `next_arrival()` never ends (renewal processes have no
+/// horizon), so this is an inherent method rather than `Iterator`.
+#[derive(Debug, Clone)]
+pub struct ArrivalIter {
+    proc: ArrivalProcess,
+    state: ArrivalState,
+    rng: Rng,
+}
+
+impl ArrivalIter {
+    pub fn next_arrival(&mut self) -> f64 {
+        self.proc.next_arrival(&mut self.state, &mut self.rng)
     }
 }
 
@@ -187,11 +300,120 @@ mod tests {
     #[test]
     fn arrivals_are_sorted_and_positive() {
         let mut rng = Rng::new(3);
-        for pat in [ArrivalPattern::Stable, ArrivalPattern::Bursty] {
+        for pat in [
+            ArrivalPattern::Stable,
+            ArrivalPattern::Bursty,
+            ArrivalPattern::LogNormal { sigma: 1.2 },
+            ArrivalPattern::Pareto { alpha: 1.5 },
+        ] {
             let a = ArrivalProcess::new(pat, 1.0).generate(500, &mut rng);
             assert!(a.windows(2).all(|w| w[0] <= w[1]));
             assert!(a[0] > 0.0);
             assert_eq!(a.len(), 500);
+        }
+    }
+
+    #[test]
+    fn lognormal_mean_rate() {
+        let p =
+            ArrivalProcess::new(ArrivalPattern::LogNormal { sigma: 1.0 }, 2.0);
+        let mut rng = Rng::new(5);
+        let a = p.generate(4000, &mut rng);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 2.0).abs() / 2.0 < 0.10, "rate={rate}");
+    }
+
+    #[test]
+    fn pareto_mean_rate() {
+        // alpha = 2.5 keeps the variance finite so the sample mean
+        // converges at this n; the CV test below uses the heavy 1.5.
+        let p =
+            ArrivalProcess::new(ArrivalPattern::Pareto { alpha: 2.5 }, 2.0);
+        let mut rng = Rng::new(6);
+        let a = p.generate(4000, &mut rng);
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 2.0).abs() / 2.0 < 0.10, "rate={rate}");
+    }
+
+    #[test]
+    fn count_cv_orders_pareto_above_mmpp_above_poisson() {
+        // The ISSUE-9 burstiness ladder: heavy-tailed renewal clumps
+        // harder than the on/off MMPP, which clumps harder than Poisson.
+        let n = 6000;
+        let cv_of = |pat, seed| {
+            let mut rng = Rng::new(seed);
+            let a = ArrivalProcess::new(pat, 3.0).generate(n, &mut rng);
+            count_cv(&a, 1.0)
+        };
+        let cv_s = cv_of(ArrivalPattern::Stable, 7);
+        let cv_m = cv_of(ArrivalPattern::Bursty, 7);
+        let cv_p = cv_of(ArrivalPattern::Pareto { alpha: 1.5 }, 7);
+        assert!(cv_m > cv_s,
+                "mmpp must out-burst poisson: {cv_m:.2} vs {cv_s:.2}");
+        assert!(cv_p > cv_m,
+                "pareto must out-burst mmpp: {cv_p:.2} vs {cv_m:.2}");
+    }
+
+    #[test]
+    fn diurnal_curve_is_periodic_and_rate_preserving() {
+        let curve = RateCurve { period: 50.0, amplitude: 0.8, phase: 0.0 };
+        let p = ArrivalProcess::new(ArrivalPattern::Stable, 4.0)
+            .with_curve(curve);
+        let mut rng = Rng::new(8);
+        let a = p.generate(8000, &mut rng);
+        // Long-run mean rate unchanged by the modulation (thinning is
+        // rate-exact over whole cycles).
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 4.0).abs() / 4.0 < 0.10, "rate={rate}");
+        // Periodicity: the sin-positive half of each cycle must hold
+        // clearly more arrivals than the sin-negative half (the exact
+        // ratio at amplitude 0.8 is (1 + 0.8*2/pi)/(1 - 0.8*2/pi) ~ 3).
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &a {
+            if t % 50.0 < 25.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > 2 * trough, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn new_arrival_processes_are_seed_deterministic() {
+        for pat in [
+            ArrivalPattern::LogNormal { sigma: 1.2 },
+            ArrivalPattern::Pareto { alpha: 1.5 },
+        ] {
+            let gen = |seed| {
+                let p = ArrivalProcess::new(pat, 2.0).with_curve(RateCurve {
+                    period: 30.0,
+                    amplitude: 0.5,
+                    phase: 5.0,
+                });
+                p.generate(300, &mut Rng::new(seed))
+            };
+            let (a, b) = (gen(42), gen(42));
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "same seed must be bit-identical");
+            assert_ne!(a, gen(43), "different seed must differ");
+        }
+    }
+
+    #[test]
+    fn stepper_stream_matches_eager_generate() {
+        for pat in [
+            ArrivalPattern::Stable,
+            ArrivalPattern::Bursty,
+            ArrivalPattern::Pareto { alpha: 1.5 },
+        ] {
+            let eager = ArrivalProcess::new(pat, 2.0)
+                .generate(200, &mut Rng::new(9));
+            let mut it = ArrivalProcess::new(pat, 2.0).stream(Rng::new(9));
+            for (i, &t) in eager.iter().enumerate() {
+                assert_eq!(t.to_bits(), it.next_arrival().to_bits(),
+                           "arrival {i} diverged for {pat:?}");
+            }
         }
     }
 }

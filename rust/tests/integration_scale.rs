@@ -1,0 +1,118 @@
+//! ISSUE-9 scale-path integration tests: the streaming fold-mode run
+//! (`run_multi_replica_stream` — lazy arrivals, per-round eviction of
+//! finished requests into a metrics accumulator) must be bit-identical
+//! to the eager retain-mode run over the collected trace, on the plain
+//! path and with the full overload/retry machinery armed; and the
+//! `peak_inflight` watermark must witness the O(pending) memory bound
+//! the fold mode exists for.
+
+use slos_serve::config::{OverloadConfig, RetryConfig, Scenario,
+                         ScenarioConfig};
+use slos_serve::router::{run_multi_replica, run_multi_replica_stream,
+                         MultiReplicaResult, RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+fn cfg(n: usize, rate: f64) -> ScenarioConfig {
+    ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(rate)
+        .with_requests(n)
+        .with_seed(42)
+}
+
+/// Every metric and counter the two modes promise to agree on,
+/// f64 fields compared bit-for-bit.
+fn assert_bit_identical(eager: &MultiReplicaResult,
+                        fold: &MultiReplicaResult) {
+    let (a, b) = (&eager.metrics, &fold.metrics);
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.attained, b.attained);
+    assert_eq!(a.best_effort, b.best_effort);
+    assert_eq!(a.ttft_p50.to_bits(), b.ttft_p50.to_bits());
+    assert_eq!(a.ttft_p99.to_bits(), b.ttft_p99.to_bits());
+    assert_eq!(a.tpot_p50.to_bits(), b.tpot_p50.to_bits());
+    assert_eq!(a.tpot_p99.to_bits(), b.tpot_p99.to_bits());
+    assert_eq!(a.span.to_bits(), b.span.to_bits());
+    assert_eq!(eager.rerouted, fold.rerouted);
+    assert_eq!(eager.migrated, fold.migrated);
+    assert_eq!(eager.per_replica_finished, fold.per_replica_finished);
+    assert_eq!(eager.replica_seconds.to_bits(),
+               fold.replica_seconds.to_bits());
+    assert_eq!(eager.peak_replicas, fold.peak_replicas);
+    assert_eq!(eager.shed, fold.shed);
+    assert_eq!(eager.degraded, fold.degraded);
+    assert_eq!(eager.rejected, fold.rejected);
+    assert_eq!(eager.retries, fold.retries);
+    assert_eq!(eager.retry_gave_up, fold.retry_gave_up);
+    assert_eq!(eager.peak_inflight, fold.peak_inflight);
+}
+
+#[test]
+fn stream_fold_run_matches_eager_retain_run() {
+    let c = cfg(400, 4.0);
+    let rcfg = RouterConfig::new(4).with_policy(RoutePolicy::RoundRobin);
+    let wl = workload::generate(&c);
+    // The eager path reads its safety-horizon hint off the trace's last
+    // arrival; feed the stream the same hint so the runs share every
+    // input bit.
+    let span_hint = wl.last().map(|r| r.arrival).unwrap_or(0.0);
+    let eager = run_multi_replica(wl, &c, &rcfg);
+    let fold =
+        run_multi_replica_stream(workload::stream(&c), span_hint, &c, &rcfg);
+    assert_bit_identical(&eager, &fold);
+    // Retain mode returns every request; fold mode folded them away.
+    assert_eq!(eager.requests.len(), 400);
+    assert!(fold.requests.is_empty(),
+            "fold mode must not retain requests");
+    assert!(eager.metrics.finished > 350, "run must mostly complete");
+}
+
+#[test]
+fn stream_fold_matches_eager_with_overload_retry_and_compression() {
+    // 2x overload on a 2-replica pool with the shed sweep, brownout
+    // ladder, and hinted-backoff retry client all armed, over the
+    // burst-compressed trace: exercises the retry re-arrival queue,
+    // shed/turned-away bookkeeping, and the streaming compression
+    // transform on the exact path fig_overload runs.
+    let c = cfg(240, 3.0);
+    let rcfg = RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_overload(OverloadConfig::default())
+        .with_retry(RetryConfig::default());
+    let mut wl = workload::generate(&c);
+    workload::compress_middle_third(&mut wl, 4.0);
+    let span_hint = wl.last().map(|r| r.arrival).unwrap_or(0.0);
+    let eager = run_multi_replica(wl, &c, &rcfg);
+    let fold = run_multi_replica_stream(
+        workload::stream(&c).with_compression(4.0), span_hint, &c, &rcfg);
+    assert_bit_identical(&eager, &fold);
+    assert!(eager.rejected + eager.shed > 0,
+            "the overload machinery must actually fire for this test \
+             to pin the retry/shed paths");
+}
+
+#[test]
+fn peak_inflight_witnesses_the_pending_bound() {
+    // Feasible load: the resident set must stay far below the trace
+    // length — this is the O(pending)-not-O(trace) memory claim the
+    // fold mode makes, in counter form. Doubling the trace must leave
+    // the watermark roughly flat (steady state), not double it.
+    let run_at = |n: usize| {
+        let c = cfg(n, 4.0);
+        let rcfg =
+            RouterConfig::new(4).with_policy(RoutePolicy::RoundRobin);
+        run_multi_replica_stream(workload::stream(&c), n as f64 / 4.0,
+                                 &c, &rcfg)
+    };
+    let small = run_at(600);
+    let large = run_at(1200);
+    assert!(small.peak_inflight > 0);
+    assert!(small.peak_inflight <= small.metrics.total);
+    assert!(large.peak_inflight * 4 < large.metrics.total,
+            "peak_inflight {} is not o(trace) at n=1200",
+            large.peak_inflight);
+    assert!(large.peak_inflight <= small.peak_inflight * 3,
+            "peak_inflight must not scale with trace length: \
+             {} at n=600 vs {} at n=1200",
+            small.peak_inflight, large.peak_inflight);
+}

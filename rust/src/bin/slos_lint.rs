@@ -3,10 +3,12 @@
 //!   cargo run --bin slos_lint             # repo root inferred
 //!   cargo run --bin slos_lint -- --root . # explicit root
 //!   cargo run --bin slos_lint -- --warns  # warns also fail (strict)
+//!   cargo run --bin slos_lint -- --json   # machine-readable report
 //!
 //! Exit status: 0 clean, 1 deny violations (or warns under --warns),
-//! 2 usage / I-O error. CI tees stdout into lint-report.txt and
-//! uploads it as an artifact; rust/tests/lint_clean.rs runs the same
+//! 2 usage / I-O error. CI tees text stdout into lint-report.txt and
+//! writes --json stdout to lint-report.json, uploading both as the
+//! `lint-report` artifact; rust/tests/lint_clean.rs runs the same
 //! pass as a tier-1 gate.
 
 use std::path::PathBuf;
@@ -22,6 +24,7 @@ fn main() -> ExitCode {
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("."));
     let mut strict_warns = false;
+    let mut json = false;
 
     let mut argv = std::env::args().skip(1);
     while let Some(arg) = argv.next() {
@@ -34,9 +37,11 @@ fn main() -> ExitCode {
                 }
             },
             "--warns" => strict_warns = true,
+            "--json" => json = true,
             "--help" | "-h" => {
                 println!(
-                    "usage: slos_lint [--root <repo-root>] [--warns]\n\
+                    "usage: slos_lint [--root <repo-root>] [--warns] \
+                     [--json]\n\
                      see docs/LINTS.md for the rule catalogue"
                 );
                 return ExitCode::SUCCESS;
@@ -50,7 +55,11 @@ fn main() -> ExitCode {
 
     match lint::lint_tree(&root) {
         Ok(report) => {
-            print!("{}", report.render());
+            if json {
+                print!("{}", report.render_json());
+            } else {
+                print!("{}", report.render());
+            }
             let failing = report.deny_count()
                 + if strict_warns { report.warn_count() } else { 0 };
             if failing > 0 {

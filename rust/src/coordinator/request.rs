@@ -111,6 +111,17 @@ pub struct Request {
     /// client after a brownout rejection (each re-arrival restarts the
     /// SLO clock from the new arrival time).
     pub retries: u32,
+    /// Delivered through the brownout ladder's Degrade rung: admitted,
+    /// but demoted to the best-effort tier (counted once in
+    /// `MultiReplicaResult::degraded`; a degraded request is never
+    /// re-degraded because only Standard arrivals hit the ladder).
+    pub degraded: bool,
+    /// Times the Reject rung refused this request. A counter, not a
+    /// flag: the closed-loop retry client can re-submit the same
+    /// request into a still-browned-out pool, so one request can be
+    /// rejected up to `max_attempts + 1` times
+    /// (`sum(Request.rejected) == MultiReplicaResult::rejected`).
+    pub rejected: u32,
 }
 
 /// Outcome record for one completed stage.
@@ -162,6 +173,8 @@ impl Request {
             recompute_pending: 0,
             shed: false,
             retries: 0,
+            degraded: false,
+            rejected: 0,
         }
     }
 

@@ -1,0 +1,22 @@
+// slos-lint fixture: known-bad ledger. Pins (rule, line, severity)
+// for l2 (uncovered counter @7), l4 (dead counter @16), and l3 (spec
+// drift @18); ../mod.rs tests assert the exact tuples. Never
+// compiled; lexed under a metrics-scoped path.
+pub struct MultiReplicaResult {
+    pub covered: usize,
+    pub orphaned: usize,
+    pub never_written: usize,
+}
+pub struct Request {
+    pub covered_marks: u32,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct MultiReplicaResult
+  flow covered
+  flow never_written
+eq sum(Request.covered_marks) == covered
+eq covered == ghost_field
+"#;
+pub fn touch(r: &mut MultiReplicaResult) {
+    r.covered += 1;
+}

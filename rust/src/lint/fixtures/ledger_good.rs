@@ -1,0 +1,54 @@
+// slos-lint fixture: known-good ledger (l2/l3/l4). Every pub numeric
+// counter on the ledger structs is spec-covered, every declaration and
+// equation term resolves, and every flow has a non-test write site
+// (`peak_inflight` shows gauges are exempt from l4). Never compiled;
+// lexed by ../mod.rs tests under a metrics-scoped path.
+pub struct MultiReplicaResult {
+    pub requests: Vec<Request>,
+    pub metrics: RunMetrics,
+    pub shed: usize,
+    pub rejected: usize,
+    pub retries: usize,
+    pub retry_gave_up: usize,
+    pub per_replica_finished: Vec<usize>,
+    pub peak_inflight: usize,
+}
+pub struct SimResult {
+    pub sched_wall_seconds: f64,
+}
+pub struct RunMetrics {
+    pub total: usize,
+    pub finished: usize,
+}
+pub struct Request {
+    pub shed: bool,
+    pub retries: u32,
+}
+pub enum ScaleKind {
+    Failed,
+    Respawned,
+}
+pub const LEDGER_SPEC: &str = r#"
+# known-good fixture spec
+struct MultiReplicaResult
+  flow shed
+  flow rejected
+  flow retries
+  flow retry_gave_up
+  gauge per_replica_finished
+  gauge peak_inflight
+struct SimResult
+  free sched_wall_seconds -- wall-clock; report-only
+eq count(Request.shed) == shed
+eq sum(Request.retries) == retries
+eq rejected == retries + retry_gave_up
+eq sum(per_replica_finished) == finished
+eq events(Failed) <= finished
+eq finished <= total
+"#;
+pub fn tick(r: &mut MultiReplicaResult) {
+    r.shed += 1;
+    r.rejected += 1;
+    r.retries += 1;
+    r.retry_gave_up += 1;
+}

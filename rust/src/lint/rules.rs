@@ -1,8 +1,9 @@
 //! Rule implementations for `slos-lint`. Each rule is a token-stream
-//! pass over a lexed [`SourceFile`] (see [`super::lexer`]); `check_l1`
-//! is the one cross-file pass. Scoping (which paths a rule covers) is
-//! decided here from the repo-relative path, so unit tests can exercise
-//! scoping by lexing fixture text under synthetic paths.
+//! pass over a lexed [`SourceFile`] (see [`super::lexer`]);
+//! `check_ledger` is the one cross-file pass. Scoping (which paths a
+//! rule covers) is decided here from the repo-relative path, so unit
+//! tests can exercise scoping by lexing fixture text under synthetic
+//! paths.
 //!
 //! Rules (docs/LINTS.md has the long-form rationale):
 //!   d1 — no unordered-map iteration in planning/routing/sim/workload
@@ -11,8 +12,19 @@
 //!   d4 — BinaryHeap keys in router//workload/ need an explicit
 //!        `impl Ord` with an id/index tie-break (total order)
 //!   p1 — no unwrap/expect/panic! in library code (slice-index → warn)
-//!   l1 — every pub numeric counter on SimResult/MultiReplicaResult is
-//!        referenced from rust/tests/
+//!   l2 — every pub numeric counter on SimResult/MultiReplicaResult is
+//!        covered by the ledger spec (flow/gauge/`free -- <reason>`)
+//!   l3 — every ledger-spec declaration and equation term resolves
+//!        against a real struct field / enum variant (no spec drift)
+//!   l4 — every spec `flow` has a write site in non-test rust/src
+//!        (dead counters are denies)
+//!
+//! l2–l4 are the static half of slos-audit (ISSUE 10): the spec they
+//! check — `metrics::ledger::LEDGER_SPEC`, extracted here from the
+//! lexed source, parsed by the same `metrics::ledger::parse` — is the
+//! identical constant `metrics::ledger::reconcile` evaluates at
+//! runtime, so the type-checked equations are exactly the enforced
+//! ones (docs/LEDGER.md).
 //!
 //! NOTE: trigger names below live in string literals only — the lint
 //! lexes its own sources, and string/comment contents are never matched
@@ -22,10 +34,11 @@ use std::collections::BTreeSet;
 
 use super::lexer::{SourceFile, TokKind, Token};
 use super::{Severity, Violation};
+use crate::metrics::ledger::{self, Category, Term};
 
 /// Every allowable rule id (the `lint` meta-rule for broken annotations
 /// is deliberately absent — it cannot be allowed away).
-pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "d4", "p1", "l1"];
+pub const RULE_IDS: &[&str] = &["d1", "d2", "d3", "d4", "p1", "l2", "l3", "l4"];
 
 pub fn is_known_rule(id: &str) -> bool {
     RULE_IDS.contains(&id)
@@ -75,14 +88,33 @@ const NON_INDEX_KEYWORDS: &[&str] = &[
     "type", "dyn", "box", "await", "yield",
 ];
 
-/// Numeric field types L1 treats as counters.
+/// Numeric field types the ledger rules treat as counters.
 const NUMERIC_TYPES: &[&str] = &[
     "usize", "u64", "u32", "u16", "u8", "i64", "i32", "i16", "i8", "f64",
     "f32",
 ];
 
-/// Structs whose pub numeric counters must be asserted on in tests.
+/// Structs whose pub numeric counters must be covered by the ledger
+/// spec (rule l2).
 const LEDGER_STRUCTS: &[&str] = &["SimResult", "MultiReplicaResult"];
+
+/// Auxiliary structs ledger equation *terms* resolve against (l3): the
+/// per-request counters/flags and the embedded metrics block.
+const REQUEST_STRUCT: &str = "Request";
+const METRICS_STRUCT: &str = "RunMetrics";
+
+/// The scale-timeline event-kind enum `events(..)` terms count.
+const EVENTS_ENUM: &str = "ScaleKind";
+
+/// Name of the spec constant. It lives in a string literal here so
+/// this table can never match itself (the lint lexes its own sources;
+/// only the real definition site pairs the *ident* with a string
+/// literal — see `extract_ledger_spec`).
+const SPEC_IDENT: &str = "LEDGER_SPEC";
+
+/// Token distance within which the spec string must follow its ident
+/// (`<ident> : & str = "…"` is five tokens).
+const SPEC_WINDOW: usize = 8;
 
 // ---------------------------------------------------------------------
 // Path scoping
@@ -511,97 +543,450 @@ fn check_p1(f: &SourceFile, out: &mut Vec<Violation>) {
 }
 
 // ---------------------------------------------------------------------
-// L1 — cross-file ledger-counter coverage
+// l2/l3/l4 — the machine-checked counter ledger (slos-audit, ISSUE 10)
 // ---------------------------------------------------------------------
 
-/// Every `pub <field>: <numeric>` on the ledger structs must appear as
-/// an ident somewhere under rust/tests/ — a new counter cannot land
-/// without a reconciliation assertion.
-pub fn check_l1(files: &[SourceFile]) -> Vec<Violation> {
-    let mut test_idents: BTreeSet<&str> = BTreeSet::new();
+/// Field classification for the ledger cross-checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FieldKind {
+    /// Bare numeric (`usize`, `u32`, `f64`, …).
+    Numeric,
+    /// `Vec<numeric>` — addressable via `sum(<field>)` terms.
+    VecNumeric,
+    /// `bool` — addressable via `count(Request.<field>)` terms.
+    Bool,
+    /// Anything else (out of ledger scope).
+    Other,
+}
+
+/// One `pub <name>: <ty>` field of a tracked struct, with its source
+/// location (l2 violations anchor at the field, not the spec).
+#[derive(Debug, Clone)]
+struct FieldDecl {
+    strukt: String,
+    name: String,
+    kind: FieldKind,
+    path: String,
+    line: u32,
+}
+
+/// Classify the type starting at token `k` (the token after the `:`).
+fn field_kind(t: &[Token], k: usize) -> FieldKind {
+    let Some(ty) = t.get(k) else { return FieldKind::Other };
+    if ty.kind != TokKind::Ident {
+        return FieldKind::Other;
+    }
+    if NUMERIC_TYPES.contains(&ty.text.as_str()) {
+        return FieldKind::Numeric;
+    }
+    if ty.is_ident("bool") {
+        return FieldKind::Bool;
+    }
+    if ty.is_ident("Vec")
+        && t.get(k + 1).map(|n| n.is_punct('<')).unwrap_or(false)
+        && t.get(k + 2)
+            .map(|n| {
+                n.kind == TokKind::Ident
+                    && NUMERIC_TYPES.contains(&n.text.as_str())
+            })
+            .unwrap_or(false)
+    {
+        return FieldKind::VecNumeric;
+    }
+    FieldKind::Other
+}
+
+/// Extract every pub field of the tracked structs (ledger structs plus
+/// `Request`/`RunMetrics` for term resolution) from non-test code in
+/// `rust/src/` files.
+fn struct_fields(files: &[SourceFile]) -> Vec<FieldDecl> {
+    let mut targets: Vec<&str> = LEDGER_STRUCTS.to_vec();
+    targets.push(REQUEST_STRUCT);
+    targets.push(METRICS_STRUCT);
+    let mut out = Vec::new();
     for f in files {
-        if f.path.starts_with("rust/tests/") {
-            for tok in &f.tokens {
-                if tok.kind == TokKind::Ident {
-                    test_idents.insert(tok.text.as_str());
+        if !f.path.starts_with("rust/src/") {
+            continue;
+        }
+        let t = &f.tokens;
+        let mut i = 0usize;
+        while i < t.len() {
+            let in_test = f.in_test.get(i).copied().unwrap_or(false);
+            let is_target = !in_test
+                && t.get(i).map(|n| n.is_ident("struct")).unwrap_or(false)
+                && t.get(i + 1)
+                    .map(|n| {
+                        n.kind == TokKind::Ident
+                            && targets.contains(&n.text.as_str())
+                    })
+                    .unwrap_or(false);
+            if !is_target {
+                i += 1;
+                continue;
+            }
+            let strukt =
+                t.get(i + 1).map(|n| n.text.clone()).unwrap_or_default();
+            // Walk to the body's `{`, then fields at depth 1 until the
+            // matching `}`.
+            let mut j = i + 2;
+            while j < t.len()
+                && !t.get(j).map(|n| n.is_punct('{')).unwrap_or(true)
+            {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < t.len() {
+                let Some(n) = t.get(j) else { break };
+                if n.is_punct('{') {
+                    depth += 1;
+                } else if n.is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1 && n.is_ident("pub") {
+                    if let (Some(name), Some(colon)) =
+                        (t.get(j + 1), t.get(j + 2))
+                    {
+                        if name.kind == TokKind::Ident && colon.is_punct(':')
+                        {
+                            out.push(FieldDecl {
+                                strukt: strukt.clone(),
+                                name: name.text.clone(),
+                                kind: field_kind(t, j + 3),
+                                path: f.path.clone(),
+                                line: name.line,
+                            });
+                        }
+                    }
+                }
+                j += 1;
+            }
+            i = j + 1;
+        }
+    }
+    out
+}
+
+/// Variant names of the scale-timeline kind enum (fieldless, so every
+/// depth-1 ident inside the braces is a variant).
+fn scale_variants(files: &[SourceFile]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for f in files {
+        if !f.path.starts_with("rust/src/") {
+            continue;
+        }
+        let t = &f.tokens;
+        let mut i = 0usize;
+        while i < t.len() {
+            let in_test = f.in_test.get(i).copied().unwrap_or(false);
+            let is_target = !in_test
+                && t.get(i).map(|n| n.is_ident("enum")).unwrap_or(false)
+                && t.get(i + 1)
+                    .map(|n| n.is_ident(EVENTS_ENUM))
+                    .unwrap_or(false);
+            if !is_target {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 2;
+            while j < t.len()
+                && !t.get(j).map(|n| n.is_punct('{')).unwrap_or(true)
+            {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < t.len() {
+                let Some(n) = t.get(j) else { break };
+                if n.is_punct('{') {
+                    depth += 1;
+                } else if n.is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if depth == 1 && n.kind == TokKind::Ident {
+                    out.insert(n.text.clone());
+                }
+                j += 1;
+            }
+            i = j + 1;
+        }
+    }
+    out
+}
+
+/// Find the ledger spec constant in the lexed tree: the first non-test
+/// ident named [`SPEC_IDENT`] in a `rust/src/` file that is followed by
+/// a string literal within [`SPEC_WINDOW`] tokens. Returns
+/// `(path, line of the string literal's opening quote, spec text)` —
+/// spec line `n` maps to file line `str_line + n - 1` because the raw
+/// string opens with a newline.
+pub fn extract_ledger_spec(
+    files: &[SourceFile],
+) -> Option<(String, u32, String)> {
+    for f in files {
+        if !f.path.starts_with("rust/src/") {
+            continue;
+        }
+        for (i, tok) in f.tokens.iter().enumerate() {
+            if f.in_test.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            if !(tok.kind == TokKind::Ident && tok.text == SPEC_IDENT) {
+                continue;
+            }
+            for j in i + 1..(i + SPEC_WINDOW).min(f.tokens.len()) {
+                let Some(s) = f.tokens.get(j) else { break };
+                if s.kind == TokKind::Str {
+                    return Some((f.path.clone(), s.line, s.text.clone()));
                 }
             }
         }
     }
-    let mut out = Vec::new();
+    None
+}
+
+/// Idents that receive a write (`+=`/`-=`/`*=` or plain assignment,
+/// including `let` initialization) in non-test `rust/src/` code. An
+/// over-approximation by bare name — same-named per-request and pool
+/// counters alias — which errs toward *missing* dead counters, never
+/// toward false l4 denies.
+fn write_sites(files: &[SourceFile]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
     for f in files {
-        for (strukt, field, line) in ledger_fields(&f.tokens) {
-            if !test_idents.contains(field.as_str()) {
-                out.push(Violation {
-                    rule: "l1",
-                    severity: Severity::Deny,
-                    path: f.path.clone(),
-                    line,
-                    msg: format!(
-                        "pub counter `{strukt}.{field}` is never \
-                         referenced under rust/tests/ — add a \
-                         reconciliation assertion"
-                    ),
-                });
+        if !f.path.starts_with("rust/src/") {
+            continue;
+        }
+        let t = &f.tokens;
+        for i in 0..t.len() {
+            if f.in_test.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            let Some(tok) = t.get(i) else { break };
+            if tok.kind != TokKind::Ident {
+                continue;
+            }
+            let compound = t
+                .get(i + 1)
+                .map(|n| {
+                    n.is_punct('+') || n.is_punct('-') || n.is_punct('*')
+                })
+                .unwrap_or(false)
+                && t.get(i + 2).map(|n| n.is_punct('=')).unwrap_or(false);
+            // Plain `name = …`, rejecting `==` and `=>`.
+            let assign = t.get(i + 1).map(|n| n.is_punct('=')).unwrap_or(false)
+                && !t
+                    .get(i + 2)
+                    .map(|n| n.is_punct('=') || n.is_punct('>'))
+                    .unwrap_or(false);
+            if compound || assign {
+                out.insert(tok.text.clone());
             }
         }
     }
     out
 }
 
-/// Extract `(struct, field, line)` for pub numeric fields of the
-/// ledger structs in one token stream.
-fn ledger_fields(t: &[Token]) -> Vec<(String, String, u32)> {
+fn lviol(
+    rule: &'static str,
+    path: &str,
+    line: u32,
+    msg: String,
+) -> Violation {
+    Violation {
+        rule,
+        severity: Severity::Deny,
+        path: path.to_string(),
+        line,
+        msg,
+    }
+}
+
+/// Cross-file ledger audit: extract `LEDGER_SPEC` from the lexed tree,
+/// parse it with the *runtime* parser (`metrics::ledger::parse` — one
+/// source of truth), and cross-check it against the real structs:
+///
+///   l2 — every pub numeric field on the ledger structs is declared
+///        flow/gauge/`free -- <reason>` in the spec
+///   l3 — every spec declaration and equation term resolves against a
+///        real field/variant (no drift, in either direction)
+///   l4 — every `flow` has a write site in non-test rust/src
+///
+/// Spec-side violations anchor at the spec's own source lines (the raw
+/// string opens with a newline, so spec line `n` is file line
+/// `str_line + n - 1`).
+pub fn check_ledger(files: &[SourceFile]) -> Vec<Violation> {
+    let fields = struct_fields(files);
     let mut out = Vec::new();
-    let mut i = 0usize;
-    while i < t.len() {
-        let is_target = t.get(i).map(|n| n.is_ident("struct")).unwrap_or(false)
-            && t.get(i + 1)
-                .map(|n| {
-                    n.kind == TokKind::Ident
-                        && LEDGER_STRUCTS.contains(&n.text.as_str())
-                })
-                .unwrap_or(false);
-        if !is_target {
-            i += 1;
+    let Some((spec_path, spec_line, body)) = extract_ledger_spec(files)
+    else {
+        // No spec anywhere: every ledger counter is uncovered. (Unit
+        // fixtures without ledger structs stay clean — nothing to
+        // cover.)
+        for fd in &fields {
+            if LEDGER_STRUCTS.contains(&fd.strukt.as_str())
+                && fd.kind == FieldKind::Numeric
+            {
+                out.push(lviol(
+                    "l2",
+                    &fd.path,
+                    fd.line,
+                    format!(
+                        "pub counter `{}.{}` has no ledger spec to cover \
+                         it — define `{}` (metrics/ledger.rs)",
+                        fd.strukt, fd.name, SPEC_IDENT
+                    ),
+                ));
+            }
+        }
+        return out;
+    };
+    let at = |l: u32| spec_line.saturating_add(l).saturating_sub(1);
+    let spec = match ledger::parse(&body) {
+        Ok(s) => s,
+        Err(e) => {
+            // A spec that doesn't parse can't be cross-checked; one
+            // precise deny beats a cascade of bogus coverage denies.
+            out.push(lviol(
+                "l3",
+                &spec_path,
+                at(e.line),
+                format!("ledger spec does not parse: {}", e.msg),
+            ));
+            return out;
+        }
+    };
+    let has = |strukt: &str, name: &str, kind: FieldKind| {
+        fields.iter().any(|fd| {
+            fd.strukt == strukt && fd.name == name && fd.kind == kind
+        })
+    };
+    // l2 — every pub numeric counter on the ledger structs is covered.
+    for fd in &fields {
+        if !(LEDGER_STRUCTS.contains(&fd.strukt.as_str())
+            && fd.kind == FieldKind::Numeric)
+        {
             continue;
         }
-        let strukt = t.get(i + 1).map(|n| n.text.clone()).unwrap_or_default();
-        // Walk to the body's `{`, then fields at depth 1 until the
-        // matching `}`.
-        let mut j = i + 2;
-        while j < t.len() && !t.get(j).map(|n| n.is_punct('{')).unwrap_or(true)
-        {
-            j += 1;
+        if spec.decl(&fd.strukt, &fd.name).is_none() {
+            out.push(lviol(
+                "l2",
+                &fd.path,
+                fd.line,
+                format!(
+                    "pub counter `{}.{}` is not covered by the ledger \
+                     spec — declare it flow, gauge, or `free -- <reason>`",
+                    fd.strukt, fd.name
+                ),
+            ));
         }
-        let mut depth = 0usize;
-        while j < t.len() {
-            let Some(n) = t.get(j) else { break };
-            if n.is_punct('{') {
-                depth += 1;
-            } else if n.is_punct('}') {
-                depth -= 1;
-                if depth == 0 {
-                    break;
+    }
+    // l3 — declarations must name real numeric fields of ledger structs.
+    for d in &spec.decls {
+        if !LEDGER_STRUCTS.contains(&d.strukt.as_str()) {
+            out.push(lviol(
+                "l3",
+                &spec_path,
+                at(d.line),
+                format!(
+                    "spec declares `{}.{}` but `{}` is not a ledger \
+                     struct",
+                    d.strukt, d.name, d.strukt
+                ),
+            ));
+            continue;
+        }
+        let exists = has(&d.strukt, &d.name, FieldKind::Numeric)
+            || has(&d.strukt, &d.name, FieldKind::VecNumeric);
+        if !exists {
+            out.push(lviol(
+                "l3",
+                &spec_path,
+                at(d.line),
+                format!(
+                    "spec covers `{}.{}` but no such pub numeric field \
+                     exists — spec drift",
+                    d.strukt, d.name
+                ),
+            ));
+        }
+    }
+    // l3 — every equation term must resolve.
+    let variants = scale_variants(files);
+    for eq in &spec.equations {
+        for term in eq.lhs.iter().chain(eq.rhs.iter()) {
+            let problem = match term {
+                Term::Field(n) => {
+                    let ok = LEDGER_STRUCTS
+                        .iter()
+                        .any(|s| has(s, n, FieldKind::Numeric))
+                        || has(METRICS_STRUCT, n, FieldKind::Numeric);
+                    (!ok).then(|| {
+                        format!("`{n}` is not a numeric result field")
+                    })
                 }
-            } else if depth == 1 && n.is_ident("pub") {
-                // `pub field : Type` — first type token decides
-                // numeric-ness; generics (Vec<..>) never match.
-                if let (Some(name), Some(colon), Some(ty)) =
-                    (t.get(j + 1), t.get(j + 2), t.get(j + 3))
-                {
-                    if name.kind == TokKind::Ident
-                        && colon.is_punct(':')
-                        && ty.kind == TokKind::Ident
-                        && NUMERIC_TYPES.contains(&ty.text.as_str())
-                    {
-                        out.push((strukt.clone(), name.text.clone(), name.line));
-                    }
+                Term::SumRequest(f) => {
+                    (!has(REQUEST_STRUCT, f, FieldKind::Numeric)).then(
+                        || {
+                            format!(
+                                "`{REQUEST_STRUCT}.{f}` is not a numeric \
+                                 per-request counter"
+                            )
+                        },
+                    )
                 }
+                Term::CountRequest(f) => {
+                    (!has(REQUEST_STRUCT, f, FieldKind::Bool)).then(|| {
+                        format!(
+                            "`{REQUEST_STRUCT}.{f}` is not a bool \
+                             per-request flag"
+                        )
+                    })
+                }
+                Term::SumVec(f) => {
+                    let ok = LEDGER_STRUCTS
+                        .iter()
+                        .any(|s| has(s, f, FieldKind::VecNumeric));
+                    (!ok).then(|| {
+                        format!("`{f}` is not a Vec<numeric> result field")
+                    })
+                }
+                Term::Events(v) => (!variants.contains(v)).then(|| {
+                    format!("`{v}` is not a {EVENTS_ENUM} variant")
+                }),
+            };
+            if let Some(msg) = problem {
+                out.push(lviol(
+                    "l3",
+                    &spec_path,
+                    at(eq.line),
+                    format!("equation `{}`: {}", eq.text, msg),
+                ));
             }
-            j += 1;
         }
-        i = j + 1;
+    }
+    // l4 — flows must be written somewhere. Decls that already failed
+    // l3 (field doesn't exist) are skipped — one defect, one deny.
+    let written = write_sites(files);
+    for d in &spec.decls {
+        if d.category != Category::Flow {
+            continue;
+        }
+        let exists = has(&d.strukt, &d.name, FieldKind::Numeric)
+            || has(&d.strukt, &d.name, FieldKind::VecNumeric);
+        if exists && !written.contains(&d.name) {
+            out.push(lviol(
+                "l4",
+                &spec_path,
+                at(d.line),
+                format!(
+                    "flow `{}.{}` has no write site (`+=`/assignment) \
+                     in non-test rust/src code — dead counter",
+                    d.strukt, d.name
+                ),
+            ));
+        }
     }
     out
 }
@@ -790,19 +1175,103 @@ fn f(v: &[u8]) -> u8 {
         assert_eq!(warn.map(|w| w.msg.contains("6 ")), Some(true));
     }
 
+    // ----- l2/l3/l4 — the ledger cross-checks -----
+
+    /// A minimal self-consistent tree: one ledger struct, the aux
+    /// structs, a spec covering everything, write sites for the flows.
+    const LEDGER_OK: &str = r##"
+pub struct MultiReplicaResult {
+    pub requests: Vec<Request>,
+    pub shed: usize,
+    pub retries: usize,
+    pub per_replica_finished: Vec<usize>,
+}
+pub struct RunMetrics {
+    pub finished: usize,
+}
+pub struct Request {
+    pub shed: bool,
+    pub retries: u32,
+}
+pub enum ScaleKind {
+    Failed,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct MultiReplicaResult
+  flow shed
+  flow retries
+  gauge per_replica_finished
+eq count(Request.shed) == shed
+eq sum(Request.retries) == retries
+eq sum(per_replica_finished) == finished
+eq events(Failed) <= finished
+"#;
+pub fn tick(r: &mut MultiReplicaResult) {
+    r.shed += 1;
+    r.retries += 1;
+}
+"##;
+
     #[test]
-    fn l1_unreferenced_counter_flagged_at_field_line() {
-        let lib = lex(
-            "rust/src/sim/mod.rs",
-            "pub struct SimResult {\n    pub requests: Vec<R>,\n    \
-             pub covered: usize,\n    pub orphaned: u64,\n}",
+    fn ledger_consistent_tree_is_clean() {
+        let f = lex("rust/src/metrics/x.rs", LEDGER_OK);
+        assert_eq!(check_ledger(&[f]), vec![]);
+    }
+
+    #[test]
+    fn field_extraction_classifies_kinds() {
+        let f = lex("rust/src/metrics/x.rs", LEDGER_OK);
+        let fields = struct_fields(&[f]);
+        let kind = |s: &str, n: &str| {
+            fields
+                .iter()
+                .find(|fd| fd.strukt == s && fd.name == n)
+                .map(|fd| fd.kind)
+        };
+        assert_eq!(
+            kind("MultiReplicaResult", "shed"),
+            Some(FieldKind::Numeric)
         );
-        let test = lex(
-            "rust/tests/integration.rs",
-            "fn t() { assert_eq!(res.covered, 3); }",
+        assert_eq!(
+            kind("MultiReplicaResult", "per_replica_finished"),
+            Some(FieldKind::VecNumeric)
         );
-        let v = check_l1(&[lib, test]);
-        assert_eq!(denies(&v, "l1"), vec![4]);
+        assert_eq!(
+            kind("MultiReplicaResult", "requests"),
+            Some(FieldKind::Other)
+        );
+        assert_eq!(kind("Request", "shed"), Some(FieldKind::Bool));
+        assert_eq!(kind("Request", "retries"), Some(FieldKind::Numeric));
+    }
+
+    #[test]
+    fn spec_extraction_reports_string_line() {
+        let f = lex("rust/src/metrics/x.rs", LEDGER_OK);
+        let (path, line, body) =
+            extract_ledger_spec(&[f]).expect("spec found");
+        assert_eq!(path, "rust/src/metrics/x.rs");
+        // `pub const LEDGER_SPEC … r#"` sits on line 18 of LEDGER_OK
+        // (the outer raw string opens with a newline).
+        assert_eq!(line, 18);
+        assert!(body.starts_with('\n'));
+        assert!(body.contains("flow shed"));
+    }
+
+    #[test]
+    fn l2_uncovered_counter_flagged_at_field_line() {
+        let src = r##"
+pub struct SimResult {
+    pub covered: f64,
+    pub orphaned: u64,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct SimResult
+  gauge covered
+"#;
+"##;
+        let f = lex("rust/src/sim/mod.rs", src);
+        let v = check_ledger(&[f]);
+        assert_eq!(denies(&v, "l2"), vec![4]);
         assert_eq!(
             v.first().map(|x| x.msg.contains("SimResult.orphaned")),
             Some(true)
@@ -810,12 +1279,93 @@ fn f(v: &[u8]) -> u8 {
     }
 
     #[test]
-    fn l1_ignores_non_ledger_structs_and_non_numeric_fields() {
-        let lib = lex(
-            "rust/src/router/balancer.rs",
-            "pub struct Other { pub a: usize }\n\
-             pub struct MultiReplicaResult {\n    pub names: Vec<String>,\n}",
-        );
-        assert_eq!(check_l1(&[lib]), vec![]);
+    fn l2_missing_spec_denies_every_counter() {
+        let src = "pub struct MultiReplicaResult {\n    pub shed: usize,\n\
+                   \u{20}   pub names: Vec<String>,\n}";
+        let f = lex("rust/src/router/balancer.rs", src);
+        let v = check_ledger(&[f]);
+        // Only the numeric counter; `names` is out of ledger scope.
+        assert_eq!(denies(&v, "l2"), vec![2]);
+    }
+
+    #[test]
+    fn l3_drift_and_unresolvable_terms_flagged_at_spec_lines() {
+        let src = r##"
+pub struct MultiReplicaResult {
+    pub shed: usize,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct MultiReplicaResult
+  flow shed
+  flow ghost
+eq shed == phantom
+"#;
+pub fn tick(r: &mut MultiReplicaResult) {
+    r.shed += 1;
+}
+"##;
+        let f = lex("rust/src/router/balancer.rs", src);
+        let v = check_ledger(&[f]);
+        // Spec string opens on file line 5; `flow ghost` is spec line 4
+        // -> file line 8, the equation is spec line 5 -> file line 9.
+        assert_eq!(denies(&v, "l3"), vec![8, 9]);
+        assert_eq!(denies(&v, "l4"), vec![]); // ghost already an l3
+    }
+
+    #[test]
+    fn l3_unparsable_spec_is_a_single_deny() {
+        let src = "pub struct SimResult { pub x: usize }\n\
+                   pub const LEDGER_SPEC: &str = \"flux capacitor\";\n";
+        let f = lex("rust/src/sim/mod.rs", src);
+        let v = check_ledger(&[f]);
+        assert_eq!(denies(&v, "l3"), vec![2]);
+        assert_eq!(denies(&v, "l2"), vec![]);
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn l4_dead_counter_flagged_at_spec_line() {
+        let src = r##"
+pub struct MultiReplicaResult {
+    pub shed: usize,
+    pub dead: usize,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct MultiReplicaResult
+  flow shed
+  flow dead
+"#;
+pub fn tick(r: &mut MultiReplicaResult) {
+    r.shed += 1;
+}
+"##;
+        let f = lex("rust/src/router/balancer.rs", src);
+        let v = check_ledger(&[f]);
+        // Spec opens on file line 6; `flow dead` is spec line 4 -> 9.
+        assert_eq!(denies(&v, "l4"), vec![9]);
+        assert_eq!(denies(&v, "l2"), vec![]);
+        assert_eq!(denies(&v, "l3"), vec![]);
+    }
+
+    #[test]
+    fn l4_test_only_writes_do_not_count() {
+        let src = r##"
+pub struct MultiReplicaResult {
+    pub shed: usize,
+}
+pub const LEDGER_SPEC: &str = r#"
+struct MultiReplicaResult
+  flow shed
+"#;
+#[cfg(test)]
+mod tests {
+    fn t(r: &mut super::MultiReplicaResult) {
+        r.shed += 1;
+    }
+}
+"##;
+        let f = lex("rust/src/router/balancer.rs", src);
+        let v = check_ledger(&[f]);
+        assert_eq!(denies(&v, "l4"), vec![7]);
     }
 }

@@ -1,0 +1,764 @@
+//! slos-audit (ISSUE 10): the machine-checked counter ledger.
+//!
+//! Every capacity claim this reproduction makes rests on each request
+//! being accounted for exactly once across an ever-growing set of
+//! flows — admitted, re-routed, drained, crashed, shed, degraded,
+//! rejected, retried. [`LEDGER_SPEC`] is the *single* machine-readable
+//! statement of those conservation invariants, written in a tiny
+//! dependency-free equation DSL and enforced from both sides:
+//!
+//! * **statically** — lint rules l2/l3/l4 (`rust/src/lint/rules.rs`)
+//!   extract this very constant from the lexed source and cross-check
+//!   it against the real struct fields: every pub numeric counter on
+//!   `SimResult`/`MultiReplicaResult` must be covered (l2), every
+//!   equation must type-check against real fields (l3), and every
+//!   `flow` must have a write site in non-test `rust/src` (l4);
+//! * **at runtime** — [`reconcile`] evaluates the identical spec
+//!   against a finished [`MultiReplicaResult`]. Every
+//!   `run_multi_replica*` call audits its own result under
+//!   `debug_assertions` (compiled out of release builds — bench
+//!   numbers are unaffected, see PERF.md), and the integration suites
+//!   call it directly.
+//!
+//! `tests/ledger_spec.rs` asserts the lint-extracted spec text is
+//! byte-identical to [`LEDGER_SPEC`], so the two sides can never
+//! drift. docs/LEDGER.md is the human-readable counter catalogue.
+//!
+//! ## Spec grammar (line-oriented)
+//!
+//! ```text
+//! # comment
+//! struct <Name>               begin a ledger-struct section
+//!   flow <field>              counter: must have a write site (l4)
+//!   gauge <field>             watermark/diagnostic: coverage only
+//!   free <field> -- <reason>  exempt from equations; reason required
+//! eq <terms> ==|<= <terms>    terms joined by `+`; term forms:
+//!                             <field>, sum(Request.<f>),
+//!                             count(Request.<flag>), sum(<vec_field>),
+//!                             events(<ScaleKind variant>)
+//! ```
+//!
+//! Bare `<field>` terms resolve against `MultiReplicaResult` counters
+//! first, then `RunMetrics` (`total`, `finished`, `attained`,
+//! `best_effort`). Equations over `Request.*` read the retained
+//! per-request ledger, so they are skipped for fold-mode results
+//! (`requests.len() != metrics.total` — the stream run folded its
+//! requests away; ISSUE 9).
+
+use std::fmt;
+
+use crate::coordinator::request::Request;
+use crate::router::balancer::MultiReplicaResult;
+
+/// The declarative counter ledger. Const data, parsed by [`parse`];
+/// the lint pass reads this exact text back out of the lexed source
+/// (one source of truth — see the module docs).
+pub const LEDGER_SPEC: &str = r#"
+# slos-audit ledger spec (ISSUE 10). Grammar: metrics/ledger.rs module
+# docs; counter catalogue: docs/LEDGER.md. Checked statically by lint
+# rules l2-l4 and at runtime by metrics::ledger::reconcile.
+
+struct MultiReplicaResult
+  flow drain_requeued
+  flow drain_handoffs
+  flow crashes
+  flow crash_requeued
+  flow crash_handoffs
+  flow shed
+  flow degraded
+  flow rejected
+  flow retries
+  flow retry_gave_up
+  gauge rerouted
+  gauge migrated
+  gauge per_replica_finished
+  gauge peak_replicas
+  gauge peak_inflight
+  gauge replica_seconds
+  free sched_wall_seconds -- wall-clock overhead meter; report-only, never cross-run comparable
+
+struct SimResult
+  free sched_wall_seconds -- wall-clock overhead meter; report-only, never cross-run comparable
+
+# Per-request ledger vs pool counters. Retain mode only: fold-mode
+# results folded `requests` away, so Request.* equations are skipped
+# when requests.len() != metrics.total.
+eq sum(Request.drain_requeues) == drain_requeued + crash_requeued + crash_handoffs
+eq sum(Request.kv_handoffs) == drain_handoffs + crash_handoffs
+eq sum(Request.retries) == retries
+eq sum(Request.rejected) == rejected
+eq count(Request.shed) == shed
+eq count(Request.degraded) == degraded
+
+# Pool-level conservation, evaluated in both retain and fold modes.
+eq rejected == retries + retry_gave_up
+eq drain_handoffs <= drain_requeued
+eq events(Failed) == crashes
+eq sum(per_replica_finished) == finished
+eq attained <= finished
+eq finished <= total
+eq best_effort <= total
+"#;
+
+/// How the spec classifies a counter (docs/LEDGER.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Accumulating event counter: participates in equations and must
+    /// have a `+=`/assignment write site in non-test `rust/src` (l4).
+    Flow,
+    /// Watermark or derived diagnostic: coverage and existence checked
+    /// (l2/l3), no write-site requirement.
+    Gauge,
+    /// Explicitly unchecked, with a mandatory reason.
+    Free,
+}
+
+/// One `flow`/`gauge`/`free` line of the spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decl {
+    pub strukt: String,
+    pub name: String,
+    pub category: Category,
+    pub reason: Option<String>,
+    /// 1-based line within the spec text.
+    pub line: u32,
+}
+
+/// One summand of an equation side.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Term {
+    /// Bare counter: a numeric field of the result (or its
+    /// `RunMetrics`).
+    Field(String),
+    /// `sum(Request.f)` — a per-request numeric counter, summed over
+    /// the retained requests.
+    SumRequest(String),
+    /// `count(Request.f)` — a per-request bool flag, counted.
+    CountRequest(String),
+    /// `sum(f)` — a `Vec<numeric>` field on the result, summed.
+    SumVec(String),
+    /// `events(V)` — scale-timeline entries of kind `V`, counted.
+    Events(String),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Le,
+}
+
+/// One `eq` line: `lhs <cmp> rhs`, each side a sum of terms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Equation {
+    pub lhs: Vec<Term>,
+    pub cmp: Cmp,
+    pub rhs: Vec<Term>,
+    /// 1-based line within the spec text.
+    pub line: u32,
+    /// Source text, for reports.
+    pub text: String,
+}
+
+impl Equation {
+    /// Does any term read the retained per-request ledger? Such
+    /// equations are unevaluable on fold-mode results.
+    pub fn needs_requests(&self) -> bool {
+        self.lhs.iter().chain(self.rhs.iter()).any(|t| {
+            matches!(t, Term::SumRequest(_) | Term::CountRequest(_))
+        })
+    }
+}
+
+/// A parsed ledger spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerSpec {
+    pub decls: Vec<Decl>,
+    pub equations: Vec<Equation>,
+}
+
+impl LedgerSpec {
+    /// Look up the declaration covering `strukt.name`, if any.
+    pub fn decl(&self, strukt: &str, name: &str) -> Option<&Decl> {
+        self.decls
+            .iter()
+            .find(|d| d.strukt == strukt && d.name == name)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// 1-based line within the spec text.
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "spec line {}: {}", self.line, self.msg)
+    }
+}
+
+fn perr(line: u32, msg: String) -> ParseError {
+    ParseError { line, msg }
+}
+
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse a spec text into a [`LedgerSpec`]. Errors carry the 1-based
+/// spec line (the lint pass maps it onto the source file line).
+pub fn parse(spec: &str) -> Result<LedgerSpec, ParseError> {
+    let mut decls: Vec<Decl> = Vec::new();
+    let mut equations: Vec<Equation> = Vec::new();
+    let mut current: Option<String> = None;
+    for (idx, raw) in spec.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let text = raw.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix("struct ") {
+            let name = rest.trim();
+            if !is_ident(name) {
+                return Err(perr(line, format!("bad struct name `{name}`")));
+            }
+            current = Some(name.to_string());
+        } else if let Some(rest) = text.strip_prefix("flow ") {
+            decls.push(decl(Category::Flow, rest, current.as_deref(), line)?);
+        } else if let Some(rest) = text.strip_prefix("gauge ") {
+            decls.push(decl(Category::Gauge, rest, current.as_deref(), line)?);
+        } else if let Some(rest) = text.strip_prefix("free ") {
+            decls.push(decl(Category::Free, rest, current.as_deref(), line)?);
+        } else if let Some(rest) = text.strip_prefix("eq ") {
+            equations.push(equation(rest, line)?);
+        } else {
+            return Err(perr(line, format!("unrecognized spec line `{text}`")));
+        }
+    }
+    for (i, d) in decls.iter().enumerate() {
+        let dup = decls
+            .iter()
+            .take(i)
+            .any(|e| e.strukt == d.strukt && e.name == d.name);
+        if dup {
+            return Err(perr(
+                d.line,
+                format!("duplicate declaration of `{}.{}`", d.strukt, d.name),
+            ));
+        }
+    }
+    Ok(LedgerSpec { decls, equations })
+}
+
+fn decl(
+    category: Category,
+    rest: &str,
+    strukt: Option<&str>,
+    line: u32,
+) -> Result<Decl, ParseError> {
+    let strukt = strukt.ok_or_else(|| {
+        perr(line, "declaration outside a `struct` section".to_string())
+    })?;
+    let (name, reason) = match rest.split_once("--") {
+        Some((n, r)) => (n.trim(), Some(r.trim())),
+        None => (rest.trim(), None),
+    };
+    if !is_ident(name) {
+        return Err(perr(line, format!("bad field name `{name}`")));
+    }
+    if category == Category::Free && reason.map_or(true, str::is_empty) {
+        return Err(perr(
+            line,
+            format!("`free {name}` needs a `-- <reason>`"),
+        ));
+    }
+    Ok(Decl {
+        strukt: strukt.to_string(),
+        name: name.to_string(),
+        category,
+        reason: reason.map(str::to_string),
+        line,
+    })
+}
+
+fn equation(rest: &str, line: u32) -> Result<Equation, ParseError> {
+    let (cmp, l, r) = if let Some((l, r)) = rest.split_once("==") {
+        (Cmp::Eq, l, r)
+    } else if let Some((l, r)) = rest.split_once("<=") {
+        (Cmp::Le, l, r)
+    } else {
+        return Err(perr(
+            line,
+            format!("equation `{}` needs `==` or `<=`", rest.trim()),
+        ));
+    };
+    Ok(Equation {
+        lhs: side(l, line)?,
+        cmp,
+        rhs: side(r, line)?,
+        line,
+        text: rest.trim().to_string(),
+    })
+}
+
+fn side(s: &str, line: u32) -> Result<Vec<Term>, ParseError> {
+    s.split('+').map(|t| term(t.trim(), line)).collect()
+}
+
+/// `sum(Request.f)` / `count(Request.f)` / `sum(f)` / `events(V)` /
+/// bare ident.
+fn term(s: &str, line: u32) -> Result<Term, ParseError> {
+    if let Some(inner) = call_body(s, "sum") {
+        return match inner.strip_prefix("Request.") {
+            Some(f) => ident_of(f, line).map(Term::SumRequest),
+            None => ident_of(inner, line).map(Term::SumVec),
+        };
+    }
+    if let Some(inner) = call_body(s, "count") {
+        let f = inner.strip_prefix("Request.").ok_or_else(|| {
+            perr(
+                line,
+                format!("count() takes a `Request.<flag>`, got `{inner}`"),
+            )
+        })?;
+        return ident_of(f, line).map(Term::CountRequest);
+    }
+    if let Some(inner) = call_body(s, "events") {
+        return ident_of(inner, line).map(Term::Events);
+    }
+    ident_of(s, line).map(Term::Field)
+}
+
+fn call_body<'a>(s: &'a str, name: &str) -> Option<&'a str> {
+    s.strip_prefix(name)?
+        .strip_prefix('(')?
+        .strip_suffix(')')
+        .map(str::trim)
+}
+
+fn ident_of(s: &str, line: u32) -> Result<String, ParseError> {
+    let s = s.trim();
+    if is_ident(s) {
+        Ok(s.to_string())
+    } else {
+        Err(perr(line, format!("bad term `{s}`")))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime evaluation
+// ---------------------------------------------------------------------
+
+/// One failed equation (or an unevaluable term) from [`reconcile`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LedgerViolation {
+    /// 1-based spec line of the equation.
+    pub line: u32,
+    /// The equation's source text (empty for a spec parse failure).
+    pub equation: String,
+    pub lhs: u64,
+    pub rhs: u64,
+    pub msg: String,
+}
+
+impl fmt::Display for LedgerViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "spec line {}: `{}`: {} (lhs {}, rhs {})",
+            self.line, self.equation, self.msg, self.lhs, self.rhs
+        )
+    }
+}
+
+/// Render a violation list one-per-line (panic messages, test output).
+pub fn render_violations(violations: &[LedgerViolation]) -> String {
+    let lines: Vec<String> =
+        violations.iter().map(|v| v.to_string()).collect();
+    lines.join("\n")
+}
+
+/// Per-request numeric counters `sum(Request.f)` can read. Unknown
+/// names are reported as violations (lint l3 keeps the spec inside
+/// this set, so a miss here means the accessor table lagged a field).
+fn request_field(r: &Request, name: &str) -> Option<u64> {
+    match name {
+        "route_hops" => Some(r.route_hops as u64),
+        "drain_requeues" => Some(r.drain_requeues as u64),
+        "kv_handoffs" => Some(r.kv_handoffs as u64),
+        "preemptions" => Some(r.preemptions as u64),
+        "recompute_pending" => Some(r.recompute_pending as u64),
+        "retries" => Some(r.retries as u64),
+        "rejected" => Some(r.rejected as u64),
+        _ => None,
+    }
+}
+
+/// Per-request bool flags `count(Request.f)` can read.
+fn request_flag(r: &Request, name: &str) -> Option<bool> {
+    match name {
+        "shed" => Some(r.shed),
+        "degraded" => Some(r.degraded),
+        _ => None,
+    }
+}
+
+/// Bare-field resolution: result counters first, then `RunMetrics`.
+fn result_field(res: &MultiReplicaResult, name: &str) -> Option<u64> {
+    match name {
+        "rerouted" => Some(res.rerouted as u64),
+        "migrated" => Some(res.migrated as u64),
+        "drain_requeued" => Some(res.drain_requeued as u64),
+        "drain_handoffs" => Some(res.drain_handoffs as u64),
+        "peak_replicas" => Some(res.peak_replicas as u64),
+        "crashes" => Some(res.crashes as u64),
+        "crash_requeued" => Some(res.crash_requeued as u64),
+        "crash_handoffs" => Some(res.crash_handoffs as u64),
+        "shed" => Some(res.shed as u64),
+        "degraded" => Some(res.degraded as u64),
+        "rejected" => Some(res.rejected as u64),
+        "retries" => Some(res.retries as u64),
+        "retry_gave_up" => Some(res.retry_gave_up as u64),
+        "peak_inflight" => Some(res.peak_inflight as u64),
+        "total" => Some(res.metrics.total as u64),
+        "finished" => Some(res.metrics.finished as u64),
+        "attained" => Some(res.metrics.attained as u64),
+        "best_effort" => Some(res.metrics.best_effort as u64),
+        _ => None,
+    }
+}
+
+/// `sum(<vec_field>)` resolution.
+fn vec_field(res: &MultiReplicaResult, name: &str) -> Option<u64> {
+    match name {
+        "per_replica_finished" => Some(
+            res.per_replica_finished.iter().map(|&x| x as u64).sum(),
+        ),
+        _ => None,
+    }
+}
+
+fn eval_term(res: &MultiReplicaResult, t: &Term) -> Result<u64, String> {
+    match t {
+        Term::Field(n) => result_field(res, n)
+            .ok_or_else(|| format!("unknown result field `{n}`")),
+        Term::SumRequest(f) => {
+            let mut total = 0u64;
+            for r in &res.requests {
+                let v = request_field(r, f).ok_or_else(|| {
+                    format!("unknown Request field `{f}`")
+                })?;
+                total = total.saturating_add(v);
+            }
+            Ok(total)
+        }
+        Term::CountRequest(f) => {
+            let mut total = 0u64;
+            for r in &res.requests {
+                let set = request_flag(r, f).ok_or_else(|| {
+                    format!("unknown Request flag `{f}`")
+                })?;
+                total += set as u64;
+            }
+            Ok(total)
+        }
+        Term::SumVec(f) => vec_field(res, f)
+            .ok_or_else(|| format!("unknown vec field `{f}`")),
+        // Variant existence is a static property (lint l3); at runtime
+        // an unknown name simply matches zero events.
+        Term::Events(v) => Ok(res
+            .scale_timeline
+            .iter()
+            .filter(|e| format!("{:?}", e.kind) == *v)
+            .count() as u64),
+    }
+}
+
+fn eval_side(
+    res: &MultiReplicaResult,
+    terms: &[Term],
+) -> Result<u64, String> {
+    let mut total = 0u64;
+    for t in terms {
+        total = total.saturating_add(eval_term(res, t)?);
+    }
+    Ok(total)
+}
+
+/// Evaluate an already-parsed spec against a result. Equations over
+/// the per-request ledger are skipped for fold-mode results (see the
+/// module docs).
+pub fn reconcile_with(
+    spec: &LedgerSpec,
+    res: &MultiReplicaResult,
+) -> Result<(), Vec<LedgerViolation>> {
+    let retained = res.requests.len() == res.metrics.total;
+    let mut out: Vec<LedgerViolation> = Vec::new();
+    for eq in &spec.equations {
+        if !retained && eq.needs_requests() {
+            continue;
+        }
+        match (eval_side(res, &eq.lhs), eval_side(res, &eq.rhs)) {
+            (Ok(l), Ok(r)) => {
+                let holds = match eq.cmp {
+                    Cmp::Eq => l == r,
+                    Cmp::Le => l <= r,
+                };
+                if !holds {
+                    let msg = match eq.cmp {
+                        Cmp::Eq => "sides are not equal",
+                        Cmp::Le => "left side exceeds right side",
+                    };
+                    out.push(LedgerViolation {
+                        line: eq.line,
+                        equation: eq.text.clone(),
+                        lhs: l,
+                        rhs: r,
+                        msg: msg.to_string(),
+                    });
+                }
+            }
+            (Err(m), _) | (_, Err(m)) => out.push(LedgerViolation {
+                line: eq.line,
+                equation: eq.text.clone(),
+                lhs: 0,
+                rhs: 0,
+                msg: m,
+            }),
+        }
+    }
+    if out.is_empty() {
+        Ok(())
+    } else {
+        Err(out)
+    }
+}
+
+/// Audit a finished multi-replica result against [`LEDGER_SPEC`] —
+/// the same constant the lint pass cross-checks statically. Called by
+/// `run_multi_replica*` under `debug_assertions` and by every
+/// integration suite.
+pub fn reconcile(
+    res: &MultiReplicaResult,
+) -> Result<(), Vec<LedgerViolation>> {
+    match parse(LEDGER_SPEC) {
+        Ok(spec) => reconcile_with(&spec, res),
+        Err(e) => Err(vec![LedgerViolation {
+            line: e.line,
+            equation: String::new(),
+            lhs: 0,
+            rhs: 0,
+            msg: format!("LEDGER_SPEC does not parse: {}", e.msg),
+        }]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SloSpec, SloTier};
+    use crate::metrics::RunMetrics;
+    use crate::router::autoscaler::{ScaleEvent, ScaleKind};
+
+    fn blank() -> MultiReplicaResult {
+        MultiReplicaResult {
+            requests: Vec::new(),
+            metrics: RunMetrics {
+                total: 0,
+                finished: 0,
+                attained: 0,
+                best_effort: 0,
+                ttft_p50: 0.0,
+                ttft_p99: 0.0,
+                tpot_p50: 0.0,
+                tpot_p99: 0.0,
+                span: 0.0,
+            },
+            rerouted: 0,
+            migrated: 0,
+            per_replica_finished: Vec::new(),
+            sched_wall_seconds: 0.0,
+            scale_timeline: Vec::new(),
+            replica_seconds: 0.0,
+            drain_requeued: 0,
+            drain_handoffs: 0,
+            peak_replicas: 0,
+            crashes: 0,
+            crash_requeued: 0,
+            crash_handoffs: 0,
+            shed: 0,
+            degraded: 0,
+            rejected: 0,
+            retries: 0,
+            retry_gave_up: 0,
+            peak_inflight: 0,
+        }
+    }
+
+    fn req(id: u64) -> crate::coordinator::request::Request {
+        crate::coordinator::request::Request::simple(
+            id,
+            0.0,
+            10,
+            2,
+            SloSpec::from_tiers(SloTier::Loose, SloTier::Loose),
+        )
+    }
+
+    #[test]
+    fn spec_parses_and_every_flow_is_in_an_equation() {
+        let spec = parse(LEDGER_SPEC).expect("LEDGER_SPEC must parse");
+        assert!(spec.decls.len() >= 17, "decls: {}", spec.decls.len());
+        assert!(spec.equations.len() >= 12);
+        for d in spec.decls.iter().filter(|d| d.category == Category::Flow)
+        {
+            let named = |t: &Term| match t {
+                Term::Field(n) => n == &d.name,
+                _ => false,
+            };
+            let used = spec.equations.iter().any(|e| {
+                e.lhs.iter().chain(e.rhs.iter()).any(named)
+            });
+            assert!(used, "flow `{}` appears in no equation", d.name);
+        }
+    }
+
+    #[test]
+    fn parse_errors_carry_spec_line_numbers() {
+        // A decl outside any struct section.
+        let e = parse("flow x\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(e.msg.contains("struct"), "{}", e.msg);
+        // A free decl without a reason.
+        let e = parse("struct S\n  free x\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("reason"), "{}", e.msg);
+        // An equation without a comparator.
+        let e = parse("eq a ~ b\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        // A malformed term.
+        let e = parse("\n\neq sum(Request.) == x\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        // Duplicate declarations.
+        let e = parse("struct S\n  flow x\n  gauge x\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.msg.contains("duplicate"), "{}", e.msg);
+        // An unknown directive.
+        let e = parse("flux capacitor\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn count_requires_request_prefix() {
+        let e = parse("eq count(shed) == shed\n").unwrap_err();
+        assert!(e.msg.contains("Request"), "{}", e.msg);
+    }
+
+    #[test]
+    fn empty_result_reconciles() {
+        assert_eq!(reconcile(&blank()), Ok(()));
+    }
+
+    #[test]
+    fn unbalanced_refusal_ledger_is_violated_and_rendered() {
+        let mut res = blank();
+        res.rejected = 3;
+        res.retry_gave_up = 1;
+        let v = reconcile(&res).unwrap_err();
+        assert_eq!(v.len(), 2, "rejected mismatches both its equations");
+        let refusal = v
+            .iter()
+            .find(|x| x.equation.contains("retry_gave_up"))
+            .expect("refusal equation must be among the violations");
+        assert_eq!((refusal.lhs, refusal.rhs), (3, 1));
+        let text = render_violations(&v);
+        assert!(text.contains("spec line"), "{text}");
+        assert!(text.contains("sides are not equal"), "{text}");
+    }
+
+    #[test]
+    fn per_request_sums_reconcile_in_retain_mode() {
+        let mut res = blank();
+        let mut a = req(0);
+        a.retries = 2;
+        a.rejected = 3;
+        let mut b = req(1);
+        b.retries = 1;
+        b.rejected = 1;
+        b.shed = true;
+        res.requests = vec![a, b];
+        res.metrics.total = 2;
+        res.retries = 3;
+        res.rejected = 4;
+        res.retry_gave_up = 1;
+        res.shed = 1;
+        assert_eq!(reconcile(&res), Ok(()));
+        // Now desync one pool counter: exactly its equation must trip.
+        res.shed = 0;
+        let v = reconcile(&res).unwrap_err();
+        assert_eq!(v.len(), 1);
+        let first = v.first().expect("one violation");
+        assert!(first.equation.contains("count(Request.shed)"));
+        assert_eq!((first.lhs, first.rhs), (1, 0));
+    }
+
+    #[test]
+    fn fold_mode_skips_request_equations() {
+        // Fold-mode shape: counters nonzero, `requests` folded away.
+        let mut res = blank();
+        res.metrics.total = 5;
+        res.metrics.finished = 5;
+        res.per_replica_finished = vec![3, 2];
+        res.retries = 2;
+        res.rejected = 3;
+        res.retry_gave_up = 1;
+        res.shed = 1;
+        res.degraded = 1;
+        assert_eq!(reconcile(&res), Ok(()));
+    }
+
+    #[test]
+    fn events_term_counts_the_scale_timeline() {
+        let mut res = blank();
+        res.crashes = 1;
+        let v = reconcile(&res).unwrap_err();
+        assert!(v.iter().any(|x| x.equation.contains("events(Failed)")));
+        res.scale_timeline.push(ScaleEvent {
+            t: 1.0,
+            kind: ScaleKind::Failed,
+            replica: 0,
+            active: 1,
+        });
+        assert_eq!(reconcile(&res), Ok(()));
+    }
+
+    #[test]
+    fn per_replica_finished_must_cover_finished() {
+        let mut res = blank();
+        res.metrics.total = 4;
+        res.metrics.finished = 4;
+        res.per_replica_finished = vec![2, 1];
+        // Retained-mode gate is requests.len() == total; keep this a
+        // fold-shape result so only the vec equation is in play.
+        let v = reconcile(&res).unwrap_err();
+        assert_eq!(v.len(), 1);
+        let first = v.first().expect("one violation");
+        assert!(first.equation.contains("per_replica_finished"));
+        assert_eq!((first.lhs, first.rhs), (3, 4));
+    }
+
+    #[test]
+    fn reconcile_with_unknown_field_reports_not_panics() {
+        let spec = parse("eq ghost == total\n").expect("parses");
+        let v = reconcile_with(&spec, &blank()).unwrap_err();
+        assert_eq!(v.len(), 1);
+        let first = v.first().expect("one violation");
+        assert!(first.msg.contains("unknown result field"));
+    }
+}

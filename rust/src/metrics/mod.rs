@@ -6,6 +6,8 @@
 
 use crate::coordinator::request::{Request, ServiceTier};
 
+pub mod ledger;
+
 /// Outcome summary of one serving run.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {

@@ -90,11 +90,11 @@ pub struct MultiReplicaResult {
     pub crash_requeued: usize,
     /// Started requests the crash outflow demoted to best-effort and
     /// shipped as full recompute debt (their KV died with the replica).
-    /// Reconciliation invariant (asserted by the chaos tests): summing
-    /// the per-request counters over `requests`,
-    /// Σ `drain_requeues` == `drain_requeued` + `crash_requeued` +
-    /// `crash_handoffs`, and Σ `kv_handoffs` == `drain_handoffs` +
-    /// `crash_handoffs`.
+    /// The conservation equations tying this (and every other counter
+    /// here) to the per-request ledger live in
+    /// `metrics::ledger::LEDGER_SPEC` — machine-checked statically by
+    /// lint rules l2–l4 and at runtime by `metrics::ledger::reconcile`
+    /// (catalogue: docs/LEDGER.md).
     pub crash_handoffs: usize,
     /// Standard-tier requests the deadline-expiry sweep cancelled (PR-8):
     /// the perf model proved they could no longer meet their prefill
@@ -113,10 +113,8 @@ pub struct MultiReplicaResult {
     /// `requests` equals this).
     pub retries: usize,
     /// Rejections that did not re-arrive: the attempt cap or the pool's
-    /// retry budget was exhausted, or no retry client was armed.
-    /// Extended ledger invariant (asserted by the overload tests):
-    /// `rejected` == `retries` + `retry_gave_up`, and the number of
-    /// requests with `Request::shed` set equals `shed`.
+    /// retry budget was exhausted, or no retry client was armed
+    /// (`rejected == retries + retry_gave_up` — see the ledger spec).
     pub retry_gave_up: usize,
     /// Maximum requests simultaneously resident in the pool (delivered,
     /// neither finished nor shed) over the run — the O(pending) memory
@@ -808,6 +806,7 @@ impl Router {
     /// the run ends with re-arrivals still parked in the queue.
     fn reject(&mut self, mut req: Request, now: f64) {
         self.rejected += 1;
+        req.rejected = req.rejected.saturating_add(1);
         let hint = self.retry_hint();
         let seed = self.scenario.seed;
         if let Some(rs) = self.retry.as_mut() {
@@ -1227,7 +1226,7 @@ impl Router {
                 acc.finish(span)
             }
         };
-        MultiReplicaResult {
+        let result = MultiReplicaResult {
             requests,
             metrics,
             rerouted: rerouted.len(),
@@ -1248,9 +1247,29 @@ impl Router {
             retries,
             retry_gave_up,
             peak_inflight,
-        }
+        };
+        debug_reconcile(&result);
+        result
     }
 }
+
+/// Debug-build ledger audit (ISSUE 10): every `run_multi_replica*`
+/// result is reconciled against `metrics::ledger::LEDGER_SPEC` on the
+/// way out. Compiled to a no-op in release builds so bench numbers are
+/// unaffected (PERF.md).
+#[cfg(debug_assertions)]
+fn debug_reconcile(res: &MultiReplicaResult) {
+    if let Err(v) = crate::metrics::ledger::reconcile(res) {
+        debug_assert!(
+            false,
+            "ledger reconciliation failed:\n{}",
+            crate::metrics::ledger::render_violations(&v)
+        );
+    }
+}
+
+#[cfg(not(debug_assertions))]
+fn debug_reconcile(_res: &MultiReplicaResult) {}
 
 /// Run `workload` over `rcfg.replicas` replicas of the scenario's server
 /// (thin wrapper over [`Router`], kept as the stable entry point).

@@ -389,9 +389,10 @@ impl ReplicaHandle {
     /// an admission pass. The demotion is the ladder's Degrade rung: the
     /// pool keeps serving the work, just without the standard-tier
     /// deadline contract it demonstrably cannot honor right now.
-    pub fn deliver_degraded(&mut self, r: Request) {
+    pub fn deliver_degraded(&mut self, mut r: Request) {
         let before = self.admission_demand();
         let id = r.id;
+        r.degraded = true;
         deliver(&mut self.state, r);
         decline_to_best_effort(&mut self.state, id);
         self.note_mutation(before);

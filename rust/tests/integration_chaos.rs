@@ -129,18 +129,14 @@ fn crash_mid_decode_conserves_and_reconciles() {
                 respawn available, all finish: {:?}", elastic.metrics);
 
     // The ledger: graceful-drain and crash moves share the per-request
-    // counters; the pool-level split must cover them exactly.
-    let req_requeues: usize =
-        elastic.requests.iter().map(|r| r.drain_requeues as usize).sum();
-    let req_handoffs: usize =
-        elastic.requests.iter().map(|r| r.kv_handoffs as usize).sum();
-    assert_eq!(req_requeues,
-               elastic.drain_requeued + elastic.crash_requeued
-                   + elastic.crash_handoffs,
-               "requeue ledger out of balance");
-    assert_eq!(req_handoffs,
-               elastic.drain_handoffs + elastic.crash_handoffs,
-               "handoff ledger out of balance");
+    // counters; every LEDGER_SPEC conservation equation (requeue and
+    // handoff splits, `events(Failed) == crashes`, per-replica finished
+    // sums) must balance — `reconcile` evaluates the same spec the lint
+    // rules cross-check statically.
+    if let Err(v) = slos_serve::metrics::ledger::reconcile(&elastic) {
+        panic!("ledger reconciliation failed:\n{}",
+               slos_serve::metrics::ledger::render_violations(&v));
+    }
     // Mid-burst the victim is busy: the crash must actually move work.
     assert!(elastic.crash_requeued + elastic.crash_handoffs > 0,
             "a mid-burst crash strands work to evacuate");

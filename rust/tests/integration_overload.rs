@@ -3,9 +3,9 @@
 //! with shedding, the brownout ladder, the retry client, AND fault
 //! injection armed together must be bit-reproducible, (2) the extended
 //! MultiReplicaResult ledger must reconcile exactly with the
-//! per-request ledger — `rejected == retries + retry_gave_up`, summed
-//! `Request::retries` equals the pool counter, shed flags match the
-//! shed counter, and every request is reported exactly once, (3) the
+//! per-request ledger — every `metrics::ledger::LEDGER_SPEC` equation,
+//! evaluated by `reconcile` — and every request is reported exactly
+//! once, (3) the
 //! protected router must strictly beat the unprotected one on
 //! standard-tier goodput, and (4) total refusal — every standard
 //! arrival rejected for the whole run, with and without retries and
@@ -16,6 +16,7 @@ use std::collections::HashSet;
 use slos_serve::config::{FaultConfig, OverloadConfig, RetryConfig,
                          Scenario, ScenarioConfig};
 use slos_serve::coordinator::request::{Request, ServiceTier};
+use slos_serve::metrics::ledger;
 use slos_serve::router::{run_multi_replica, MultiReplicaResult,
                          RoutePolicy, RouterConfig};
 use slos_serve::workload;
@@ -77,35 +78,22 @@ fn assert_identical(a: &MultiReplicaResult, b: &MultiReplicaResult) {
     assert_eq!(a.replica_seconds.to_bits(), b.replica_seconds.to_bits());
 }
 
-/// The extended ledger invariant (documented on `MultiReplicaResult`):
-/// pool-level overload counters must reconcile exactly with the
-/// per-request ledger, and every workload request must be reported
-/// exactly once, whatever mix of finishing, shedding, degradation,
-/// rejection, and retries it went through.
+/// The ledger audit (ISSUE 10): `metrics::ledger::reconcile` evaluates
+/// every `LEDGER_SPEC` conservation equation against the result — the
+/// same spec lint rules l2–l4 cross-check statically, so the retry,
+/// shed, degrade, and crash/drain balances checked here are exactly
+/// the documented ones. One hand-written assertion stays as
+/// belt-and-braces: the spec cannot know this scenario issues N
+/// requests, so exactly-once reporting is asserted by hand.
 fn assert_ledger(res: &MultiReplicaResult) {
+    if let Err(v) = ledger::reconcile(res) {
+        panic!("ledger reconciliation failed:\n{}",
+               ledger::render_violations(&v));
+    }
     assert_eq!(res.requests.len(), N,
                "every request reported exactly once");
     let ids: HashSet<u64> = res.requests.iter().map(|r| r.id).collect();
     assert_eq!(ids.len(), N, "duplicate ids in result");
-    assert_eq!(res.rejected, res.retries + res.retry_gave_up,
-               "every rejection either schedules a retry or gives up");
-    let req_retries: usize =
-        res.requests.iter().map(|r| r.retries as usize).sum();
-    assert_eq!(req_retries, res.retries,
-               "per-request retry counts must sum to the pool counter");
-    let shed_flagged = res.requests.iter().filter(|r| r.shed).count();
-    assert_eq!(shed_flagged, res.shed,
-               "shed flags must match the shed counter");
-    // The PR-6/7 crash/drain ledger still holds with shedding armed.
-    let req_requeues: usize =
-        res.requests.iter().map(|r| r.drain_requeues as usize).sum();
-    let req_handoffs: usize =
-        res.requests.iter().map(|r| r.kv_handoffs as usize).sum();
-    assert_eq!(req_requeues,
-               res.drain_requeued + res.crash_requeued + res.crash_handoffs,
-               "requeue ledger out of balance");
-    assert_eq!(req_handoffs, res.drain_handoffs + res.crash_handoffs,
-               "handoff ledger out of balance");
 }
 
 #[test]

@@ -47,6 +47,17 @@ fn assert_bit_identical(eager: &MultiReplicaResult,
     assert_eq!(eager.peak_inflight, fold.peak_inflight);
 }
 
+/// Both modes must satisfy the `metrics::ledger::LEDGER_SPEC`
+/// conservation equations: retain mode checks the per-request sums
+/// too, fold mode (no retained requests) checks the cross-counter
+/// balances — exercising `reconcile`'s fold-mode skip rule.
+fn assert_reconciles(res: &MultiReplicaResult, mode: &str) {
+    if let Err(v) = slos_serve::metrics::ledger::reconcile(res) {
+        panic!("{mode} ledger reconciliation failed:\n{}",
+               slos_serve::metrics::ledger::render_violations(&v));
+    }
+}
+
 #[test]
 fn stream_fold_run_matches_eager_retain_run() {
     let c = cfg(400, 4.0);
@@ -60,6 +71,8 @@ fn stream_fold_run_matches_eager_retain_run() {
     let fold =
         run_multi_replica_stream(workload::stream(&c), span_hint, &c, &rcfg);
     assert_bit_identical(&eager, &fold);
+    assert_reconciles(&eager, "eager");
+    assert_reconciles(&fold, "fold");
     // Retain mode returns every request; fold mode folded them away.
     assert_eq!(eager.requests.len(), 400);
     assert!(fold.requests.is_empty(),
@@ -86,6 +99,8 @@ fn stream_fold_matches_eager_with_overload_retry_and_compression() {
     let fold = run_multi_replica_stream(
         workload::stream(&c).with_compression(4.0), span_hint, &c, &rcfg);
     assert_bit_identical(&eager, &fold);
+    assert_reconciles(&eager, "eager");
+    assert_reconciles(&fold, "fold");
     assert!(eager.rejected + eager.shed > 0,
             "the overload machinery must actually fire for this test \
              to pin the retry/shed paths");

@@ -1,0 +1,156 @@
+//! slos-audit acceptance tests (ISSUE 10): one spec, two enforcers.
+//!
+//! (1) `metrics::ledger::LEDGER_SPEC` parses and declares the counters
+//! the result structs actually carry; (2) the lint pass extracts the
+//! byte-identical spec text from the lexed source — the static rules
+//! (l2–l4) and the runtime reconciler provably read ONE source of
+//! truth; (3) the tree is l2/l3/l4-clean; (4) `reconcile` passes on a
+//! seeded Mixed run with shedding, the brownout ladder, the retry
+//! client, and Poisson faults all armed at once — in eager retain mode
+//! and in streaming fold mode (which skips the `Request.*` equations).
+//!
+//! Counter catalogue: docs/LEDGER.md. Rule catalogue: docs/LINTS.md.
+
+use std::fs;
+use std::path::Path;
+
+use slos_serve::config::{FaultConfig, OverloadConfig, RetryConfig,
+                         Scenario, ScenarioConfig};
+use slos_serve::lint;
+use slos_serve::metrics::ledger::{self, Category};
+use slos_serve::router::{run_multi_replica, run_multi_replica_stream,
+                         RoutePolicy, RouterConfig};
+use slos_serve::workload;
+
+#[test]
+fn spec_parses_and_declares_the_ledger_counters() {
+    let spec = match ledger::parse(ledger::LEDGER_SPEC) {
+        Ok(s) => s,
+        Err(e) => panic!("LEDGER_SPEC must parse: {e}"),
+    };
+    // The counters every PR so far has added must be declared — a
+    // representative pin per subsystem, not an exhaustive list (l2
+    // enforces exhaustiveness against the real struct fields).
+    for (strukt, name, cat) in [
+        ("MultiReplicaResult", "drain_requeued", Category::Flow),
+        ("MultiReplicaResult", "crash_handoffs", Category::Flow),
+        ("MultiReplicaResult", "shed", Category::Flow),
+        ("MultiReplicaResult", "rejected", Category::Flow),
+        ("MultiReplicaResult", "retry_gave_up", Category::Flow),
+        ("MultiReplicaResult", "peak_inflight", Category::Gauge),
+        ("MultiReplicaResult", "per_replica_finished", Category::Gauge),
+        ("MultiReplicaResult", "sched_wall_seconds", Category::Free),
+        ("SimResult", "sched_wall_seconds", Category::Free),
+    ] {
+        match spec.decl(strukt, name) {
+            Some(d) => assert_eq!(
+                d.category, cat,
+                "`{strukt}.{name}` declared with the wrong category"
+            ),
+            None => panic!("spec does not declare `{strukt}.{name}`"),
+        }
+    }
+    // Every `free` carries its mandatory reason.
+    for d in spec.decls.iter().filter(|d| d.category == Category::Free) {
+        assert!(d.reason.is_some(), "free `{}` lost its reason", d.name);
+    }
+}
+
+#[test]
+fn lint_extracts_the_exact_spec_the_reconciler_evaluates() {
+    // One source of truth: lex the real ledger.rs off disk exactly as
+    // `lint_tree` does, pull the spec string back out with the same
+    // extractor rules l2–l4 use, and require it byte-identical to the
+    // constant `reconcile` parses. If either side drifts — the const
+    // is renamed, moved, split, or the extractor breaks — this fails.
+    let src_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("src/metrics/ledger.rs");
+    let src = match fs::read_to_string(&src_path) {
+        Ok(s) => s,
+        Err(e) => panic!("cannot read {}: {e}", src_path.display()),
+    };
+    let file = lint::lexer::lex("rust/src/metrics/ledger.rs", &src);
+    let (path, _line, body) =
+        match lint::rules::extract_ledger_spec(&[file]) {
+            Some(x) => x,
+            None => panic!(
+                "lint extractor found no LEDGER_SPEC in ledger.rs"
+            ),
+        };
+    assert_eq!(path, "rust/src/metrics/ledger.rs");
+    assert_eq!(
+        body,
+        ledger::LEDGER_SPEC,
+        "lint-extracted spec text must be byte-identical to the \
+         constant the runtime reconciler evaluates"
+    );
+}
+
+#[test]
+fn tree_is_ledger_clean() {
+    // Subsumed by tests/lint_clean.rs's zero-deny gate, but pinned here
+    // by rule id so a global allow() sweep can't mask a ledger hole.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => panic!("slos-lint failed to run: {e}"),
+    };
+    let ledger_denies: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| {
+            v.severity == lint::Severity::Deny
+                && matches!(v.rule, "l2" | "l3" | "l4")
+        })
+        .map(|v| format!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg))
+        .collect();
+    assert!(
+        ledger_denies.is_empty(),
+        "ledger rules must pass on the tree:\n{}",
+        ledger_denies.join("\n")
+    );
+}
+
+#[test]
+fn reconcile_passes_with_every_subsystem_armed() {
+    // ISSUE 10 acceptance: shedding + brownout ladder + hinted retry
+    // client + seeded Poisson crashes/slowdowns, simultaneously, on
+    // the 2x-overloaded bursty Mixed trace — and the ledger balances
+    // in both execution modes.
+    let n = 200;
+    let cfg = ScenarioConfig::new(Scenario::Mixed)
+        .with_rate(3.0)
+        .with_requests(n)
+        .with_seed(42);
+    let rcfg = RouterConfig::new(2)
+        .with_policy(RoutePolicy::BurstAware)
+        .with_overload(OverloadConfig::default())
+        .with_retry(RetryConfig::default())
+        .with_faults(FaultConfig::default()
+                     .with_seed(11)
+                     .with_crash_rate(0.01)
+                     .with_slowdown_rate(0.05));
+
+    // Eager retain mode: Request.* equations evaluated too.
+    let mut wl = workload::generate(&cfg);
+    workload::compress_middle_third(&mut wl, 4.0);
+    let span_hint = wl.last().map(|r| r.arrival).unwrap_or(0.0);
+    let eager = run_multi_replica(wl, &cfg, &rcfg);
+    assert!(eager.shed + eager.degraded + eager.rejected > 0,
+            "overload protection must engage for this run to count");
+    if let Err(v) = ledger::reconcile(&eager) {
+        panic!("eager reconciliation failed:\n{}",
+               ledger::render_violations(&v));
+    }
+
+    // Streaming fold mode: requests folded away, so the per-request
+    // equations are skipped and the cross-counter balances still hold.
+    let fold = run_multi_replica_stream(
+        workload::stream(&cfg).with_compression(4.0), span_hint,
+        &cfg, &rcfg);
+    assert!(fold.requests.is_empty(), "fold mode must not retain");
+    if let Err(v) = ledger::reconcile(&fold) {
+        panic!("fold reconciliation failed:\n{}",
+               ledger::render_violations(&v));
+    }
+}

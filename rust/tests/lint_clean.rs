@@ -1,8 +1,9 @@
 //! Tier-1 gate: the tree is `slos-lint`-clean. Same pass as
 //! `cargo run --bin slos_lint`, run as a test so a stray HashMap
 //! iteration, wall-clock read, OS-randomness call, library panic, or
-//! untested ledger counter fails `cargo test` — not just CI's lint job.
-//! Rules and the allow syntax: docs/LINTS.md.
+//! ledger-spec drift (an uncovered, unresolvable, or dead counter —
+//! rules l2–l4) fails `cargo test` — not just CI's lint job. Rules and
+//! the allow syntax: docs/LINTS.md; counter catalogue: docs/LEDGER.md.
 
 use std::path::Path;
 
@@ -46,4 +47,15 @@ fn report_counts_are_consistent() {
         report.warn_count()
     );
     assert!(report.render().contains(&footer));
+}
+
+#[test]
+fn ledger_rules_are_active_and_l1_is_gone() {
+    // The l2–l4 zero-deny gate above only bites if the rules exist; pin
+    // the rule set so a refactor can't silently drop the ledger pass.
+    for r in ["l2", "l3", "l4"] {
+        assert!(lint::rules::is_known_rule(r), "rule {r} missing");
+    }
+    // l1 (ident-grep coverage) was replaced by the spec cross-checks.
+    assert!(!lint::rules::is_known_rule("l1"));
 }
